@@ -1,0 +1,101 @@
+"""Shared benchmark infrastructure.
+
+One small Mamba LM is trained once per invocation (checkpoint-cached under
+results/bench_model) and reused by every accuracy table, so ``python -m
+benchmarks.run`` stays fast and the numbers across tables are comparable.
+"""
+from __future__ import annotations
+
+import math
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+
+from repro.configs import ModelConfig, get_config, scale_down
+from repro.data import batches, eval_batches
+from repro.models import forward, loss_fn
+from repro.models.quantize import make_qctx, quantize_model
+from repro.optim import OptimConfig
+from repro.quant.calibrate import run_calibration
+from repro.quant.recipe import QuantSpec, get_spec
+from repro.train import checkpoint as ckpt
+from repro.train import init_train_state, make_train_step
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "250"))
+SEQ = 128
+VOCAB = 1024
+
+
+def bench_config(arch: str = "mamba-130m", **kw) -> ModelConfig:
+    return scale_down(get_config(arch), layers=3, width=192, vocab=VOCAB,
+                      **kw)
+
+
+def trained_model(arch: str = "mamba-130m") -> Tuple[ModelConfig, Dict]:
+    """Train (or restore) the shared benchmark model."""
+    cfg = bench_config(arch)
+    ckpt_dir = os.path.join(BENCH_DIR, f"bench_model_{arch}")
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    if ckpt.latest_step(ckpt_dir) == TRAIN_STEPS:
+        state, _ = ckpt.restore(ckpt_dir, state)
+        return cfg, state["params"]
+    step = jax.jit(make_train_step(cfg, OptimConfig(
+        lr=2e-3, warmup_steps=20, total_steps=TRAIN_STEPS)))
+    for b in batches(cfg.vocab_size, 16, SEQ, seed=11,
+                     num_steps=TRAIN_STEPS):
+        state, _ = step(state, b)
+    ckpt.save(ckpt_dir, TRAIN_STEPS, state, keep=1)
+    return cfg, state["params"]
+
+
+def calibration_stats(cfg: ModelConfig, params, n: int = 6):
+    calib = eval_batches(cfg.vocab_size, 8, SEQ, n, seed=777)
+    return run_calibration(
+        lambda p, b: forward(p, cfg, b, qctx={"mode": "calib"}),
+        params, calib)
+
+
+def perplexity_of(cfg: ModelConfig, params, qctx=None, n: int = 4
+                  ) -> float:
+    evalb = eval_batches(cfg.vocab_size, 16, SEQ, n, seed=999)
+    f = jax.jit(lambda p, b: loss_fn(p, cfg, b, qctx=qctx)[0])
+    return math.exp(float(np.mean([float(f(params, b)) for b in evalb])))
+
+
+def quantized(cfg, params, stats, method_or_spec):
+    spec = (method_or_spec if isinstance(method_or_spec, QuantSpec)
+            else get_spec(method_or_spec))
+    qparams, qdata = quantize_model(params, stats, cfg, spec)
+    return qparams, make_qctx(spec, qdata)
+
+
+def cloze_accuracy(cfg: ModelConfig, params, qctx=None, n: int = 4
+                   ) -> float:
+    """Proxy zero-shot task: next-token top-1 accuracy on the held-out
+    split (the Markov corpus has a well-defined most-likely successor)."""
+    import jax.numpy as jnp
+    evalb = eval_batches(cfg.vocab_size, 16, SEQ, n, seed=31337)
+    f = jax.jit(lambda p, b: jnp.mean(
+        (jnp.argmax(forward(p, cfg, b, qctx=qctx)[0], -1)
+         == b["targets"]).astype(jnp.float32)))
+    return float(np.mean([float(f(params, b)) for b in evalb]))
+
+
+def timer(fn, *args, warmup: int = 3, iters: int = 20) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

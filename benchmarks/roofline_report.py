@@ -1,0 +1,41 @@
+"""§Roofline: render the dry-run roofline table from results/*.jsonl.
+
+Reads the artifacts produced by ``python -m repro.launch.dryrun --all``
+(single-pod; the multi-pod file proves the 'pod' axis shards).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run() -> list:
+    path = os.path.join(RESULTS, "dryrun_single.jsonl")
+    if not os.path.exists(path):
+        common.emit("roofline/missing", 0.0,
+                    "run: python -m repro.launch.dryrun --all "
+                    "--out results/dryrun_single.jsonl")
+        return []
+    rows = [json.loads(l) for l in open(path)]
+    ok = [r for r in rows if r["status"] == "ok"]
+    for r in ok:
+        common.emit(
+            f"roofline/{r['arch']}/{r['shape']}",
+            r["step_lower_bound_s"] * 1e6,
+            f"bottleneck={r['bottleneck']};compute_s={r['compute_s']:.3g};"
+            f"memory_s={r['memory_s']:.3g};"
+            f"collective_s={r['collective_s']:.3g};"
+            f"mfu_bound={r.get('mfu_bound', 0):.4f};"
+            f"useful={r.get('useful_flops_ratio', 0):.3f}")
+    common.emit("roofline/cells_ok", 0.0,
+                f"{len(ok)}/{len(rows)} (skips are long_500k on pure "
+                "full-attention archs, per DESIGN.md)")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

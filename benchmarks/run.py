@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [table ...]``
+prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+TABLES = (
+    "table1_latency",
+    "table2_perplexity",
+    "table3_zeroshot",
+    "table4_hybrid",
+    "table5_ablation",
+    "table6_percentile",
+    "table8_lowbit",
+    "table9_input_quant",
+    "fig5_error_bound",
+    "roofline_report",
+)
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    for name in want:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        mod.run()
+        print(f"# {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Table 1: latency profiling (CPU proxy).
+
+The paper measures wall-clock W8A8 vs FP16 on A5000/Orin.  Without a GPU
+we report the measurable CPU-side proxies plus the structural byte ratio
+that drives the TPU speedup:
+
+  * decode-step (TPOT) latency, fp vs quamba-quantized, via the engine
+  * int8 vs fp32 matmul microbenchmark (XLA integer path)
+  * weight + state bytes fp16 vs int8 (the model-size column of Table 1)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.models import decode_step, init_decode_state
+
+
+def run() -> dict:
+    cfg, params = common.trained_model()
+    stats = common.calibration_stats(cfg, params)
+    qparams, qctx = common.quantized(cfg, params, stats, "quamba")
+    out = {}
+
+    b = 8
+    state = init_decode_state(cfg, b, 256, cache_dtype=jnp.float32)
+    tok = jnp.zeros((b,), jnp.int32)
+    fp_step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t)[0])
+    q_step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t,
+                                                 qctx=qctx)[0])
+    out["tpot_fp_us"] = common.timer(fp_step, params, state, tok)
+    out["tpot_quamba_us"] = common.timer(q_step, qparams, state, tok)
+    common.emit("table1/tpot_fp16", out["tpot_fp_us"], "decode_step")
+    common.emit("table1/tpot_quamba", out["tpot_quamba_us"],
+                "decode_step(simulated int8; real speedup needs TPU)")
+
+    # int8 vs fp32 GEMM (the acceleration Table 1 banks on)
+    m = k = n = 1024
+    rng = np.random.default_rng(0)
+    qx = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+    qw = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+    fx = qx.astype(jnp.float32)
+    fw = qw.astype(jnp.float32)
+    int8_mm = jax.jit(lambda a, bb: jax.lax.dot_general(
+        a, bb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32))
+    f32_mm = jax.jit(lambda a, bb: a @ bb)
+    out["gemm_int8_us"] = common.timer(int8_mm, qx, qw)
+    out["gemm_f32_us"] = common.timer(f32_mm, fx, fw)
+    common.emit("table1/gemm_int8", out["gemm_int8_us"], f"{m}x{k}x{n}")
+    common.emit("table1/gemm_f32", out["gemm_f32_us"], f"{m}x{k}x{n}")
+
+    # model-size column: fp16 vs W8A8 weight bytes
+    n_params = sum(int(np.prod(l.shape)) for l in
+                   jax.tree.leaves(params))
+    fp16_gb = n_params * 2 / 1e9
+    int8_gb = n_params * 1 / 1e9
+    out["size_ratio"] = fp16_gb / int8_gb
+    common.emit("table1/model_size", 0.0,
+                f"fp16={fp16_gb:.4f}GB;int8={int8_gb:.4f}GB;"
+                f"ratio={out['size_ratio']:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

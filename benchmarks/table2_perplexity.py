@@ -1,0 +1,34 @@
+"""Paper Table 2: perplexity of quantization methods on the Mamba family.
+
+CPU-scale reproduction: the shared trained Mamba LM evaluated under every
+method.  The paper's qualitative ordering to reproduce:
+  static << dynamic < SmQ-SSM < Quamba ~ QuaRot-SSM ~ FP16
+(static collapses; Quamba closes the gap to FP16.)
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+METHODS = ("static", "dynamic", "smoothquant", "quarot", "quamba")
+
+
+def run() -> dict:
+    cfg, params = common.trained_model()
+    stats = common.calibration_stats(cfg, params)
+    out = {"fp16": common.perplexity_of(cfg, params)}
+    for m in METHODS:
+        qparams, qctx = common.quantized(cfg, params, stats, m)
+        out[m] = common.perplexity_of(cfg, qparams, qctx)
+    for k, v in out.items():
+        common.emit(f"table2/ppl_{k}", 0.0, f"ppl={v:.4f}")
+    # the paper's headline orderings
+    ok1 = out["quamba"] < out["static"]
+    ok2 = out["quamba"] <= out["smoothquant"] * 1.05
+    common.emit("table2/ordering", 0.0,
+                f"quamba<static={ok1};quamba<=smq={ok2}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Table 5: component ablation -- naive W8A8, +input percentile,
++output Hadamard, full Quamba."""
+from __future__ import annotations
+
+from benchmarks import common
+
+METHODS = ("static", "in_per", "out_had", "quamba")
+LABELS = {"static": "W8A8", "in_per": "+InPer", "out_had": "+OutHad",
+          "quamba": "Quamba"}
+
+
+def run() -> dict:
+    cfg, params = common.trained_model()
+    stats = common.calibration_stats(cfg, params)
+    out = {"fp16": common.perplexity_of(cfg, params)}
+    for m in METHODS:
+        qparams, qctx = common.quantized(cfg, params, stats, m)
+        out[LABELS[m]] = common.perplexity_of(cfg, qparams, qctx)
+    for k, v in out.items():
+        common.emit(f"table5/ppl_{k}", 0.0, f"ppl={v:.4f}")
+    common.emit("table5/quamba_best", 0.0, str(
+        out["Quamba"] <= min(out["W8A8"], out["+InPer"], out["+OutHad"])
+        + 1e-6))
+    return out
+
+
+if __name__ == "__main__":
+    run()

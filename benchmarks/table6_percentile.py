@@ -1,0 +1,23 @@
+"""Paper Table 6: sensitivity to the percentile p for the SSM input."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common
+from repro.quant.recipe import QuantSpec
+
+
+def run() -> dict:
+    cfg, params = common.trained_model()
+    stats = common.calibration_stats(cfg, params)
+    out = {}
+    for p in (99.0, 99.9, 99.99, 99.999):
+        spec = QuantSpec(method="quamba", percentile=p)
+        qparams, qctx = common.quantized(cfg, params, stats, spec)
+        out[p] = common.perplexity_of(cfg, qparams, qctx)
+        common.emit(f"table6/ppl_p{p}", 0.0, f"ppl={out[p]:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

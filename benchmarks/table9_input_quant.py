@@ -1,0 +1,34 @@
+"""Paper Table 9 (§F): alternative 8-bit schemes for the SSM input x."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common
+from repro.quant.recipe import QuantSpec
+
+VARIANTS = {
+    "sym_minmax_static": QuantSpec(method="quamba",
+                                   input_quant="sym_minmax",
+                                   percentile=100.0),
+    "sym_percentile": QuantSpec(method="quamba",
+                                input_quant="sym_percentile"),
+    "asym_percentile": QuantSpec(method="quamba",
+                                 input_quant="asym_percentile"),
+    "log2": QuantSpec(method="quamba", input_quant="log2"),
+    "dynamic": QuantSpec(method="quamba", input_quant="dynamic"),
+}
+
+
+def run() -> dict:
+    cfg, params = common.trained_model()
+    stats = common.calibration_stats(cfg, params)
+    out = {}
+    for name, spec in VARIANTS.items():
+        qparams, qctx = common.quantized(cfg, params, stats, spec)
+        out[name] = common.cloze_accuracy(cfg, qparams, qctx)
+        common.emit(f"table9/acc_{name}", 0.0, f"acc={out[name]:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Theorem 4.1 / Figure 5 demo: quantization error of LTI SSMs is bounded.
+
+Prints an ASCII plot of measured error vs the (corrected) analytic bound.
+Run:  PYTHONPATH=src python examples/error_bound_demo.py
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.quant.errors import (simulate_quantized_lti,
+                                simulate_theorem_system)
+
+
+def ascii_plot(ys, width=60, label=""):
+    m = max(float(max(ys)), 1e-12)
+    for i in range(0, len(ys), max(1, len(ys) // 12)):
+        bar = "#" * int(width * ys[i] / m)
+        print(f"  t={i:4d} |{bar}")
+    print(f"  (max={m:.3e}) {label}")
+
+
+def main() -> None:
+    print("== Theorem A.1 system: h[t] = e^(t-T) h[t-1] + b x[t] ==")
+    r = simulate_theorem_system(steps=120)
+    ascii_plot(r["err"], label="|h - h_quant|")
+    from repro.quant.errors import CORRECTED_CONSTANT
+    beps = 0.7 * 0.01
+    print(f"corrected uniform bound b*eps*sum_k e^(-k(k-1)/2) = "
+          f"{beps * CORRECTED_CONSTANT:.4e}; "
+          f"measured max = {r['err'].max():.4e}")
+
+    for measure in ("legt", "legs"):
+        print(f"\n== HiPPO-{measure.upper()} materialized SSM (Fig. 5) ==")
+        rr = simulate_quantized_lti(measure, steps=200)
+        ascii_plot(rr["output_err"], label=f"Mean|y - y_quant| ({measure})")
+        print("errors remain bounded as t grows: "
+              f"{bool(rr['output_err'][100:].max() <= 2 * rr['output_err'][:100].max())}")
+
+
+if __name__ == "__main__":
+    main()

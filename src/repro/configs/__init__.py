@@ -1,0 +1,8 @@
+from repro.configs.base import (
+    ModelConfig, ShapeSpec, SHAPES, SHAPE_BY_NAME,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    cell_supported, scale_down,
+)
+from repro.configs.registry import (
+    get_config, list_archs, ASSIGNED_ARCHS, MAMBA_ARCHS, dryrun_cells,
+)

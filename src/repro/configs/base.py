@@ -1,0 +1,194 @@
+"""Configuration dataclasses for architectures and workload shapes.
+
+Every assigned architecture (plus the paper's own Mamba family) is described
+by a single ``ModelConfig``.  Workload shapes (train / prefill / decode /
+long-context decode) are ``ShapeSpec`` instances.  A (ModelConfig, ShapeSpec)
+pair is one *cell* of the dry-run / roofline matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Unified architecture description.
+
+    The model zoo (``repro.models``) interprets this config; families:
+      dense   -- decoder-only transformer (GQA + SwiGLU)
+      moe     -- decoder-only transformer with MoE FFN
+      hybrid  -- Mamba2 backbone with periodic shared attention (Zamba2)
+      ssm     -- xLSTM (mLSTM backbone + periodic sLSTM)
+      mamba   -- Mamba-1 (the paper's own architecture family)
+      audio   -- encoder-decoder transformer, conv frontend stubbed (Whisper)
+      vlm     -- prefix-LM transformer, patch frontend stubbed (PaliGemma)
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention ---
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 500_000.0
+    attn_logit_softcap: float = 0.0
+
+    # --- mixture of experts ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden size
+    capacity_factor: float = 1.25
+
+    # --- SSM / recurrent ---
+    d_state: int = 16                # mamba: N; zamba2: mamba2 state
+    conv_width: int = 4
+    expand: int = 2                  # d_inner = expand * d_model
+    ssm_heads: int = 0               # mamba2 / xlstm heads
+    dt_rank: int = 0                 # mamba1 dt_rank; 0 -> ceil(d_model/16)
+    attn_period: int = 0             # zamba2: shared attn every k mamba layers
+    slstm_every: int = 0             # xlstm: sLSTM at layer i when i%k==k-1
+
+    # --- encoder-decoder / prefix ---
+    n_enc_layers: int = 0
+    prefix_len: int = 0              # vlm: number of patch-embedding tokens
+
+    # --- misc ---
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    max_seq_len: int = 1 << 19
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank or max(1, -(-self.d_model // 16))
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family in ("dense", "moe", "audio", "vlm") or (
+            self.family == "hybrid" and self.attn_period > 0
+        )
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.family in ("hybrid", "ssm", "mamba")
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if generation-time state is O(1) in context length.
+
+        Pure full-attention models keep a KV cache that grows with the
+        context, so ``long_500k`` is skipped for them (see DESIGN.md
+        §Arch-applicability).  Hybrid models carry a KV cache for the
+        shared-attention layers only; the backbone is constant-state, so we
+        run them on long_500k (the cache is small: few layers).
+        """
+        return self.family in ("hybrid", "ssm", "mamba")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches models.init within ~0.1%)."""
+        from repro.models import param_count  # local import to avoid cycle
+
+        return param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models import param_count
+
+        return param_count(self, active_only=True)
+
+    def validate(self) -> None:
+        assert self.family in (
+            "dense", "moe", "hybrid", "ssm", "mamba", "audio", "vlm",
+        ), self.family
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.top_k > 0 and self.moe_d_ff > 0
+        if self.has_attention:
+            assert self.n_heads % max(1, self.n_kv_heads) == 0
+        if self.family == "audio":
+            assert self.n_enc_layers > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One workload shape (one column of the dry-run matrix)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Is (arch, shape) a valid dry-run cell?  Returns (ok, reason)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "long_500k requires sub-quadratic generation state; "
+            f"{cfg.name} is a pure full-attention model (KV cache at 512k "
+            "context exceeds any per-device budget). Skipped per DESIGN.md."
+        )
+    return True, ""
+
+
+def scale_down(cfg: ModelConfig, *, layers: int = 2, width: int = 128,
+               vocab: int = 512, experts: int = 4) -> ModelConfig:
+    """Reduced config of the same family for CPU smoke tests."""
+    n_heads = min(cfg.n_heads, 4)
+    ratio = max(1, cfg.n_heads // max(1, cfg.n_kv_heads))
+    n_kv = max(1, n_heads // min(ratio, n_heads))
+    updates = dict(
+        n_layers=layers,
+        d_model=width,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        d_ff=0 if cfg.d_ff == 0 else max(4 * width // 2, 64),
+        vocab_size=vocab,
+        head_dim=width // n_heads,
+        d_state=min(cfg.d_state, 16),
+        max_seq_len=4096,
+        dtype="float32",
+    )
+    if cfg.family == "moe":
+        updates.update(
+            n_experts=experts,
+            top_k=min(cfg.top_k, 2),
+            moe_d_ff=max(64, width // 2),
+        )
+    if cfg.family == "hybrid":
+        updates.update(attn_period=2, ssm_heads=max(2, width // 64))
+    if cfg.family == "ssm":
+        updates.update(slstm_every=2, ssm_heads=2)
+    if cfg.family == "mamba":
+        updates.update(dt_rank=8)
+    if cfg.family == "audio":
+        updates.update(n_enc_layers=layers)
+    if cfg.family == "vlm":
+        updates.update(prefix_len=16)
+    return dataclasses.replace(cfg, **updates)

@@ -1,0 +1,22 @@
+"""mamba-1.4b: the paper's own architecture (Mamba-1, Gu & Dao 2023).
+
+48L d_model=2048, d_state=16, expand=2, conv_width=4, vocab=50280.
+Quamba's quantization recipe (percentile-clipped SSM input, Hadamard-
+transformed SSM output) applies to every block of this family.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba-1.4b",
+    family="mamba",
+    n_layers=48,
+    d_model=2048,
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=50_280,
+    d_state=16,
+    expand=2,
+    conv_width=4,
+    tie_embeddings=True,
+)

@@ -1,0 +1,22 @@
+"""mamba-2.8b: the paper's own architecture (Mamba-1, Gu & Dao 2023).
+
+64L d_model=2560, d_state=16, expand=2, conv_width=4, vocab=50280.
+Quamba's quantization recipe (percentile-clipped SSM input, Hadamard-
+transformed SSM output) applies to every block of this family.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba-2.8b",
+    family="mamba",
+    n_layers=64,
+    d_model=2560,
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=50_280,
+    d_state=16,
+    expand=2,
+    conv_width=4,
+    tie_embeddings=True,
+)

@@ -1,0 +1,24 @@
+"""paligemma-3b [vlm]: SigLIP + gemma; backbone only, patch frontend stubbed.
+
+18L d_model=2048 8H (GQA kv=1, MQA) d_ff=16384 vocab=257216.
+[arXiv:2407.07726; hf]  ``input_specs`` supplies precomputed patch
+embeddings (batch, prefix_len=256, d_model) plus text tokens; the model is a
+prefix-LM over the concatenation (full attention within the prefix,
+causal over text).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=16_384,
+    vocab_size=257_216,
+    head_dim=256,
+    rope_theta=10_000.0,
+    prefix_len=256,
+    tie_embeddings=True,
+)

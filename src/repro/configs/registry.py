@@ -1,0 +1,66 @@
+"""Architecture registry: ``get_config(arch_id)`` and enumeration helpers."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeSpec, cell_supported
+
+# arch-id -> module under repro.configs (module defines CONFIG)
+_ARCH_MODULES = {
+    "whisper-medium": "whisper_medium",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "paligemma-3b": "paligemma_3b",
+    "llama3-8b": "llama3_8b",
+    "qwen3-32b": "qwen3_32b",
+    "granite-3-8b": "granite_3_8b",
+    "granite-3-2b": "granite_3_2b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    # the paper's own architecture family (Mamba-1)
+    "mamba-130m": "mamba_130m",
+    "mamba-370m": "mamba_370m",
+    "mamba-1.4b": "mamba_1_4b",
+    "mamba-2.8b": "mamba_2_8b",
+}
+
+ASSIGNED_ARCHS: List[str] = [
+    "whisper-medium",
+    "qwen3-moe-30b-a3b",
+    "granite-moe-1b-a400m",
+    "paligemma-3b",
+    "llama3-8b",
+    "qwen3-32b",
+    "granite-3-8b",
+    "granite-3-2b",
+    "zamba2-1.2b",
+    "xlstm-1.3b",
+]
+
+MAMBA_ARCHS: List[str] = ["mamba-130m", "mamba-370m", "mamba-1.4b", "mamba-2.8b"]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    cfg: ModelConfig = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def dryrun_cells() -> List[tuple]:
+    """All (arch_id, shape) cells for the assigned architectures."""
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = cell_supported(cfg, shape)
+            cells.append((arch, shape.name, ok))
+    return cells

@@ -1,0 +1,25 @@
+"""whisper-medium [audio]: enc-dec transformer backbone, conv frontend stubbed.
+
+24L d_model=1024 16H (kv=16, i.e. MHA) d_ff=4096 vocab=51865.
+[arXiv:2212.04356; unverified]  The mel/conv frontend is a STUB:
+``input_specs`` supplies precomputed frame embeddings of shape
+(batch, enc_len, d_model).  Whisper-medium has 24 encoder + 24 decoder
+layers; ``n_layers`` counts decoder layers, ``n_enc_layers`` encoder layers.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    head_dim=64,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    max_seq_len=65_536,
+)

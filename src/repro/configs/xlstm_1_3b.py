@@ -1,0 +1,24 @@
+"""xlstm-1.3b [ssm]: mLSTM backbone with periodic sLSTM blocks.
+
+48L d_model=2048 4H (kv=4) d_ff=0 (the mLSTM block carries its own
+up/down projection, expand=2) vocab=50304.  [arXiv:2405.04517; unverified]
+sLSTM at every 8th layer (xLSTM[7:1]).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    head_dim=512,
+    expand=2,
+    conv_width=4,
+    ssm_heads=4,
+    slstm_every=8,
+    tie_embeddings=True,
+)

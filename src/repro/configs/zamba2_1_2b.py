@@ -1,0 +1,27 @@
+"""zamba2-1.2b [hybrid]: Mamba2 backbone + periodic shared attention block.
+
+38L d_model=2048, ssm_state=64; shared attn 32H (kv=32, MHA) d_ff=8192,
+vocab=32000.  [arXiv:2411.15242; hf]  The shared transformer block (one set
+of weights, applied every ``attn_period`` mamba layers) follows the Zamba2
+design; per-invocation LoRA deltas are omitted (noted in DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32_000,
+    head_dim=64,
+    rope_theta=10_000.0,
+    d_state=64,
+    expand=2,
+    conv_width=4,
+    ssm_heads=64,            # mamba2: d_inner / head_dim(64)
+    attn_period=6,           # shared attn after every 6 mamba layers
+    tie_embeddings=True,
+)

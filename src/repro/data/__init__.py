@@ -1,0 +1,1 @@
+from repro.data.synthetic import batches, eval_batches, perplexity, MarkovCorpus, CorpusSpec

@@ -1,0 +1,84 @@
+"""Fused Walsh–Hadamard transform + static int8 quantization kernel
+(paper §4.2 "SSM outputs", §3.3).
+
+Hardware adaptation (DESIGN.md §Hardware-adaptation): the reference CUDA
+implementation (Dao's fast-hadamard-transform) runs the log n butterfly in
+registers with warp shuffles -- there is no TPU analogue of a warp shuffle.
+Instead we exploit H_n = H_a (x) H_b (Kronecker): reshape the row to
+(a, b), multiply by H_b on the right and H_a on the left -- two small dense
+matmuls that map straight onto the MXU.  Cost is O(n(a+b)) = O(n*sqrt(n))
+multiplies instead of O(n log n) add/subs, but on the MXU the matmuls are
+effectively free at these sizes (a, b <= 128 => a single MXU tile), and no
+transpose/shuffle network is needed.
+
+The 1/(sqrt(n) * s_y) output scaling is folded into the second matmul's
+epilogue, so quantization adds zero extra passes (paper: "we fuse the
+scaling factor s_y in the forward Hadamard transform").
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant.hadamard import decompose, hadamard_matrix_np
+
+
+def _split(n: int):
+    """n = a * b with a = 2^ceil(p/2), b = 2^floor(p/2) * m (both Hadamard)."""
+    p, m = decompose(n)
+    pa = (p + 1) // 2
+    a = 2 ** pa
+    b = (2 ** (p - pa)) * m
+    return a, b
+
+
+def _kernel(y_ref, ha_ref, hb_ref, s_ref, q_ref, *, a: int, b: int):
+    rows = y_ref.shape[0]
+    y = y_ref[...].astype(jnp.float32).reshape(rows * a, b)
+    # right-multiply by H_b^T == H_b (symmetric base matrices are not
+    # guaranteed symmetric, so use explicit transpose via dot dims)
+    y = jax.lax.dot_general(y, hb_ref[...], (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y.reshape(rows, a, b)
+    # left-multiply by H_a: contract the 'a' axis
+    y = jax.lax.dot_general(ha_ref[...], y, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # y now (a, rows, b) -> transpose back
+    y = jnp.transpose(y, (1, 0, 2)).reshape(rows, a * b)
+    q_ref[...] = jnp.clip(jnp.round(y * s_ref[0, 0]), -128, 127
+                          ).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def hadamard_quant(y: jax.Array, s_y: jax.Array, *, block_rows: int = 256,
+                   interpret: bool = True) -> jax.Array:
+    """(tokens, n) fp -> (tokens, n) int8 = quant(H_n y / sqrt(n), s_y)."""
+    t, n = y.shape
+    a, b = _split(n)
+    ha = jnp.asarray(hadamard_matrix_np(a, normalized=False))
+    hb = jnp.asarray(hadamard_matrix_np(b, normalized=False))
+    rows = min(block_rows, t)
+    tp = -(-t // rows) * rows
+    yp = jnp.pad(y, ((0, tp - t), (0, 0)))
+    # fused epilogue scale: 1 / (sqrt(n) * s_y)
+    s = (1.0 / (math.sqrt(n) * jnp.asarray(s_y, jnp.float32))).reshape(1, 1)
+
+    q = pl.pallas_call(
+        functools.partial(_kernel, a=a, b=b),
+        grid=(tp // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, n), jnp.int8),
+        interpret=interpret,
+    )(yp, ha, hb, s)
+    return q[:t]

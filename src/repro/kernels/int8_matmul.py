@@ -1,0 +1,97 @@
+"""W8A8 tiled matmul Pallas kernel (paper §4.3 "Projection layers").
+
+TPU adaptation of the CUTLASS INT8 GEMM the paper uses: int8 x int8 tiles
+feed the MXU with int32 accumulation in VMEM scratch; the dequant epilogue
+(s_x * s_w rescale, optional bias, optional SiLU, optional re-quantization
+to int8 for the next fused op) runs once on the final K step, so scaling
+factors are fused exactly as in paper Fig. 4.
+
+Block shapes default to (128, 128, 128): MXU-aligned for int8 (min tile
+(32, 128)), and 3 live tiles * 128KB << 16MB VMEM, leaving room for
+double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(qx_ref, qw_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+               apply_silu: bool, out_is_int8: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        qx_ref[...], qw_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _epilogue():
+        s_in = scale_ref[0, 0]       # s_x * s_w
+        s_out = scale_ref[0, 1]      # output quant scale (if int8 out)
+        y = acc_ref[...].astype(jnp.float32) * s_in
+        y = y + bias_ref[...].astype(jnp.float32)
+        if apply_silu:
+            y = y * jax.nn.sigmoid(y)
+        if out_is_int8:
+            o_ref[...] = jnp.clip(jnp.round(y / s_out), -128, 127
+                                  ).astype(jnp.int8)
+        else:
+            o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("apply_silu", "out_dtype", "bm", "bn", "bk",
+                     "interpret"))
+def int8_matmul(qx: jax.Array, qw: jax.Array, s_x: jax.Array,
+                s_w: jax.Array, bias: Optional[jax.Array] = None,
+                s_out: Optional[jax.Array] = None, *,
+                apply_silu: bool = False, out_dtype=jnp.float32,
+                bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """qx (M,K) int8 @ qw (K,N) int8 -> (M,N) out_dtype (or int8 if s_out).
+
+    Pads M/N/K up to block multiples (zero padding is exact for matmul).
+    """
+    m, k = qx.shape
+    k2, n = qw.shape
+    assert k == k2, (qx.shape, qw.shape)
+    out_is_int8 = s_out is not None
+
+    mp, np_, kp = (-(-m // bm) * bm), (-(-n // bn) * bn), (-(-k // bk) * bk)
+    qx = jnp.pad(qx, ((0, mp - m), (0, kp - k)))
+    qw = jnp.pad(qw, ((0, kp - k), (0, np_ - n)))
+    bias_f = jnp.zeros((np_,), jnp.float32) if bias is None else jnp.pad(
+        bias.astype(jnp.float32), (0, np_ - n))
+    scale = jnp.stack([
+        jnp.asarray(s_x, jnp.float32) * jnp.asarray(s_w, jnp.float32),
+        jnp.asarray(s_out if out_is_int8 else 1.0, jnp.float32),
+    ]).reshape(1, 2)
+
+    kern = functools.partial(_mm_kernel, apply_silu=apply_silu,
+                             out_is_int8=out_is_int8)
+    out = pl.pallas_call(
+        kern,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (mp, np_), jnp.int8 if out_is_int8 else out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(qx, qw, scale, bias_f)
+    return out[:m, :n]

@@ -1,0 +1,180 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+Each function is the ground truth the kernels are tested against
+(``tests/test_kernels_*.py`` sweeps shapes/dtypes and asserts allclose).
+Everything here is also used directly by the model zoo on CPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import quantizers as Q
+from repro.quant.hadamard import had_transform
+
+
+# ---------------------------------------------------------------------------
+# selective scan (Mamba-1, paper Eq. 1)
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(u: jax.Array, dt: jax.Array, A: jax.Array,
+                       B: jax.Array, C: jax.Array, D: jax.Array,
+                       z: Optional[jax.Array] = None,
+                       h0: Optional[jax.Array] = None,
+                       return_state: bool = False):
+    """Selective SSM scan.
+
+    u:  (batch, L, D)   SSM input x   (paper's sensitive tensor)
+    dt: (batch, L, D)   discretization step (post softplus)
+    A:  (D, N)          state transition (negative reals)
+    B:  (batch, L, N)   input projection  (input-dependent)
+    C:  (batch, L, N)   output projection (input-dependent)
+    D:  (D,)            residual
+    z:  (batch, L, D)   optional gate; output *= silu(z)
+    h0: (batch, D, N)   initial state
+
+    Discretization (ZOH on A, Euler on B, as in Mamba):
+      h_t = exp(dt_t * A) * h_{t-1} + dt_t * u_t * B_t
+      y_t = (h_t . C_t) + D * u_t
+    Runs an associative scan over L in fp32.
+    """
+    b, L, d = u.shape
+    n = A.shape[-1]
+    dtype = jnp.float32
+    u32, dt32 = u.astype(dtype), dt.astype(dtype)
+    dA = jnp.exp(dt32[..., None] * A.astype(dtype))              # (b,L,D,N)
+    dBu = (dt32 * u32)[..., None] * B.astype(dtype)[:, :, None]  # (b,L,D,N)
+
+    if h0 is not None:
+        # absorb the initial state as a virtual step contribution
+        dBu = dBu.at[:, 0].add(dA[:, 0] * h0.astype(dtype))
+
+    def combine(a, b):
+        # composition of affine maps h -> g*h + v
+        ga, va = a
+        gb, vb = b
+        return ga * gb, gb * va + vb
+
+    gs, hs = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    y = jnp.einsum("bldn,bln->bld", hs, C.astype(dtype))
+    y = y + D.astype(dtype) * u32
+    if z is not None:
+        y = y * jax.nn.silu(z.astype(dtype))
+    if return_state:
+        return y, hs[:, -1]
+    return y
+
+
+def selective_scan_step_ref(h: jax.Array, u: jax.Array, dt: jax.Array,
+                            A: jax.Array, B: jax.Array, C: jax.Array,
+                            D: jax.Array, z: Optional[jax.Array] = None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Single recurrent step (generation).  h: (batch, D, N); u/dt/z: (batch, D);
+    B/C: (batch, N).  Returns (y, h_new)."""
+    dtype = jnp.float32
+    dA = jnp.exp(dt.astype(dtype)[..., None] * A.astype(dtype))
+    dBu = (dt.astype(dtype) * u.astype(dtype))[..., None] * \
+        B.astype(dtype)[:, None, :]
+    h_new = dA * h.astype(dtype) + dBu
+    y = jnp.einsum("bdn,bn->bd", h_new, C.astype(dtype))
+    y = y + D.astype(dtype) * u.astype(dtype)
+    if z is not None:
+        y = y * jax.nn.silu(z.astype(dtype))
+    return y, h_new
+
+
+def selective_scan_quant_ref(qu, qdt, qA, qB, qC, scales: dict, D, z=None,
+                             h0=None, return_state: bool = False):
+    """Quantized-selective-scan oracle: dequantize int8 inputs with their
+    per-tensor scales (paper §4.2), then run the fp32 scan."""
+    u = Q.dequantize(qu, scales["u"])
+    dt = Q.dequantize(qdt, scales["dt"])
+    A = Q.dequantize(qA, scales["A"])
+    B = Q.dequantize(qB, scales["B"])
+    C = Q.dequantize(qC, scales["C"])
+    return selective_scan_ref(u, dt, A, B, C, D, z=z, h0=h0,
+                              return_state=return_state)
+
+
+# ---------------------------------------------------------------------------
+# fused Hadamard transform + static quantization (paper §4.2 "SSM outputs")
+# ---------------------------------------------------------------------------
+
+def hadamard_quant_ref(y: jax.Array, s_y: jax.Array) -> jax.Array:
+    """y -> clamp(round((H_n y / sqrt(n)) / s_y)) as int8 over last axis."""
+    yh = had_transform(y.astype(jnp.float32), normalized=True)
+    return Q.quantize(yh, jnp.asarray(s_y, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# fused causal conv1d + SiLU + quantization (paper §4.3)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d_ref(qx: jax.Array, qw: jax.Array, bias: jax.Array,
+                      s_x: jax.Array, s_w: jax.Array,
+                      s_out: Optional[jax.Array] = None,
+                      state: Optional[jax.Array] = None,
+                      apply_silu: bool = True):
+    """Depthwise causal conv over L with int8 input/weights.
+
+    qx: (batch, L, D) int8; qw: (W, D) int8; bias: (D,) fp32.
+    state: (batch, W-1, D) int8 tail of the previous chunk (or None = zeros).
+    Output int8 (if s_out) or fp32; plus the new state tail.
+    """
+    w = qw.astype(jnp.float32) * s_w
+    x = qx.astype(jnp.float32) * s_x
+    bsz, L, d = x.shape
+    width = qw.shape[0]
+    if state is None:
+        pad = jnp.zeros((bsz, width - 1, d), x.dtype)
+    else:
+        pad = state.astype(jnp.float32) * s_x
+    xp = jnp.concatenate([pad, x], axis=1)                  # (b, L+W-1, D)
+    y = sum(xp[:, k:k + L] * w[k] for k in range(width)) + bias
+    if apply_silu:
+        y = jax.nn.silu(y)
+    new_state = jnp.concatenate(
+        [pad, qx.astype(jnp.float32) * s_x], axis=1)[:, -(width - 1):]
+    new_state_q = Q.quantize(new_state, jnp.asarray(s_x, jnp.float32))
+    if s_out is not None:
+        return Q.quantize(y, jnp.asarray(s_out, jnp.float32)), new_state_q
+    return y, new_state_q
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul with fused dequant epilogue (paper §4.3 projection layers)
+# ---------------------------------------------------------------------------
+
+def int8_matmul_ref(qx: jax.Array, qw: jax.Array, s_x: jax.Array,
+                    s_w: jax.Array, bias: Optional[jax.Array] = None,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """(M,K)int8 @ (K,N)int8 -> int32 -> * s_x*s_w (+bias) -> out_dtype."""
+    acc = jax.lax.dot_general(
+        qx, qw, (((qx.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * (jnp.asarray(s_x, jnp.float32) *
+                                   jnp.asarray(s_w, jnp.float32))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused residual-add + RMSNorm + static quantization (paper §4.3)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_quant_ref(x_out: jax.Array, x_res: jax.Array, w: jax.Array,
+                      s_out: jax.Array, eps: float = 1e-5
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (int8 input to the next block, fp residual).
+
+    (x_in^{L+1}, x_res^{L+1}) =
+        (quant(RMSNorm(x_out^L + x_res^L) / s_out), x_out^L + x_res^L)
+    Normalization in fp32 (weights not quantized, paper §4.3).
+    """
+    r = x_out.astype(jnp.float32) + x_res.astype(jnp.float32)
+    var = jnp.mean(r * r, axis=-1, keepdims=True)
+    y = r * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return Q.quantize(y, jnp.asarray(s_out, jnp.float32)), r

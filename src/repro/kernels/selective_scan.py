@@ -1,0 +1,146 @@
+"""Quantized selective SSM scan Pallas kernel (the paper's core operator).
+
+Semantics (Mamba-1, paper Eq. 1, ZOH discretization):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * u_t * B_t
+    y_t = <h_t, C_t> + D u_t            (then y *= silu(z) if gated)
+
+All tensor operands arrive as int8 with per-tensor scales (paper §4.2:
+"the quantized selective SSM takes 8-bit weights and activations as input,
+as well as their scaling factors, and outputs half precision y").
+Dequantization happens once per VMEM tile; the recurrence runs in fp32.
+
+Hardware adaptation (DESIGN.md §Hardware-adaptation): the CUDA kernel the
+paper modifies parallelizes the scan across threads with registers +
+shuffles.  On TPU we instead:
+  * tile channels (D) onto the 128-lane vector unit, states (N) onto
+    sublanes -- each time step is a dense (bd, N) elementwise contraction;
+  * chunk the sequence onto the (sequential) Pallas grid, carrying the
+    (bd, N) state in VMEM scratch across grid steps -- the TPU grid is
+    guaranteed to execute in order, which replaces the CUDA block-level
+    carry;
+  * the time loop inside a chunk is a fori_loop of vector ops (the op is
+    memory-bound: ~O(N) flops per loaded byte, so MXU matmul-ification of
+    the intra-chunk part buys nothing once HBM traffic dominates -- see
+    EXPERIMENTS.md §Perf for the measurement).
+
+The final state is emitted so serving can switch prefill -> decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(qu_ref, qdt_ref, qA_ref, qB_ref, qC_ref, dres_ref, z_ref,
+            h0_ref, s_ref, y_ref, hout_ref, h_ref, *,
+            chunk: int, gated: bool, has_h0: bool):
+    t_idx = pl.program_id(2)
+    s_u, s_dt, s_A, s_B, s_C = (s_ref[0, 0], s_ref[0, 1], s_ref[0, 2],
+                                s_ref[0, 3], s_ref[0, 4])
+
+    @pl.when(t_idx == 0)
+    def _init():
+        if has_h0:
+            h_ref[...] = h0_ref[0].astype(jnp.float32)
+        else:
+            h_ref[...] = jnp.zeros_like(h_ref)
+
+    # dequantize this chunk's tiles once
+    u = qu_ref[0].astype(jnp.float32) * s_u           # (T, bd)
+    dt = qdt_ref[0].astype(jnp.float32) * s_dt        # (T, bd)
+    a = qA_ref[...].astype(jnp.float32) * s_A         # (bd, N)
+    bmat = qB_ref[0].astype(jnp.float32) * s_B        # (T, N)
+    cmat = qC_ref[0].astype(jnp.float32) * s_C        # (T, N)
+    dres = dres_ref[...].astype(jnp.float32)          # (bd,)
+
+    def step(i, h):
+        dt_i = dt[i][:, None]                         # (bd, 1)
+        da = jnp.exp(dt_i * a)                        # (bd, N)
+        dbu = (dt[i] * u[i])[:, None] * bmat[i][None, :]
+        h = da * h + dbu                              # (bd, N)
+        y_i = jnp.sum(h * cmat[i][None, :], axis=-1) + dres * u[i]
+        if gated:
+            zi = z_ref[0, i, :].astype(jnp.float32)
+            y_i = y_i * (zi * jax.nn.sigmoid(zi))
+        y_ref[0, i, :] = y_i.astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+    @pl.when(t_idx == pl.num_programs(2) - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "chunk", "block_d", "out_dtype", "interpret"))
+def selective_scan(qu: jax.Array, qdt: jax.Array, qA: jax.Array,
+                   qB: jax.Array, qC: jax.Array, scales: jax.Array,
+                   D: jax.Array, z: Optional[jax.Array] = None,
+                   h0: Optional[jax.Array] = None, *,
+                   chunk: int = 128, block_d: int = 256,
+                   out_dtype=jnp.float32, interpret: bool = True
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized selective scan.
+
+    qu, qdt: (B, L, D) int8;  qA: (D, N) int8;  qB, qC: (B, L, N) int8;
+    scales: (5,) fp32 = (s_u, s_dt, s_A, s_B, s_C);  D: (D,) fp32;
+    z: optional (B, L, D) fp gate;  h0: optional (B, D, N) fp32.
+    Returns (y (B, L, D) out_dtype, h_last (B, D, N) fp32).
+    """
+    bsz, L, d = qu.shape
+    n = qA.shape[-1]
+    gated = z is not None
+    has_h0 = h0 is not None
+
+    bd = min(block_d, d)
+    dp = -(-d // bd) * bd
+    tc = min(chunk, L)
+    lp = -(-L // tc) * tc
+
+    pad_ld = ((0, 0), (0, lp - L), (0, dp - d))
+    qu_p = jnp.pad(qu, pad_ld)
+    qdt_p = jnp.pad(qdt, pad_ld)
+    qA_p = jnp.pad(qA, ((0, dp - d), (0, 0)))
+    pad_ln = ((0, 0), (0, lp - L), (0, 0))
+    qB_p = jnp.pad(qB, pad_ln)
+    qC_p = jnp.pad(qC, pad_ln)
+    d_p = jnp.pad(D.astype(jnp.float32), (0, dp - d))
+    z_p = (jnp.pad(z, pad_ld) if gated
+           else jnp.zeros((bsz, lp, dp), jnp.float32))
+    h0_p = (jnp.pad(h0.astype(jnp.float32), ((0, 0), (0, dp - d), (0, 0)))
+            if has_h0 else jnp.zeros((bsz, dp, n), jnp.float32))
+    s = scales.astype(jnp.float32).reshape(1, 5)
+
+    grid = (bsz, dp // bd, lp // tc)
+    y, h_last = pl.pallas_call(
+        functools.partial(_kernel, chunk=tc, gated=gated, has_h0=has_h0),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tc, bd), lambda b, j, t: (b, t, j)),   # qu
+            pl.BlockSpec((1, tc, bd), lambda b, j, t: (b, t, j)),   # qdt
+            pl.BlockSpec((bd, n), lambda b, j, t: (j, 0)),          # qA
+            pl.BlockSpec((1, tc, n), lambda b, j, t: (b, t, 0)),    # qB
+            pl.BlockSpec((1, tc, n), lambda b, j, t: (b, t, 0)),    # qC
+            pl.BlockSpec((bd,), lambda b, j, t: (j,)),              # D
+            pl.BlockSpec((1, tc, bd), lambda b, j, t: (b, t, j)),   # z
+            pl.BlockSpec((1, bd, n), lambda b, j, t: (b, j, 0)),    # h0
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # scales
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tc, bd), lambda b, j, t: (b, t, j)),
+            pl.BlockSpec((1, bd, n), lambda b, j, t: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, lp, dp), out_dtype),
+            jax.ShapeDtypeStruct((bsz, dp, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(qu_p, qdt_p, qA_p, qB_p, qC_p, d_p, z_p, h0_p, s)
+    return y[:, :L, :d], h_last[:, :d]

@@ -1,0 +1,141 @@
+"""Quantized chunked SSD (Mamba-2) scan Pallas kernel.
+
+Extends the paper's quantized-scan idea to the Mamba-2 recurrence used by
+the Zamba2 backbone (DESIGN.md §Arch-applicability).  Where the Mamba-1
+kernel (``selective_scan.py``) is a vector recurrence (A is per
+channel-state, so each step is elementwise), Mamba-2's scalar-per-head
+decay admits the **state-space dual** form in which everything becomes
+MXU matmuls:
+
+  per (batch, head, chunk) with running state S (n, hd):
+    scores  = tril( (C B^T) * exp(lcum_i - lcum_j) )     (t,t)  <- MXU
+    y_intra = scores @ (dt * x)                          (t,hd) <- MXU
+    y_inter = exp(lcum) * (C @ S)                        (t,hd) <- MXU
+    S      <- e^{lcum_T} S + B^T @ (e^{lcum_T-lcum} dt x)       <- MXU
+
+The chunk axis is the (sequential) Pallas grid; S lives in VMEM scratch
+across grid steps.  Operands arrive int8 with per-tensor scales,
+dequantized once per tile; everything accumulates in fp32 (same
+quantization contract as the paper's selective-scan kernel).
+
+VMEM at the default (t=128, n<=128, hd<=128): a few (t,t)/(t,hd)/(n,hd)
+fp32 tiles ~ 512 KB << 16 MB, MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(qx_ref, qdt_ref, qa_ref, qb_ref, qc_ref, dres_ref, s_ref,
+            h0_ref, y_ref, hout_ref, state_ref, *, chunk: int,
+            has_h0: bool):
+    c_idx = pl.program_id(2)
+    s_x, s_dt, s_a, s_b, s_c = (s_ref[0, 0], s_ref[0, 1], s_ref[0, 2],
+                                s_ref[0, 3], s_ref[0, 4])
+
+    @pl.when(c_idx == 0)
+    def _init():
+        if has_h0:
+            state_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+        else:
+            state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = qx_ref[0, :, 0, :].astype(jnp.float32) * s_x        # (t, hd)
+    dt = qdt_ref[0, :, 0].astype(jnp.float32) * s_dt        # (t,)
+    a = qa_ref[0].astype(jnp.float32) * s_a                 # scalar
+    bmat = qb_ref[0].astype(jnp.float32) * s_b              # (t, n)
+    cmat = qc_ref[0].astype(jnp.float32) * s_c              # (t, n)
+    dres = dres_ref[0].astype(jnp.float32)                  # scalar
+
+    la = dt * a                                             # (t,) < 0
+    lcum = jnp.cumsum(la)                                   # (t,)
+
+    # intra-chunk: decay-masked (t, t) score matmul
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    decay = lcum[:, None] - lcum[None, :]
+    tri = jnp.tril(jnp.ones((x.shape[0], x.shape[0]), bool))
+    # mask before exp (upper triangle is positive and can overflow)
+    scores = cb * jnp.exp(jnp.where(tri, decay, -1e30))
+    dx = dt[:, None] * x                                    # (t, hd)
+    y = jax.lax.dot_general(scores, dx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    y += jnp.exp(lcum)[:, None] * jax.lax.dot_general(
+        cmat, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = (y + dres * x).astype(y_ref.dtype)
+
+    # state update: S <- e^{lcum_T} S + B^T @ (e^{lcum_T - lcum} dt x)
+    tail = jnp.exp(lcum[-1] - lcum)                         # (t,)
+    contrib = jax.lax.dot_general(
+        bmat, tail[:, None] * dx, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (n, hd)
+    state_ref[...] = jnp.exp(lcum[-1]) * state_ref[...] + contrib
+
+    @pl.when(c_idx == pl.num_programs(2) - 1)
+    def _emit():
+        hout_ref[0, 0] = state_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "out_dtype",
+                                             "interpret"))
+def ssd_scan(qx: jax.Array, qdt: jax.Array, qa: jax.Array, qb: jax.Array,
+             qc: jax.Array, scales: jax.Array, dres: jax.Array,
+             h0: Optional[jax.Array] = None, *, chunk: int = 128,
+             out_dtype=jnp.float32, interpret: bool = True
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized Mamba-2 scan.
+
+    qx (B, L, H, hd) int8; qdt (B, L, H) int8; qa (H,) int8;
+    qb, qc (B, L, N) int8; scales (5,) fp32 = (s_x, s_dt, s_a, s_b, s_c);
+    dres (H,) fp32; h0 optional (B, H, N, hd) fp32.
+    Returns (y (B, L, H, hd) out_dtype, h_last (B, H, N, hd) fp32).
+    """
+    bsz, L, h, hd = qx.shape
+    n = qb.shape[-1]
+    has_h0 = h0 is not None
+    tc = min(chunk, L)
+    lp = -(-L // tc) * tc
+    qx_p = jnp.pad(qx, ((0, 0), (0, lp - L), (0, 0), (0, 0)))
+    qdt_p = jnp.pad(qdt, ((0, 0), (0, lp - L), (0, 0)))
+    qb_p = jnp.pad(qb, ((0, 0), (0, lp - L), (0, 0)))
+    qc_p = jnp.pad(qc, ((0, 0), (0, lp - L), (0, 0)))
+    h0_p = (h0.astype(jnp.float32) if has_h0
+            else jnp.zeros((bsz, h, n, hd), jnp.float32))
+    s = scales.astype(jnp.float32).reshape(1, 5)
+
+    grid = (bsz, h, lp // tc)
+    y, h_last = pl.pallas_call(
+        functools.partial(_kernel, chunk=tc, has_h0=has_h0),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tc, 1, hd), lambda b, j, c: (b, c, j, 0)),
+            pl.BlockSpec((1, tc, 1), lambda b, j, c: (b, c, j)),
+            pl.BlockSpec((1,), lambda b, j, c: (j,)),
+            pl.BlockSpec((1, tc, n), lambda b, j, c: (b, c, 0)),
+            pl.BlockSpec((1, tc, n), lambda b, j, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, j, c: (j,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, n, hd), lambda b, j, c: (b, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tc, 1, hd), lambda b, j, c: (b, c, j, 0)),
+            pl.BlockSpec((1, 1, n, hd), lambda b, j, c: (b, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, lp, h, hd), out_dtype),
+            jax.ShapeDtypeStruct((bsz, h, n, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, hd), jnp.float32)],
+        interpret=interpret,
+    )(qx_p, qdt_p, qa, qb_p, qc_p, dres, s, h0_p)
+    return y[:, :L], h_last

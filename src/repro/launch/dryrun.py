@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry run: lower + compile every (arch x shape) cell on the
+production mesh and emit memory/cost/roofline evidence.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k [--multi-pod] [--fsdp] [--out results.jsonl]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+The FIRST lines above set XLA_FLAGS before any jax import -- jax locks the
+device count at first init.  Do not set this flag globally; only the
+dry-run wants 512 placeholder host devices.
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPE_BY_NAME, cell_supported,
+                           get_config)
+from repro.dist import hlo_cost
+from repro.dist import roofline as RL
+from repro.dist.sharding import (batch_shardings, decode_state_shardings,
+                                 train_state_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import (decode_input_specs, decode_step, forward,
+                          input_specs, loss_fn)
+from repro.optim.adamw import OptimConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+def _train_step_fn(cfg, microbatches: int):
+    opt_cfg = OptimConfig()
+    return make_train_step(cfg, opt_cfg, remat=True,
+                           microbatches=microbatches)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             fsdp: bool = False, microbatches: int = 1,
+             serve_dtype: str = None, quant: str = None,
+             kv_dtype: str = None, cfg_overrides: dict = None,
+             bf16_params: bool = False, verbose: bool = True) -> dict:
+    """Variants (the §Perf hillclimb levers):
+      serve_dtype='bfloat16'  -- decode/prefill params stored bf16
+      quant='quamba'          -- decode with int8 weights + static scales
+      kv_dtype='int8'         -- int8 KV cache (beyond-paper)
+      cfg_overrides           -- dataclasses.replace fields (e.g. chunking)
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            state_shapes = jax.eval_shape(
+                functools.partial(
+                    init_train_state, cfg=cfg,
+                    param_dtype="bfloat16" if bf16_params else None),
+                jax.random.PRNGKey(0))
+            state_sh = train_state_shardings(state_shapes, mesh, cfg,
+                                             fsdp=fsdp)
+            batch = input_specs(cfg, shape)
+            batch_sh = batch_shardings(batch, mesh)
+            step = _train_step_fn(cfg, microbatches)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch)
+            n_params = RL.count_params(state_shapes["params"])
+        elif shape.kind == "prefill":
+            params_shapes = jax.eval_shape(
+                functools.partial(_init_params, cfg=cfg),
+                jax.random.PRNGKey(0))
+            from repro.dist.sharding import param_shardings
+            p_sh = param_shardings(params_shapes, mesh, cfg, fsdp=fsdp)
+            batch = input_specs(cfg, shape)
+            batch_sh = batch_shardings(batch, mesh)
+            fwd = lambda p, b: forward(p, cfg, b, remat=True)[0]
+            jitted = jax.jit(fwd, in_shardings=(p_sh, batch_sh))
+            lowered = jitted.lower(params_shapes, batch)
+            n_params = RL.count_params(params_shapes)
+        else:  # decode
+            params_shapes = jax.eval_shape(
+                functools.partial(_init_params, cfg=cfg),
+                jax.random.PRNGKey(0))
+            if serve_dtype:
+                params_shapes = _cast_float_leaves(params_shapes,
+                                                   serve_dtype)
+            from repro.dist.sharding import param_shardings
+            state, token = decode_input_specs(cfg, shape)
+            if kv_dtype:
+                state = _cast_float_leaves(state, kv_dtype,
+                                           only_names=("k", "v"))
+            state_sh = decode_state_shardings(state, mesh, cfg)
+            token_sh = batch_shardings(token, mesh)
+            n_params = RL.count_params(params_shapes)
+            if quant:
+                from repro.models.quantize import (make_qctx,
+                                                   quantize_model)
+                from repro.quant.recipe import get_spec
+                spec = get_spec(quant)
+                calib_b = input_specs(
+                    cfg, dataclasses_replace_shape(shape))
+                stats_shapes = jax.eval_shape(
+                    lambda p, b: forward(p, cfg, b,
+                                         qctx={"mode": "calib"})[1],
+                    params_shapes, calib_b)
+                qparams_shapes, qdata_shapes = jax.eval_shape(
+                    lambda p, st: quantize_model(p, st, cfg, spec),
+                    params_shapes, stats_shapes)
+                p_sh = param_shardings(qparams_shapes, mesh, cfg,
+                                       fsdp=fsdp)
+                qd_sh = _generic_shardings(qdata_shapes, mesh)
+                serve_step = lambda p, qd, s, t: decode_step(
+                    p, cfg, s, t,
+                    qctx=make_qctx(spec, qd, int8_compute=True))
+                jitted = jax.jit(
+                    serve_step,
+                    in_shardings=(p_sh, qd_sh, state_sh, token_sh),
+                    donate_argnums=(2,))
+                lowered = jitted.lower(qparams_shapes, qdata_shapes,
+                                       state, token)
+            else:
+                p_sh = param_shardings(params_shapes, mesh, cfg,
+                                       fsdp=fsdp)
+                serve_step = lambda p, s, t: decode_step(p, cfg, s, t)
+                jitted = jax.jit(serve_step,
+                                 in_shardings=(p_sh, state_sh, token_sh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(params_shapes, state, token)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware totals (XLA's cost_analysis counts while bodies
+    # once; see repro.dist.hlo_cost): flops/bytes/collectives per chip.
+    parsed = hlo_cost.analyze(hlo)
+    cost = {"flops": parsed["flops"],
+            "bytes accessed": parsed["bytes accessed"]}
+    coll = {"total": parsed["collective_bytes"],
+            "count": parsed["collective_count"]}
+    coll_by = parsed.get("collective_by_type", {})
+
+    # MODEL_FLOPS = 6*N*D (train: fwd+bwd; decode/prefill: 2*N*D fwd only)
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    n_active = _active_params(cfg, n_params)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    chips = 512 if multi_pod else 256
+    model_flops = factor * n_active * tokens / chips  # per-chip share
+
+    terms = RL.roofline_terms(cost, coll, model_flops=model_flops)
+    result = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "fsdp": fsdp,
+        "microbatches": microbatches,
+        "kind": shape.kind,
+        "n_params": int(n_params),
+        "n_active_params": int(n_active),
+        "bytes_per_device": int(mem.temp_size_in_bytes
+                                + mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                - mem.alias_size_in_bytes)
+        if hasattr(mem, "temp_size_in_bytes") else None,
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "arg_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "xla_entry_flops": float(xla_cost.get("flops", 0.0)),
+        "xla_entry_bytes": float(xla_cost.get("bytes accessed", 0.0)),
+        "collective_by_type": {k: v for k, v in coll_by.items() if v},
+        "bytes_by_op": parsed.get("bytes_by_op", {}),
+        "variant": {k: v for k, v in (("serve_dtype", serve_dtype),
+                                      ("quant", quant),
+                                      ("kv_dtype", kv_dtype),
+                                      ("bf16_params", bf16_params),
+                                      ("overrides", cfg_overrides))
+                    if v},
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in terms.items()},
+    }
+    if verbose:
+        print(json.dumps(result))
+        sys.stdout.flush()
+    return result
+
+
+def _init_params(key, cfg):
+    from repro.models import init_params
+    return init_params(key, cfg)
+
+
+def _cast_float_leaves(tree, dtype: str, only_names=None):
+    """Re-dtype ShapeDtypeStructs (serve-precision variants)."""
+    dt = jnp.dtype(dtype)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", "")) if path else ""
+        is_float = jnp.issubdtype(leaf.dtype, jnp.floating)
+        if not is_float:
+            return leaf
+        if only_names is not None and name not in only_names:
+            return leaf
+        return jax.ShapeDtypeStruct(leaf.shape, dt)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def dataclasses_replace_shape(shape):
+    """A short calibration-shaped batch for eval_shape'ing the quantize
+    pipeline (structure is what matters, not size)."""
+    import dataclasses as _dc
+    return _dc.replace(shape, seq_len=256, global_batch=2, kind="prefill")
+
+
+def _generic_shardings(tree, mesh):
+    """Fallback shardings for quantized-weight trees: shard the largest
+    divisible dim on 'model', replicate the rest."""
+    import numpy as _np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if leaf.shape:
+            i = int(_np.argmax(leaf.shape))
+            if leaf.shape[i] % mesh.shape["model"] == 0 and                     leaf.shape[i] >= mesh.shape["model"]:
+                spec[i] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, tree)
+
+
+def _active_params(cfg, n_params: int) -> int:
+    """active params for MoE (top_k of n_experts in every MoE FFN)."""
+    if cfg.family != "moe":
+        return n_params
+    expert_p = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff
+    active_expert_p = expert_p * cfg.top_k / cfg.n_experts
+    return int(n_params - expert_p + active_expert_p)
+
+
+# Baseline production settings per arch for train_4k: gradient-accumulation
+# microbatches sized so activations fit 16GB HBM, FSDP where fp32 params +
+# optimizer alone overflow a chip.  (A production launcher always picks
+# these; the §Perf hillclimb starts from here.)
+TRAIN_MICROBATCHES = {
+    "whisper-medium": 2,
+    "qwen3-moe-30b-a3b": 8,
+    "granite-moe-1b-a400m": 4,
+    "paligemma-3b": 4,
+    "llama3-8b": 8,
+    "qwen3-32b": 8,
+    "granite-3-8b": 8,
+    "granite-3-2b": 8,
+    "zamba2-1.2b": 8,
+    "xlstm-1.3b": 4,
+}
+FSDP_ARCHS = {"qwen3-32b", "qwen3-moe-30b-a3b"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--serve-dtype", default=None)
+    ap.add_argument("--bf16-params", action="store_true")
+    ap.add_argument("--quant", default=None)
+    ap.add_argument("--kv-dtype", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in ("train_4k", "prefill_32k", "decode_32k",
+                          "long_500k"):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        mb = args.microbatches
+        fsdp = args.fsdp
+        if args.all and shape == "train_4k":
+            mb = TRAIN_MICROBATCHES.get(arch, mb)
+            fsdp = fsdp or arch in FSDP_ARCHS
+        try:
+            r = run_cell(arch, shape, multi_pod=args.multi_pod,
+                         fsdp=fsdp, microbatches=mb,
+                         serve_dtype=args.serve_dtype, quant=args.quant,
+                         kv_dtype=args.kv_dtype,
+                         bf16_params=args.bf16_params)
+        except Exception as e:  # a failing cell is a bug: surface loudly
+            r = {"arch": arch, "shape": shape, "status": "error",
+                 "error": f"{type(e).__name__}: {e}"}
+            print(json.dumps(r))
+        results.append(r)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(r) + "\n")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"# dryrun finished: {len(results)} cells, {n_err} errors",
+          file=sys.stderr)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

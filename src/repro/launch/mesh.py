@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is a
+second data-parallel axis crossing the inter-pod links (DCN/optical), so
+gradient reduction over 'pod' is the only traffic that leaves a pod.
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests on CPU)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axis names of a mesh (includes 'pod')."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh):
+    return "model" if "model" in mesh.axis_names else None

@@ -1,0 +1,57 @@
+"""Serving launcher: calibrate + quantize + serve batched requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba-130m --small \
+      --quant quamba --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, scale_down
+from repro.data import eval_batches
+from repro.models import forward, init_params
+from repro.models.quantize import make_qctx, quantize_model
+from repro.quant.calibrate import run_calibration
+from repro.quant.recipe import get_spec
+from repro.serve import Engine, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba-130m")
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--quant", default="quamba")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.small:
+        cfg = scale_down(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    qctx = None
+    if args.quant != "fp":
+        calib = eval_batches(cfg.vocab_size, 4, 64, 4, seed=777)
+        stats = run_calibration(
+            lambda p, b: forward(p, cfg, b, qctx={"mode": "calib"}),
+            params, calib)
+        spec = get_spec(args.quant)
+        params, qdata = quantize_model(params, stats, cfg, spec)
+        qctx = make_qctx(spec, qdata)
+
+    eng = Engine(params, cfg, max_batch=4, max_len=128, qctx=qctx)
+    for i in range(args.requests):
+        eng.submit(Request(uid=i, prompt=[1 + i, 2, 3],
+                           max_new_tokens=args.max_new))
+    t0 = time.time()
+    eng.run()
+    print(f"{args.requests} requests served in {time.time()-t0:.2f}s "
+          f"({args.quant})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Distributed training launcher.
+
+On a real TPU cluster every host runs this same script (jax.distributed
+initializes from the TPU environment); in this container it trains on the
+available CPU devices.  The mesh, shardings, fault-tolerant loop,
+checkpointing and (optional) int8 gradient compression are all exercised.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba-130m \
+      --small --steps 100 [--compress-grads] [--fsdp]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+
+import jax
+
+from repro.configs import get_config, scale_down
+from repro.data import batches
+from repro.dist.sharding import batch_shardings, train_state_shardings
+from repro.launch.mesh import make_host_mesh
+from repro.optim import OptimConfig
+from repro.train import LoopConfig, Trainer, init_train_state, \
+    make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba-130m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.small:
+        cfg = scale_down(cfg)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+
+    mesh = make_host_mesh(model=args.model_parallel)
+    state = init_train_state(jax.random.PRNGKey(0), cfg,
+                             compress_grads=args.compress_grads)
+    shapes = jax.eval_shape(lambda: state)
+    st_sh = train_state_shardings(shapes, mesh, cfg, fsdp=args.fsdp)
+    step = make_train_step(
+        cfg, OptimConfig(warmup_steps=max(1, args.steps // 10),
+                         total_steps=args.steps),
+        remat=True, microbatches=args.microbatches,
+        compress_grads=args.compress_grads)
+
+    with jax.set_mesh(mesh):
+        state = jax.device_put(state, st_sh)
+        data = lambda s0: (
+            jax.device_put(b, batch_shardings(jax.eval_shape(lambda: b),
+                                              mesh))
+            for b in batches(cfg.vocab_size, args.batch, args.seq,
+                             seed=17, start_step=s0))
+        loop = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=50, log_every=10)
+        trainer = Trainer(loop, functools.partial(step), state)
+        trainer.run(data(trainer.start_step))
+    print(f"done; stragglers observed: {trainer.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""GQA attention: full/prefix/cross masks, chunked online-softmax path for
+long sequences, KV-cache decode, optional qk-norm, W8A8 quantized linears.
+
+The paper (§I) shows self-attention activations are smooth -- per-tensor
+static W8A8 on the four projections is sufficient -- which is exactly what
+the quant path here does (the Quamba+LLM.int8-style treatment used for
+Jamba in paper Table 4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import is_calib, linear
+from repro.quant.observers import observe
+
+# switch to the chunked online-softmax path when Lq * Lk exceeds this
+_CHUNK_THRESHOLD = 4096 * 4096
+_Q_CHUNK = 1024
+_KV_CHUNK = 1024
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig) -> Dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], d, cfg.n_heads * hd),
+        "wk": common.dense_init(ks[1], d, cfg.n_kv_heads * hd),
+        "wv": common.dense_init(ks[2], d, cfg.n_kv_heads * hd),
+        "wo": common.dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["qn"] = jnp.ones((hd,), jnp.float32)
+        p["kn"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> Dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def _attend(q, k, v, mask, softcap: float) -> jax.Array:
+    """Direct attention. q (B,Lq,G,Hg,hd), k/v (B,Lk,G,hd), mask (B,Lq,Lk).
+
+    Dots run on the operands' native dtypes with fp32 accumulation
+    (preferred_element_type) instead of casting k/v up front: materializing
+    an fp32 copy of a bf16 KV cache costs 3x the cache's bytes per decode
+    step and dominated the decode roofline (EXPERIMENTS.md §Perf C1).
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bqghd,bkgd->bghqk", q, k.astype(q.dtype),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if mask is not None:
+        s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bghqk,bkgd->bqghd", p.astype(v.dtype),
+                      v, preferred_element_type=jnp.float32)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, mask_kind: str,
+                       prefix_len: int, softcap: float) -> jax.Array:
+    """Online-softmax attention over kv chunks (flash-style, pure jnp).
+
+    Peak memory is one (B, G, Hg, q_chunk, kv_chunk) score tile, so 32k
+    prefill fits on-device; see DESIGN.md §Long-context.
+    """
+    b, lq, g, hg, hd = q.shape
+    lk = k.shape[1]
+    qc, kc = min(_Q_CHUNK, lq), min(_KV_CHUNK, lk)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    qr = jnp.moveaxis(q.reshape(b, lq // qc, qc, g, hg, hd), 1, 0)
+    qpr = q_pos.reshape(lq // qc, qc)
+    kr = jnp.moveaxis(k.reshape(b, lk // kc, kc, g, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, lk // kc, kc, g, hd), 1, 0)
+    kpr = k_pos.reshape(lk // kc, kc)
+
+    def one_q_chunk(args):
+        qi, qp = args                      # (b, qc, g, hg, hd), (qc,)
+
+        def body(carry, kv):
+            m, l, acc = carry
+            ki, vi, kp = kv
+            s = jnp.einsum("bqghd,bkgd->bghqk", qi, ki.astype(qi.dtype),
+                           preferred_element_type=jnp.float32) * scale
+            if softcap > 0:
+                s = softcap * jnp.tanh(s / softcap)
+            if mask_kind == "causal":
+                msk = qp[:, None] >= kp[None, :]
+            elif mask_kind == "prefix":
+                msk = jnp.logical_or(qp[:, None] >= kp[None, :],
+                                     kp[None, :] < prefix_len)
+            else:
+                msk = jnp.ones((qc, kc), bool)
+            s = jnp.where(msk, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bghqk,bkgd->bghqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, g, hg, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, g, hg, qc), jnp.float32)
+        a0 = jnp.zeros((b, g, hg, qc, hd), jnp.float32)
+        (_, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kr, vr, kpr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))   # (b, qc, g, hg, hd)
+
+    out = jax.lax.map(one_q_chunk, (qr, qpr))
+    return jnp.moveaxis(out, 0, 1).reshape(b, lq, g, hg, hd)
+
+
+def attention(p: Dict, cfg: ModelConfig, x: jax.Array, *,
+              pos: Optional[jax.Array] = None,
+              mask_kind: str = "causal",
+              enc_out: Optional[jax.Array] = None,
+              cache: Optional[Dict] = None,
+              cache_pos: Optional[jax.Array] = None,
+              use_rope: bool = True,
+              qctx=None) -> Tuple[jax.Array, Dict, Optional[Dict]]:
+    """Returns (out, calib_stats, new_cache).
+
+    x (B, L, d).  mask_kind: causal | prefix | none.
+    enc_out: cross-attention source (B, Lk, d) -- k/v from the encoder.
+    cache + cache_pos: decode mode; k/v appended at cache_pos.
+    """
+    b, l, _ = x.shape
+    hd = cfg.resolved_head_dim
+    g, h = cfg.n_kv_heads, cfg.n_heads
+    hg = h // g
+    aux: Dict = {}
+    if is_calib(qctx):
+        aux["attn_in"] = observe(x)
+
+    kv_src = enc_out if enc_out is not None else x
+    q = linear(p, "wq", x, qctx)
+    k = linear(p, "wk", kv_src, qctx)
+    v = linear(p, "wv", kv_src, qctx)
+
+    q = q.reshape(b, l, g, hg, hd)
+    k = k.reshape(b, kv_src.shape[1], g, hd)
+    v = v.reshape(b, kv_src.shape[1], g, hd)
+
+    if cfg.qk_norm:
+        q = common.rmsnorm_heads(q, p["qn"], cfg.norm_eps)
+        k = common.rmsnorm_heads(k, p["kn"], cfg.norm_eps)
+
+    is_cross = enc_out is not None
+    new_cache = None
+
+    if cache is not None and not is_cross:
+        # ---- decode: append k/v and attend over the cache ----
+        # cache_pos: per-row positions (B,) -- continuous batching keeps
+        # independent sequences at different depths in one batch.
+        assert l == 1, "decode path is single-token"
+        cur = (cache_pos if cache_pos.ndim == 1
+               else jnp.full((b,), cache_pos, jnp.int32))
+        step_pos = cur[:, None]                           # (B, 1)
+        if use_rope:
+            q = common.apply_rope(q.reshape(b, l, h, hd), step_pos,
+                                  cfg.rope_theta).reshape(b, l, g, hg, hd)
+            k = common.apply_rope(k, step_pos, cfg.rope_theta)
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, cur].set(
+            k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, cur].set(
+            v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        k_pos = jnp.arange(ck.shape[1])
+        mask = (k_pos[None, None, :] <= step_pos[:, :, None])  # (B,1,S)
+        # pass the cache in its storage dtype: _attend accumulates in fp32
+        # without materializing converted copies of the whole cache
+        ctx = _attend(q, ck, cv, mask, cfg.attn_logit_softcap)
+    else:
+        # ---- full-sequence (train / prefill / encoder / cross) ----
+        if pos is None:
+            pos = jnp.arange(l)
+        if use_rope and not is_cross:
+            q = common.apply_rope(q.reshape(b, l, h, hd), pos,
+                                  cfg.rope_theta).reshape(b, l, g, hg, hd)
+            k = common.apply_rope(k, pos, cfg.rope_theta)
+        lk = k.shape[1]
+        eff_mask = "none" if is_cross else mask_kind
+        if l * lk > _CHUNK_THRESHOLD and l % _Q_CHUNK == 0 \
+                and lk % _KV_CHUNK == 0:
+            ctx = _chunked_attention(
+                q, k, v, pos, jnp.arange(lk) if is_cross else pos,
+                eff_mask, cfg.prefix_len, cfg.attn_logit_softcap)
+        else:
+            if eff_mask == "none":
+                mask = None
+            elif eff_mask == "prefix":
+                mask = common.prefix_causal_mask(pos, pos, cfg.prefix_len
+                                                 )[None].repeat(b, 0)
+            else:
+                mask = common.causal_mask(pos, pos)[None].repeat(b, 0)
+            ctx = _attend(q, k, v, mask, cfg.attn_logit_softcap)
+
+    ctx = ctx.reshape(b, l, h * hd).astype(x.dtype)
+    if is_calib(qctx):
+        aux["o_in"] = observe(ctx)
+    out = linear(p, "wo", ctx, qctx)
+    return out, aux, new_cache

@@ -1,0 +1,237 @@
+"""Shared model-zoo primitives: init, norms, rope, masks, losses."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, in_dim: int, out_dim: int,
+               scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init (stored fp32; cast at compute time)."""
+    std = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (in_dim, out_dim), jnp.float32)
+
+
+def embed_init(key: jax.Array, vocab: int, dim: int) -> jax.Array:
+    return 0.02 * jax.random.truncated_normal(
+        key, -2.0, 2.0, (vocab, dim), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fp / calib / quant linear dispatch
+# ---------------------------------------------------------------------------
+
+def linear(p: dict, name: str, x: jax.Array, qctx=None,
+           site: Optional[str] = None) -> jax.Array:
+    """Apply the linear ``p[name]`` (in_dim, out_dim).
+
+    In quant mode (qctx = {"mode": "quant", "scales": {...}, "qw": {...}})
+    the site's int8 weight + static activation scale are used instead --
+    this is the single integration point of the W8A8 path into every model.
+    """
+    site = site or name
+    if qctx is not None and qctx.get("mode") == "quant" \
+            and site in qctx.get("qw", {}):
+        from repro.quant import qlinear  # local import to avoid cycle
+        s_x = qctx["scales"].get(site)
+        if qctx.get("int8_compute") and s_x is not None \
+                and qctx["qw"][site]["qw"].dtype == jnp.int8 \
+                and qctx["qw"][site]["s_w"].ndim == 0:
+            # true integer path: int8 x int8 -> int32 on the MXU; weights
+            # are read at 1 byte/elem with no dequantized copy (§Perf C3)
+            return qlinear.apply_int8(x, s_x, qctx["qw"][site],
+                                      out_dtype=x.dtype)
+        return qlinear.apply_qdq(x, s_x, qctx["qw"][site],
+                                 out_dtype=x.dtype)
+    return x @ p[name].astype(x.dtype)
+
+
+def maybe_constrain(x: jax.Array, *spec):
+    """with_sharding_constraint when a mesh with the named axes is active;
+    no-op otherwise (single-device tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        names = set(mesh.axis_names)
+        fitted = tuple(a if (a in names and d % mesh.shape[a] == 0)
+                       else None
+                       for a, d in zip(spec, x.shape))
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*fitted))
+    except Exception:
+        return x
+
+
+def is_calib(qctx) -> bool:
+    return qctx is not None and qctx.get("mode") == "calib"
+
+
+def is_quant(qctx) -> bool:
+    return qctx is not None and qctx.get("mode") == "quant"
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def rmsnorm_heads(x: jax.Array, w: jax.Array, eps: float = 1e-5
+                  ) -> jax.Array:
+    """Per-head qk-norm: x (..., H, hd), w (hd,)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def softplus(x: jax.Array) -> jax.Array:
+    return jax.nn.softplus(x)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, H, hd) or (..., H, hd) with matching pos (..., L)/(...,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = pos.astype(jnp.float32)[..., None] * freqs  # (..., L, hd/2)
+    angles = angles[..., None, :]                        # broadcast heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., ::2], x32[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_pos: jax.Array, k_pos: jax.Array) -> jax.Array:
+    """bool (..., Lq, Lk): True = attend."""
+    return q_pos[..., :, None] >= k_pos[..., None, :]
+
+
+def prefix_causal_mask(q_pos: jax.Array, k_pos: jax.Array,
+                       prefix_len: int) -> jax.Array:
+    """Prefix-LM mask: full attention within the first ``prefix_len``
+    positions, causal afterwards (PaliGemma)."""
+    causal = q_pos[..., :, None] >= k_pos[..., None, :]
+    in_prefix = k_pos[..., None, :] < prefix_len
+    return jnp.logical_or(causal, in_prefix)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross entropy.  logits (B, L, V), targets (B, L)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (analytic; used by roofline's 6*N*D MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, v = cfg.d_model, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    total = v * d  # embedding
+    if not cfg.tie_embeddings:
+        total += v * d
+
+    def attn_params():
+        return d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+            + cfg.n_heads * hd * d
+
+    def mlp_params(ff):
+        return 3 * d * ff
+
+    if cfg.family in ("dense", "vlm"):
+        total += cfg.n_layers * (attn_params() + mlp_params(cfg.d_ff) + 2 * d)
+    elif cfg.family == "moe":
+        e = cfg.n_experts if not active_only else cfg.top_k
+        per_layer = attn_params() + d * cfg.n_experts \
+            + e * 3 * d * cfg.moe_d_ff + 2 * d
+        total += cfg.n_layers * per_layer
+    elif cfg.family == "audio":
+        total += (cfg.n_enc_layers * (attn_params() + mlp_params(cfg.d_ff)
+                                      + 2 * d))
+        # decoder: self-attn + cross-attn + mlp
+        total += cfg.n_layers * (2 * attn_params() + mlp_params(cfg.d_ff)
+                                 + 3 * d)
+    elif cfg.family == "mamba":
+        di, n, dtr = cfg.d_inner, cfg.d_state, cfg.resolved_dt_rank
+        per_layer = (d * 2 * di               # in_proj
+                     + cfg.conv_width * di + di   # conv
+                     + di * (dtr + 2 * n)     # x_proj
+                     + dtr * di + di          # dt_proj
+                     + di * n + di            # A_log, D
+                     + di * d + d)            # out_proj, norm
+        total += cfg.n_layers * per_layer
+    elif cfg.family == "hybrid":
+        di, n = cfg.d_inner, cfg.d_state
+        heads = cfg.ssm_heads
+        per_mamba = (d * (2 * di + 2 * n * 1 + heads)  # in_proj(z,x,B,C,dt)
+                     + cfg.conv_width * (di + 2 * n)
+                     + heads + heads              # A_log, D per head
+                     + di                          # gate norm
+                     + di * d + d)                 # out_proj, norm
+        total += cfg.n_layers * per_mamba
+        total += attn_params() + mlp_params(cfg.d_ff) + 2 * d  # shared blk
+    elif cfg.family == "ssm":
+        di = cfg.d_inner
+        # mLSTM block: up-proj to 2*di, qkv projections on di, gates, down
+        per_m = d * 2 * di + 3 * di * di // max(1, 1) // 1 \
+            if False else 0
+        per_m = (d * 2 * di          # up proj (x, gate)
+                 + 3 * di * di       # q, k, v
+                 + 2 * di            # i, f gate vectors (per-channel)
+                 + di                 # skip/norm
+                 + di * d + d)        # down proj + norm
+        n_s = cfg.n_layers // max(1, cfg.slstm_every) if cfg.slstm_every else 0
+        n_m = cfg.n_layers - n_s
+        per_s = (4 * d * d + 4 * d   # gates i,f,z,o
+                 + d * 2 * d + 2 * d * d // 2 * 0  # ffn approx below
+                 + d * d * 2         # ffn (expand 2 simple)
+                 + d * d * 2
+                 + 2 * d)
+        total += n_m * per_m + n_s * per_s
+    return int(total)

@@ -1,0 +1,233 @@
+"""Mamba-1 block (the paper's architecture) with the full Quamba dataflow.
+
+The block implements all three execution modes through ``qctx``:
+  * fp      -- plain bf16/fp32 forward
+  * calib   -- forward + per-site activation summaries (paper §5.1)
+  * quant   -- the paper Fig. 4 precision mapping:
+      - fused RMSNorm emits a statically-quantized int8 block input
+      - in_proj / x_proj / dt_proj / out_proj are W8A8 per-tensor
+      - the SSM input x uses the percentile-max scale (§4.2, p=99.999)
+      - (B_t, C_t, dt_t) are quantized per-tensor int8
+      - the gated SSM output is rotated with a Hadamard matrix and
+        quantized in the outlier-free space; H is folded into W_out
+        (compute-invariance), so the rotation costs one fused transform.
+
+Baselines (static / dynamic / SmQ-SSM / QuaRot-SSM, Tables 2/3/5/9) ride
+the same code path -- ``QuantSpec`` toggles decide which sites clip,
+rotate, or recompute scales dynamically.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import is_calib, is_quant, linear
+from repro.quant.hadamard import had_transform, had_transform_t
+from repro.quant.observers import observe
+from repro.quant import quantizers as Q
+from repro.quant import recipe as qrecipe
+from repro.kernels import ref as kref
+
+
+def init_mamba_block(key: jax.Array, cfg: ModelConfig) -> Dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    dtr, w = cfg.resolved_dt_rank, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    # dt bias: softplus^{-1}(dt) for dt ~ U[1e-3, 1e-1] (Mamba init)
+    u = jax.random.uniform(ks[0], (di,), jnp.float32)
+    dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "in_proj": common.dense_init(ks[1], d, 2 * di),
+        "conv_w": 0.1 * jax.random.normal(ks[2], (w, di), jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": common.dense_init(ks[3], di, dtr + 2 * n),
+        "dt_proj": common.dense_init(ks[4], dtr, di,
+                                     scale=dtr ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": common.dense_init(ks[5], di, d),
+    }
+
+
+def _depthwise_conv_silu(x: jax.Array, w: jax.Array, b: jax.Array,
+                         state: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv + SiLU.  x (B, L, D); w (W, D).
+    state: (B, W-1, D) previous tail (decode/chunked prefill)."""
+    bsz, L, d = x.shape
+    width = w.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (bsz, width - 1, d), x.dtype)
+    xp = jnp.concatenate([pad.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, k:k + L] * w[k].astype(x.dtype) for k in range(width))
+    y = y + b.astype(x.dtype)
+    return common.silu(y), xp[:, -(width - 1):]
+
+
+def _ssm_params(p: Dict, cfg: ModelConfig, xc: jax.Array, qctx,
+                aux: Dict):
+    """Compute the selection parameters (dt, B, C) from the SSM input."""
+    dtr, n = cfg.resolved_dt_rank, cfg.d_state
+    bcdt = linear(p, "x_proj", xc, qctx)
+    dt_low, bmat, cmat = jnp.split(bcdt, [dtr, dtr + n], axis=-1)
+    if is_calib(qctx):
+        aux["dt_low"] = observe(dt_low)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        dt_low = qrecipe.act_qdq(dt_low, qctx["scales"]["dt_low"],
+                                 qctx["spec"])
+    dt = common.softplus(linear(p, "dt_proj", dt_low, qctx)
+                         + p["dt_bias"].astype(xc.dtype))
+    if is_calib(qctx):
+        aux["dt"] = observe(dt)
+        aux["B"] = observe(bmat)
+        aux["C"] = observe(cmat)
+    if is_quant(qctx):
+        spec: qrecipe.QuantSpec = qctx["spec"]
+        sc = qctx["scales"]
+        if spec.method == "dynamic":
+            dt = Q.dynamic_qdq(dt)
+            bmat = Q.dynamic_qdq(bmat)
+            cmat = Q.dynamic_qdq(cmat)
+        else:
+            dt = qrecipe.act_qdq(dt, sc["dt"], spec)
+            bmat = qrecipe.act_qdq(bmat, sc["B"], spec)
+            cmat = qrecipe.act_qdq(cmat, sc["C"], spec)
+    return dt, bmat, cmat
+
+
+def _quant_ssm_input(xc: jax.Array, qctx, aux: Dict) -> jax.Array:
+    """The paper's central treatment of the sensitive SSM input x."""
+    if is_calib(qctx):
+        aux["x"] = observe(xc)
+        aux["x_had"] = observe(had_transform(xc))   # for QuaRot-SSM
+        return xc
+    if not is_quant(qctx):
+        return xc
+    spec: qrecipe.QuantSpec = qctx["spec"]
+    sc = qctx["scales"]
+    if spec.method == "dynamic":
+        return Q.dynamic_qdq(xc)
+    if spec.method == "quarot":
+        # QuaRot-SSM (§C): rotate, quantize, rotate back -- costs two extra
+        # transforms (+ transposes on GPU) at inference; Quamba avoids this.
+        xr = had_transform(xc)
+        xr = qrecipe.act_qdq(xr, sc["x_had"], spec)
+        return had_transform_t(xr)
+    return qrecipe.ssm_input_qdq(xc, sc["x"], spec)
+
+
+def _quant_A(p: Dict, qctx) -> jax.Array:
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        if spec.method != "dynamic":
+            a = Q.qdq(a, qctx["scales"]["A"])
+    return a
+
+
+def mamba_block(p: Dict, cfg: ModelConfig, x: jax.Array, qctx=None
+                ) -> Tuple[jax.Array, Dict]:
+    """Full-sequence forward.  x: residual stream (B, L, d)."""
+    aux: Dict = {}
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if is_calib(qctx):
+        aux["in"] = observe(h)
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        if spec.method == "dynamic":
+            h = Q.dynamic_qdq(h)
+        else:
+            # fused RMSNorm -> int8 (paper §4.3)
+            h = qrecipe.act_qdq(h, qctx["scales"]["in"], spec)
+
+    xz = linear(p, "in_proj", h, qctx)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    if is_calib(qctx):
+        aux["conv_in"] = observe(xc)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        xc = qrecipe.act_qdq(xc, qctx["scales"]["conv_in"], qctx["spec"])
+
+    xc, _ = _depthwise_conv_silu(xc, p["conv_w"], p["conv_b"])
+    xc = _quant_ssm_input(xc, qctx, aux)
+    dt, bmat, cmat = _ssm_params(p, cfg, xc, qctx, aux)
+
+    a = _quant_A(p, qctx)
+    y = kref.selective_scan_ref(xc, dt, a, bmat, cmat,
+                                p["D"].astype(jnp.float32), z=z)
+    y = y.astype(x.dtype)
+
+    # ---- output: Hadamard-rotated quantization (paper §4.2) ----
+    if is_calib(qctx):
+        aux["y"] = observe(y)
+        aux["y_had"] = observe(had_transform(y))
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        if spec.method == "dynamic":
+            y = Q.dynamic_qdq(y)
+            out = linear(p, "out_proj", y, qctx)
+        elif spec.use_hadamard:
+            # y^H = H y; W_out already H-folded at quantize time, so the
+            # matmul is compute-invariant: (1/n)(H W)^T (H y) == W^T y.
+            yh = had_transform(y)
+            out = linear(p, "out_proj", yh, qctx, site="out_proj_had")
+        else:
+            y = qrecipe.act_qdq(y, qctx["scales"]["y"], spec)
+            out = linear(p, "out_proj", y, qctx)
+    else:
+        out = linear(p, "out_proj", y, qctx)
+    return x + out, aux
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Dict:
+    di, n, w = cfg.d_inner, cfg.d_state, cfg.conv_width
+    return {
+        "conv": jnp.zeros((batch, w - 1, di), jnp.float32),
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def mamba_block_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
+                     qctx=None) -> Tuple[jax.Array, Dict]:
+    """Single-token decode.  x: (B, d); state: {"conv", "h"}."""
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        h = qrecipe.act_qdq(h, qctx["scales"]["in"], qctx["spec"])
+    xz = linear(p, "in_proj", h, qctx)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        xc = qrecipe.act_qdq(xc, qctx["scales"]["conv_in"], qctx["spec"])
+
+    xc3, new_conv = _depthwise_conv_silu(
+        xc[:, None, :], p["conv_w"], p["conv_b"], state=state["conv"])
+    xc = xc3[:, 0]
+    aux: Dict = {}
+    xc = _quant_ssm_input(xc, qctx, aux)
+    dt, bmat, cmat = _ssm_params(p, cfg, xc, qctx, aux)
+    a = _quant_A(p, qctx)
+    y, h_new = kref.selective_scan_step_ref(
+        state["h"], xc, dt, a, bmat, cmat, p["D"].astype(jnp.float32),
+        z=z)
+    y = y.astype(x.dtype)
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        if spec.method == "dynamic":
+            y = Q.dynamic_qdq(y)
+            out = linear(p, "out_proj", y, qctx)
+        elif spec.use_hadamard:
+            yh = had_transform(y)
+            out = linear(p, "out_proj", yh, qctx, site="out_proj_had")
+        else:
+            y = qrecipe.act_qdq(y, qctx["scales"]["y"], spec)
+            out = linear(p, "out_proj", y, qctx)
+    else:
+        out = linear(p, "out_proj", y, qctx)
+    return x + out, {"conv": new_conv, "h": h_new}

@@ -1,0 +1,128 @@
+"""SwiGLU MLP and capacity-based Mixture-of-Experts layers."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import is_calib, linear
+from repro.quant.observers import observe
+
+
+def init_mlp(key: jax.Array, d: int, ff: int) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": common.dense_init(k1, d, 2 * ff),   # fused gate & up
+        "wo": common.dense_init(k2, ff, d),
+    }
+
+
+def mlp(p: Dict, x: jax.Array, qctx=None) -> Tuple[jax.Array, Dict]:
+    aux: Dict = {}
+    if is_calib(qctx):
+        aux["mlp_in"] = observe(x)
+    gu = linear(p, "wi", x, qctx, site="mlp_wi")
+    gate, up = jnp.split(gu, 2, axis=-1)
+    h = common.silu(gate) * up
+    if is_calib(qctx):
+        aux["down_in"] = observe(h)
+    out = linear(p, "wo", h, qctx, site="mlp_wo")
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-based dispatch, EP-shardable)
+# ---------------------------------------------------------------------------
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "router": common.dense_init(k1, d, e),
+        "wi": jax.random.truncated_normal(
+            k2, -2, 2, (e, d, 2 * ff), jnp.float32) / jnp.sqrt(d),
+        "wo": jax.random.truncated_normal(
+            k3, -2, 2, (e, ff, d), jnp.float32) / jnp.sqrt(ff),
+    }
+
+
+def moe(p: Dict, cfg: ModelConfig, x: jax.Array, qctx=None,
+        no_drop: bool = False) -> Tuple[jax.Array, Dict]:
+    """Switch-style capacity dispatch.
+
+    Tokens route to top-k experts; each expert processes at most
+    C = ceil(T * k / E * capacity_factor) tokens (overflow dropped).
+    The (E, C, d) buffers and (E, ...) expert weights shard over the
+    'model' axis => expert parallelism; GSPMD inserts the all-to-alls.
+    """
+    aux: Dict = {}
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    if is_calib(qctx):
+        aux["moe_in"] = observe(x)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)                  # (T, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    if no_drop:
+        cap = t  # decode: capacity == tokens, nothing can overflow
+    else:
+        cap = int(max(1, round(t * k / e * cfg.capacity_factor)))
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(gate_i, e, dtype=jnp.int32)       # (T, K, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_e = (jnp.cumsum(flat, axis=0) - flat).reshape(t, k, e)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                 # (T, K)
+    keep = pos < cap
+    eidx = gate_i
+    pos_c = jnp.where(keep, pos, 0)
+
+    # Dispatch = skinny int32 scatter of token ids + one row gather.
+    # (A direct scatter-add of the (T, K, d) float payload makes GSPMD
+    # replicate the expert buffer and all-reduce it -- measured 26x more
+    # collective bytes on the production mesh; EXPERIMENTS.md §Perf C2.)
+    tok_ids = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None],
+                               (t, k))
+    # dropped slots write to a spill column (cap) that is sliced away
+    pos_s = jnp.where(keep, pos, cap)
+    slot_tok = jnp.full((e, cap + 1), t, jnp.int32)
+    slot_tok = slot_tok.at[eidx.reshape(-1), pos_s.reshape(-1)].set(
+        tok_ids.reshape(-1))[:, :cap]                          # (E, C)
+    # (forcing replication of the token table here was measured WORSE:
+    # the constraint's transpose turns into an extra psum in backward;
+    # EXPERIMENTS.md §Perf C2 iteration 2, refuted)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), x.dtype)], axis=0)
+    buf = jnp.take(xt_pad, slot_tok.reshape(-1), axis=0).reshape(
+        e, cap, d)
+    buf = common.maybe_constrain(buf, "model", None, None)     # EP
+
+    # expert compute (batched over E; EP shards this axis)
+    gu = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(x.dtype))
+    gate, up = jnp.split(gu, 2, axis=-1)
+    h = common.silu(gate) * up
+    yb = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+    yb = common.maybe_constrain(yb, "model", None, None)
+
+    # gather back with routing weights
+    gathered = yb[eidx.reshape(-1), pos_c.reshape(-1)].reshape(t, k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    out = jnp.sum(gathered * gate_w[..., None].astype(x.dtype), axis=1)
+
+    if is_calib(qctx):
+        aux["moe_frac_dropped"] = {
+            "amax": 1.0 - keep.mean(dtype=jnp.float32),
+            "p": jnp.zeros((5,), jnp.float32),
+            "cmax": jnp.zeros((d,), jnp.float32),
+        }
+    # auxiliary load-balancing loss (Switch): E * sum(frac_tokens * router_prob)
+    me = jnp.mean(jax.nn.one_hot(gate_i[:, 0], e, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux_loss = e * jnp.sum(me * ce)
+    return out.reshape(b, s, d), {**aux, "moe_aux_loss": aux_loss}

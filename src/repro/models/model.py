@@ -1,0 +1,656 @@
+"""Top-level model assembly: init / forward / loss / decode for all
+families (dense, moe, hybrid, ssm, mamba, audio, vlm).
+
+Layers are stacked and executed with ``lax.scan`` so the HLO stays compact
+at any depth (essential for 40-cell dry-run compiles).  Heterogeneous
+families (zamba2's shared attention, xlstm's sLSTM cadence) scan over
+repeating *groups*.
+
+Every forward accepts ``qctx``:
+  None                      -- fp
+  {"mode": "calib"}         -- emit per-site activation stats (stacked per
+                               layer by the scan)
+  {"mode": "quant", "spec", "scales", "qw"}  -- quantized execution; the
+                               scales/qw trees carry a leading layer axis
+                               and ride the scan alongside the weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import common
+from repro.models.attention import init_kv_cache
+from repro.models.mamba import (init_mamba_block, init_mamba_state,
+                                mamba_block, mamba_block_step)
+from repro.models.transformer import (decoder_layer, encoder_layer,
+                                      init_decoder_layer,
+                                      init_encoder_layer,
+                                      sinusoidal_positions)
+from repro.models.xlstm import (init_mlstm_block, init_mlstm_state,
+                                init_slstm_block, init_slstm_state,
+                                mlstm_block, mlstm_block_step, slstm_block,
+                                slstm_block_step)
+from repro.models.zamba import (init_mamba2_block, init_mamba2_state,
+                                mamba2_block, mamba2_block_step)
+
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stack_init(init_fn, key: jax.Array, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _layer_qctx(qctx, sc, qw):
+    if qctx is None or qctx.get("mode") != "quant":
+        return qctx
+    out = {"mode": "quant", "spec": qctx["spec"], "scales": sc, "qw": qw}
+    if qctx.get("int8_compute"):
+        out["int8_compute"] = True
+    return out
+
+
+def _scan_blocks(block_fn, x, layers_p, qctx, qname: str,
+                 remat: bool = False):
+    """Scan a stacked block over ``x``.  block_fn(lp, x, qctx)->(x, aux)."""
+    quant = qctx is not None and qctx.get("mode") == "quant"
+    if quant:
+        xs = (layers_p, qctx["scales"][qname], qctx["qw"][qname])
+
+        def body(h, t):
+            lp, sc, qw = t
+            return block_fn(lp, h, _layer_qctx(qctx, sc, qw))
+    else:
+        xs = layers_p
+
+        def body(h, lp):
+            return block_fn(lp, h, qctx)
+
+    if remat:
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, x, xs)
+
+
+def _scan_blocks_cache(step_fn, x, layers_p, caches, qctx, qname: str):
+    """Scan a stacked decode step with per-layer cache/state."""
+    quant = qctx is not None and qctx.get("mode") == "quant"
+    if quant:
+        xs = (layers_p, caches, qctx["scales"][qname], qctx["qw"][qname])
+
+        def body(h, t):
+            lp, c, sc, qw = t
+            out, new_c = step_fn(lp, h, c, _layer_qctx(qctx, sc, qw))
+            return out, new_c
+    else:
+        xs = (layers_p, caches)
+
+        def body(h, t):
+            lp, c = t
+            out, new_c = step_fn(lp, h, c, qctx)
+            return out, new_c
+    return jax.lax.scan(body, x, xs)
+
+
+def _group_tree(tree, groups: int, per: int):
+    """Reshape stacked (G*P, ...) leaves to (G, P, ...)."""
+    return jax.tree.map(
+        lambda a: a[: groups * per].reshape((groups, per) + a.shape[1:]),
+        tree)
+
+
+def _tail_tree(tree, start: int):
+    return jax.tree.map(lambda a: a[start:], tree)
+
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array,
+           dtype) -> jax.Array:
+    return params["embed"].astype(dtype)[tokens]
+
+
+def _logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = common.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"])
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32))
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict:
+    cfg.validate()
+    keys = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": common.embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.dense_init(keys[1], cfg.d_model,
+                                         cfg.vocab_size)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["layers"] = _stack_init(
+            lambda k: init_decoder_layer(k, cfg), keys[2], cfg.n_layers)
+    elif fam == "moe":
+        p["layers"] = _stack_init(
+            lambda k: init_decoder_layer(k, cfg, use_moe=True), keys[2],
+            cfg.n_layers)
+    elif fam == "audio":
+        p["enc_layers"] = _stack_init(
+            lambda k: init_encoder_layer(k, cfg), keys[2],
+            cfg.n_enc_layers)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["layers"] = _stack_init(
+            lambda k: init_decoder_layer(k, cfg, cross=True), keys[3],
+            cfg.n_layers)
+    elif fam == "mamba":
+        p["layers"] = _stack_init(
+            lambda k: init_mamba_block(k, cfg), keys[2], cfg.n_layers)
+    elif fam == "hybrid":
+        p["layers"] = _stack_init(
+            lambda k: init_mamba2_block(k, cfg), keys[2], cfg.n_layers)
+        p["shared"] = init_decoder_layer(keys[3], cfg)
+    elif fam == "ssm":
+        groups, per = _xlstm_layout(cfg)
+        p["m_blocks"] = jax.vmap(
+            lambda k: _stack_init(lambda kk: init_mlstm_block(kk, cfg),
+                                  k, per))(jax.random.split(keys[2],
+                                                            groups))
+        p["s_blocks"] = _stack_init(
+            lambda k: init_slstm_block(k, cfg), keys[3], groups)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def _xlstm_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(groups, mlstm_per_group): pattern = per mLSTM then 1 sLSTM."""
+    k = cfg.slstm_every
+    assert k > 1 and cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k, k - 1
+
+
+def _hybrid_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(groups, per, tail): shared attn after each group of ``per``."""
+    per = cfg.attn_period
+    groups = cfg.n_layers // per
+    tail = cfg.n_layers - groups * per
+    return groups, per, tail
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: Dict, cfg: ModelConfig, batch: Dict, qctx=None,
+            remat: bool = False) -> Tuple[jax.Array, Dict]:
+    """Returns (logits, aux).  batch keys by family:
+      lm families: tokens (B, L)
+      audio:       frames (B, Le, d) + tokens (B, Ld)
+      vlm:         patches (B, P, d) + tokens (B, Lt)
+    """
+    dt = _dtype(cfg)
+    fam = cfg.family
+    aux_out: Dict = {}
+
+    if fam == "audio":
+        frames = batch["frames"].astype(dt)
+        le = frames.shape[1]
+        frames = frames + sinusoidal_positions(le, cfg.d_model
+                                               ).astype(dt)[None]
+        enc, enc_aux = _scan_blocks(
+            lambda lp, h, q: encoder_layer(lp, cfg, h, qctx=q),
+            frames, params["enc_layers"], qctx, "enc_layers", remat)
+        enc = common.rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
+        aux_out["enc_layers"] = enc_aux
+        x = _embed(params, cfg, batch["tokens"], dt)
+        x, dec_aux = _scan_blocks(
+            lambda lp, h, q: decoder_layer(
+                lp, cfg, h, mask_kind="causal", enc_out=enc, qctx=q)[:2],
+            x, params["layers"], qctx, "layers", remat)
+        aux_out["layers"] = dec_aux
+        return _logits(params, cfg, x), aux_out
+
+    if fam == "vlm":
+        text = _embed(params, cfg, batch["tokens"], dt)
+        x = jnp.concatenate([batch["patches"].astype(dt), text], axis=1)
+        x, aux = _scan_blocks(
+            lambda lp, h, q: decoder_layer(
+                lp, cfg, h, mask_kind="prefix", qctx=q)[:2],
+            x, params["layers"], qctx, "layers", remat)
+        aux_out["layers"] = aux
+        logits = _logits(params, cfg, x[:, cfg.prefix_len:])
+        return logits, aux_out
+
+    x = _embed(params, cfg, batch["tokens"], dt)
+
+    if fam in ("dense", "moe"):
+        x, aux = _scan_blocks(
+            lambda lp, h, q: decoder_layer(
+                lp, cfg, h, mask_kind="causal", qctx=q)[:2],
+            x, params["layers"], qctx, "layers", remat)
+        aux_out["layers"] = aux
+    elif fam == "mamba":
+        x, aux = _scan_blocks(
+            lambda lp, h, q: mamba_block(lp, cfg, h, qctx=q),
+            x, params["layers"], qctx, "layers", remat)
+        aux_out["layers"] = aux
+    elif fam == "hybrid":
+        groups, per, tail = _hybrid_layout(cfg)
+        gp = _group_tree(params["layers"], groups, per)
+        quant = qctx is not None and qctx.get("mode") == "quant"
+        g_sc = (_group_tree(qctx["scales"]["layers"], groups, per)
+                if quant else None)
+        g_qw = (_group_tree(qctx["qw"]["layers"], groups, per)
+                if quant else None)
+
+        def group_body(h, t):
+            if quant:
+                lp, sc, qw = t
+                gq = {"mode": "quant", "spec": qctx["spec"],
+                      "scales": {"g": sc}, "qw": {"g": qw},
+                      "int8_compute": qctx.get("int8_compute", False)}
+                h, aux = _scan_blocks(
+                    lambda q_lp, hh, q: mamba2_block(q_lp, cfg, hh, q),
+                    h, lp, gq, "g", remat)
+                shq = _layer_qctx(qctx, qctx["scales"]["shared"],
+                                  qctx["qw"]["shared"])
+            else:
+                lp = t
+                h, aux = _scan_blocks(
+                    lambda q_lp, hh, q: mamba2_block(q_lp, cfg, hh, q),
+                    h, lp, qctx, "g", remat)
+                shq = qctx
+            h, aux_s, _ = decoder_layer(params["shared"], cfg, h,
+                                        mask_kind="causal", qctx=shq)
+            return h, (aux, aux_s)
+
+        xs = (gp, g_sc, g_qw) if quant else gp
+        x, (aux_m, aux_s) = jax.lax.scan(group_body, x, xs)
+        aux_out["layers"] = aux_m
+        aux_out["shared"] = aux_s
+        if tail:
+            tp = _tail_tree(params["layers"], groups * per)
+            tq = qctx
+            if quant:
+                tq = {"mode": "quant", "spec": qctx["spec"],
+                      "scales": {"t": _tail_tree(qctx["scales"]["layers"],
+                                                 groups * per)},
+                      "qw": {"t": _tail_tree(qctx["qw"]["layers"],
+                                             groups * per)}}
+            x, aux_t = _scan_blocks(
+                lambda lp, hh, q: mamba2_block(lp, cfg, hh, q),
+                x, tp, tq, "t", remat)
+            aux_out["tail"] = aux_t
+    elif fam == "ssm":
+        groups, per = _xlstm_layout(cfg)
+        quant = qctx is not None and qctx.get("mode") == "quant"
+
+        def group_body(h, t):
+            if quant:
+                (mp, sp), (msc, mqw), (ssc, sqw) = t
+                gq = {"mode": "quant", "spec": qctx["spec"],
+                      "scales": {"g": msc}, "qw": {"g": mqw},
+                      "int8_compute": qctx.get("int8_compute", False)}
+                h, aux_m = _scan_blocks(
+                    lambda lp, hh, q: mlstm_block(lp, cfg, hh, q),
+                    h, mp, gq, "g", remat)
+                h, aux_s = slstm_block(sp, cfg, h,
+                                       _layer_qctx(qctx, ssc, sqw))
+            else:
+                mp, sp = t
+                h, aux_m = _scan_blocks(
+                    lambda lp, hh, q: mlstm_block(lp, cfg, hh, q),
+                    h, mp, qctx, "g", remat)
+                h, aux_s = slstm_block(sp, cfg, h, qctx)
+            return h, (aux_m, aux_s)
+
+        if quant:
+            xs = ((params["m_blocks"], params["s_blocks"]),
+                  (qctx["scales"]["m_blocks"], qctx["qw"]["m_blocks"]),
+                  (qctx["scales"]["s_blocks"], qctx["qw"]["s_blocks"]))
+        else:
+            xs = (params["m_blocks"], params["s_blocks"])
+        x, (aux_m, aux_s) = jax.lax.scan(group_body, x, xs)
+        aux_out["m_blocks"] = aux_m
+        aux_out["s_blocks"] = aux_s
+    else:
+        raise ValueError(fam)
+
+    return _logits(params, cfg, x), aux_out
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict, qctx=None,
+            remat: bool = False) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, cfg, batch, qctx=qctx, remat=remat)
+    mask = batch.get("mask")
+    loss = common.cross_entropy(logits, batch["targets"], mask)
+    metrics = {"ce_loss": loss}
+    moe_aux = _collect_moe_aux(aux)
+    if moe_aux is not None:
+        loss = loss + MOE_AUX_COEF * moe_aux
+        metrics["moe_aux"] = moe_aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _collect_moe_aux(aux) -> Optional[jax.Array]:
+    vals = []
+
+    def visit(t):
+        if isinstance(t, dict):
+            for k, v in t.items():
+                if k == "moe_aux_loss":
+                    vals.append(jnp.mean(v))
+                else:
+                    visit(v)
+
+    visit(aux)
+    if not vals:
+        return None
+    return sum(vals)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _stack_state(make_one, n: int):
+    """n independent copies of a zero-initialized state tree."""
+    one = make_one()
+    return jax.tree.map(
+        lambda a: jnp.tile(a[None], (n,) + (1,) * a.ndim), one)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16) -> Dict:
+    fam = cfg.family
+    # per-row positions: continuous batching keeps independent sequences
+    # at different depths within one decode batch
+    state: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if fam in ("dense", "moe", "vlm"):
+        state["caches"] = _stack_state(
+            lambda: init_kv_cache(cfg, batch, max_len, cache_dtype),
+            cfg.n_layers)
+    elif fam == "audio":
+        state["caches"] = _stack_state(
+            lambda: init_kv_cache(cfg, batch, max_len, cache_dtype),
+            cfg.n_layers)
+        state["enc_out"] = jnp.zeros((batch, 0, cfg.d_model), _dtype(cfg))
+    elif fam == "mamba":
+        state["layers"] = _stack_state(
+            lambda: init_mamba_state(cfg, batch), cfg.n_layers)
+    elif fam == "hybrid":
+        state["layers"] = _stack_state(
+            lambda: init_mamba2_state(cfg, batch), cfg.n_layers)
+        groups, _, _ = _hybrid_layout(cfg)
+        # one KV cache per shared-attention invocation site
+        state["shared_cache"] = _stack_state(
+            lambda: init_kv_cache(cfg, batch, max_len, cache_dtype),
+            groups)
+    elif fam == "ssm":
+        groups, per = _xlstm_layout(cfg)
+        state["m_blocks"] = _stack_state(
+            lambda: _stack_state(lambda: init_mlstm_state(cfg, batch),
+                                 per), groups)
+        state["s_blocks"] = _stack_state(
+            lambda: init_slstm_state(cfg, batch), groups)
+    return state
+
+
+def decode_step(params: Dict, cfg: ModelConfig, state: Dict,
+                tokens: jax.Array, qctx=None
+                ) -> Tuple[jax.Array, Dict]:
+    """One generation step.  tokens: (B,) int32.  Returns (logits, state)."""
+    dt = _dtype(cfg)
+    fam = cfg.family
+    pos = state["pos"]
+    new_state = dict(state)
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        x = _embed(params, cfg, tokens[:, None], dt)        # (B, 1, d)
+        enc_out = state.get("enc_out") if fam == "audio" else None
+
+        def step(lp, h, cache, q):
+            h2, _, new_cache = decoder_layer(
+                lp, cfg, h, mask_kind="causal", enc_out=enc_out,
+                cache=cache, cache_pos=pos, qctx=q)
+            return h2, new_cache
+
+        x, new_caches = _scan_blocks_cache(
+            step, x, params["layers"], state["caches"], qctx, "layers")
+        new_state["caches"] = new_caches
+        x = x[:, 0]
+    elif fam == "mamba":
+        x = _embed(params, cfg, tokens, dt)                 # (B, d)
+        x, new_layers = _scan_blocks_cache(
+            lambda lp, h, c, q: mamba_block_step(lp, cfg, h, c, q),
+            x, params["layers"], state["layers"], qctx, "layers")
+        new_state["layers"] = new_layers
+    elif fam == "hybrid":
+        x = _embed(params, cfg, tokens, dt)
+        groups, per, tail = _hybrid_layout(cfg)
+        gp = _group_tree(params["layers"], groups, per)
+        gs = _group_tree(state["layers"], groups, per)
+        quant = qctx is not None and qctx.get("mode") == "quant"
+
+        def run_group(h, lp, ls, gq, sh_cache_g):
+            h, new_ls = _scan_blocks_cache(
+                lambda q_lp, hh, c, q: mamba2_block_step(
+                    q_lp, cfg, hh, c, q), h, lp, ls, gq, "g")
+            shq = (_layer_qctx(qctx, qctx["scales"]["shared"],
+                               qctx["qw"]["shared"]) if quant else qctx)
+            h2, _, new_cache = decoder_layer(
+                params["shared"], cfg, h[:, None, :], mask_kind="causal",
+                cache=sh_cache_g, cache_pos=pos, qctx=shq)
+            return h2[:, 0], new_ls, new_cache
+
+        new_groups = []
+        new_sh = []
+        h = x
+        for g in range(groups):
+            lp = jax.tree.map(lambda a: a[g], gp)
+            ls = jax.tree.map(lambda a: a[g], gs)
+            sh_cache_g = jax.tree.map(lambda a: a[g],
+                                      state["shared_cache"])
+            gq = qctx
+            if quant:
+                gq = {"mode": "quant", "spec": qctx["spec"],
+                      "scales": {"g": jax.tree.map(
+                          lambda a: a[g], _group_tree(
+                              qctx["scales"]["layers"], groups, per))},
+                      "qw": {"g": jax.tree.map(
+                          lambda a: a[g], _group_tree(
+                              qctx["qw"]["layers"], groups, per))}}
+            h, new_ls, sh_cache_g = run_group(h, lp, ls, gq, sh_cache_g)
+            new_groups.append(new_ls)
+            new_sh.append(sh_cache_g)
+        if tail:
+            tp = _tail_tree(params["layers"], groups * per)
+            ts = _tail_tree(state["layers"], groups * per)
+            tq = qctx
+            if quant:
+                tq = {"mode": "quant", "spec": qctx["spec"],
+                      "scales": {"t": _tail_tree(
+                          qctx["scales"]["layers"], groups * per)},
+                      "qw": {"t": _tail_tree(qctx["qw"]["layers"],
+                                             groups * per)}}
+            h, new_ts = _scan_blocks_cache(
+                lambda q_lp, hh, c, q: mamba2_block_step(
+                    q_lp, cfg, hh, c, q), h, tp, ts, tq, "t")
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs, 0), *new_groups)
+        flat = jax.tree.map(
+            lambda a: a.reshape((groups * per,) + a.shape[2:]), stacked)
+        if tail:
+            flat = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], 0), flat, new_ts)
+        new_state["layers"] = flat
+        new_state["shared_cache"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, 0), *new_sh)
+        x = h
+    elif fam == "ssm":
+        x = _embed(params, cfg, tokens, dt)
+        groups, per = _xlstm_layout(cfg)
+        quant = qctx is not None and qctx.get("mode") == "quant"
+        new_m, new_s = [], []
+        h = x
+        for g in range(groups):
+            mp = jax.tree.map(lambda a: a[g], params["m_blocks"])
+            ms = jax.tree.map(lambda a: a[g], state["m_blocks"])
+            gq = qctx
+            sq = qctx
+            if quant:
+                gq = {"mode": "quant", "spec": qctx["spec"],
+                      "scales": {"g": jax.tree.map(
+                          lambda a: a[g], qctx["scales"]["m_blocks"])},
+                      "qw": {"g": jax.tree.map(
+                          lambda a: a[g], qctx["qw"]["m_blocks"])}}
+                sq = _layer_qctx(
+                    qctx,
+                    jax.tree.map(lambda a: a[g],
+                                 qctx["scales"]["s_blocks"]),
+                    jax.tree.map(lambda a: a[g], qctx["qw"]["s_blocks"]))
+            h, ms_new = _scan_blocks_cache(
+                lambda lp, hh, c, q: mlstm_block_step(lp, cfg, hh, c, q),
+                h, mp, ms, gq, "g")
+            sp = jax.tree.map(lambda a: a[g], params["s_blocks"])
+            ss = jax.tree.map(lambda a: a[g], state["s_blocks"])
+            h, ss_new = slstm_block_step(sp, cfg, h, ss, sq)
+            new_m.append(ms_new)
+            new_s.append(ss_new)
+        new_state["m_blocks"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, 0), *new_m)
+        new_state["s_blocks"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, 0), *new_s)
+        x = h
+    else:
+        raise ValueError(fam)
+
+    new_state["pos"] = pos + 1
+    logits = _logits(params, cfg, x[None] if x.ndim == 1 else x)
+    if logits.ndim == 3:
+        logits = logits[:, 0] if logits.shape[1] == 1 else logits[:, -1]
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """Model inputs for train/prefill shapes (paper-style stand-ins)."""
+    b, L = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = _dtype(cfg)
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "audio":
+        le = (3 * L // 4 // 128) * 128
+        ld = L - le
+        batch = {"frames": sds((b, le, cfg.d_model), dt),
+                 "tokens": sds((b, ld), i32)}
+        if shape.kind == "train":
+            batch["targets"] = sds((b, ld), i32)
+        return batch
+    if cfg.family == "vlm":
+        lt = L - cfg.prefix_len
+        batch = {"patches": sds((b, cfg.prefix_len, cfg.d_model), dt),
+                 "tokens": sds((b, lt), i32)}
+        if shape.kind == "train":
+            batch["targets"] = sds((b, lt), i32)
+        return batch
+    batch = {"tokens": sds((b, L), i32)}
+    if shape.kind == "train":
+        batch["targets"] = sds((b, L), i32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple:
+    """(state_specs, token_spec) for decode shapes: one new token against
+    a cache of shape.seq_len."""
+    b = shape.global_batch
+    state = jax.eval_shape(
+        lambda: init_decode_state(cfg, b, shape.seq_len))
+    if cfg.family == "audio":
+        le = (3 * shape.seq_len // 4 // 128) * 128
+        state = dict(state)
+        state["enc_out"] = jax.ShapeDtypeStruct(
+            (b, le, cfg.d_model), _dtype(cfg))
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return state, token
+
+
+def reset_slot(cfg: ModelConfig, state: Dict, i: int) -> Dict:
+    """Zero one decode slot (serving engine slot reuse).
+
+    Attention KV caches need no clearing -- stale entries sit beyond the
+    per-row position mask.  Recurrent states (conv tails, SSM/mLSTM/sLSTM
+    states) must be zeroed; the mLSTM stabilizer resets to -inf.
+    """
+    new = dict(state)
+    new["pos"] = state["pos"].at[i].set(0)
+    fam = cfg.family
+
+    def zero_axis(tree, axis: int):
+        def one(a):
+            idx = (slice(None),) * axis + (i,)
+            return a.at[idx].set(jnp.zeros_like(a[idx]))
+        return jax.tree.map(one, tree)
+
+    if fam == "mamba" or fam == "hybrid":
+        new["layers"] = zero_axis(state["layers"], 1)
+    if fam == "ssm":
+        mb = zero_axis(state["m_blocks"], 2)
+        mb = dict(mb)
+        mb["m"] = state["m_blocks"]["m"].at[:, :, i].set(-1e30)
+        new["m_blocks"] = mb
+        new["s_blocks"] = zero_axis(state["s_blocks"], 1)
+    return new
+
+
+def _batch_axis_map(cfg: ModelConfig):
+    """Batch-dim axis of each top-level decode-state entry."""
+    fam = cfg.family
+    axes = {"pos": 0}
+    if fam in ("dense", "moe", "vlm", "audio"):
+        axes["caches"] = 1
+        if fam == "audio":
+            axes["enc_out"] = 0
+    elif fam in ("mamba", "hybrid"):
+        axes["layers"] = 1
+        if fam == "hybrid":
+            axes["shared_cache"] = 1
+    elif fam == "ssm":
+        axes["m_blocks"] = 2
+        axes["s_blocks"] = 1
+    return axes
+
+
+def merge_slot(cfg: ModelConfig, old: Dict, new: Dict, i: int) -> Dict:
+    """Take slot ``i`` of ``new`` and keep every other slot from ``old``
+    (serving engine: prefill one slot without disturbing live ones)."""
+    axes = _batch_axis_map(cfg)
+    out = {}
+    for key, axis in axes.items():
+        if key not in old:
+            continue
+
+        def one(o, n, axis=axis):
+            idx = (slice(None),) * axis + (i,)
+            return o.at[idx].set(n[idx])
+
+        out[key] = jax.tree.map(one, old[key], new[key])
+    return out

@@ -1,0 +1,299 @@
+"""Model quantization transform: (fp params, calibration stats, QuantSpec)
+-> (adjusted params, quant-context data) for every architecture family.
+
+This is where the paper's recipe is wired site-by-site:
+  * static per-tensor scales from calibrated abs-max (Eq. 2)
+  * the SSM input ``x`` scale from the percentile max (§4.2)
+  * ``out_proj`` is quantized with the Hadamard rotation folded in
+    (W_out^H = H W_out), paired with the rotated activation scale ``y_had``
+  * SmoothQuant-SSM folds per-channel factors into (norm, in_proj) and
+    (conv, x_proj) pairs; QuaRot-SSM adds the rotated-input path
+  * conv weights are fake-quantized in place (the fused int8 conv of §4.3)
+  * MoE expert weights get weight-only int8 (the LLM.int8 analogue the
+    paper pairs with Quamba on Jamba, Table 4)
+
+Returned qdata = {"scales": ..., "qw": ...} mirrors the layer-stacked
+structure that ``repro.models.model`` scans over.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.quant import quantizers as Q
+from repro.quant import recipe as qrecipe
+from repro.quant.baselines import fold_smoothing, smoothquant_factors
+from repro.quant.observers import stats_scale
+
+
+def make_qctx(spec: qrecipe.QuantSpec, qdata: Dict,
+              int8_compute: bool = False) -> Dict:
+    out = {"mode": "quant", "spec": spec, **qdata}
+    if int8_compute:
+        out["int8_compute"] = True
+    return out
+
+
+def _scale(stats, site: str, percentile: float = 100.0):
+    return stats_scale(stats[site], percentile=percentile)
+
+
+def _qw(w, spec, fold_had: bool = False, stacked: bool = True):
+    fn = lambda wi: qrecipe.quantize_weight(
+        wi, spec, fold_hadamard_axis=0 if fold_had else None)
+    return jax.vmap(fn)(w) if stacked else fn(w)
+
+
+def _wqdq(w, spec):
+    """In-place weight fake-quant (conv weights)."""
+    s = Q.symmetric_scale(w, bits=spec.w_bits)
+    return Q.qdq(w, s, bits=spec.w_bits)
+
+
+def _wqdq_experts(w, spec):
+    """Per-expert weight fake-quant: w (..., E, in, out) with leading
+    layer/expert batch dims -> one scale per (layer, expert)."""
+    flat = w.reshape((-1,) + w.shape[-2:])
+    out = jax.vmap(lambda wi: _wqdq(wi, spec))(flat)
+    return out.reshape(w.shape)
+
+
+# ---------------------------------------------------------------------------
+# per-block-type site maps
+# ---------------------------------------------------------------------------
+
+def _mamba_layer(params_l, stats_l, spec, cfg):
+    """Stacked mamba-1 layers -> (new params, scales, qw)."""
+    p = dict(params_l)
+    if spec.method == "smoothquant":
+        # Fold per-channel smoothing into (norm, in_proj) only.  The SSM
+        # input x feeds BOTH x_proj and the scan itself, so smoothing the
+        # x_proj pair would corrupt the recurrence (this is exactly why
+        # SmQ-SSM "fails to address the sensitive x tensor", paper §5.3).
+        def fold_one(norm, w_in, cmax_in):
+            s1 = smoothquant_factors(cmax_in, w_in, spec.smooth_alpha)
+            norm, w_in = fold_smoothing(norm, w_in, s1)
+            new_amax = jnp.max(cmax_in / s1)
+            return norm, w_in, jnp.maximum(new_amax, 1e-8) / 127.0
+
+        (p["norm"], p["in_proj"], s_in) = jax.vmap(fold_one)(
+            p["norm"], p["in_proj"], stats_l["in"]["cmax"])
+        s_x = _scale(stats_l, "x")           # minmax: x left unsmoothed
+    else:
+        s_in = _scale(stats_l, "in")
+        s_x = _scale(stats_l, "x", spec.x_percentile)
+
+    scales = {
+        "in": s_in,
+        "conv_in": _scale(stats_l, "conv_in"),
+        "x": s_x,
+        "x_had": _scale(stats_l, "x_had"),
+        "dt_low": _scale(stats_l, "dt_low"),
+        "dt": _scale(stats_l, "dt"),
+        "B": _scale(stats_l, "B"),
+        "C": _scale(stats_l, "C"),
+        "y": _scale(stats_l, "y"),
+        "y_had": _scale(stats_l, "y_had"),
+        "A": jax.vmap(lambda a: Q.symmetric_scale(-jnp.exp(a)))(
+            p["A_log"]),
+        # linear input scales (site name = weight name)
+        "in_proj": s_in,
+        "x_proj": s_x if spec.method != "quarot" else _scale(stats_l, "x"),
+        "dt_proj": _scale(stats_l, "dt_low"),
+        "out_proj": _scale(stats_l, "y"),
+        "out_proj_had": _scale(stats_l, "y_had"),
+    }
+    qw = {
+        "in_proj": _qw(p["in_proj"], spec),
+        "x_proj": _qw(p["x_proj"], spec),
+        "dt_proj": _qw(p["dt_proj"], spec),
+        "out_proj": _qw(p["out_proj"], spec),
+        "out_proj_had": _qw(p["out_proj"], spec, fold_had=True),
+    }
+    p["conv_w"] = jax.vmap(lambda w: _wqdq(w, spec))(p["conv_w"])
+    return p, scales, qw
+
+
+def _attn_scales_qw(p_attn, stats_l, spec, prefix: str = "",
+                    stacked: bool = True):
+    s_in = _scale(stats_l, prefix + "attn_in")
+    s_o = _scale(stats_l, prefix + "o_in")
+    scales = {"wq": s_in, "wk": s_in, "wv": s_in, "wo": s_o}
+    qw = {k: _qw(p_attn[k], spec, stacked=stacked)
+          for k in ("wq", "wk", "wv", "wo")}
+    return scales, qw
+
+
+def _mlp_scales_qw(p_mlp, stats_l, spec, stacked: bool = True):
+    scales = {"mlp_wi": _scale(stats_l, "mlp_in"),
+              "mlp_wo": _scale(stats_l, "down_in")}
+    qw = {"mlp_wi": _qw(p_mlp["wi"], spec, stacked=stacked),
+          "mlp_wo": _qw(p_mlp["wo"], spec, stacked=stacked)}
+    return scales, qw
+
+
+def _decoder_layer(params_l, stats_l, spec, cfg, cross=False,
+                   use_moe=False, stacked=True):
+    p = dict(params_l)
+    if spec.method == "smoothquant":
+        def fold_one(ln1, wq, wk, wv, cmax):
+            s = smoothquant_factors(cmax, wq, spec.smooth_alpha)
+            ln1 = ln1 / s
+            shape = (-1, 1)
+            return (ln1, wq * s.reshape(shape), wk * s.reshape(shape),
+                    wv * s.reshape(shape))
+        fold = jax.vmap(fold_one) if stacked else fold_one
+        attn = dict(p["attn"])
+        (p["ln1"], attn["wq"], attn["wk"], attn["wv"]) = fold(
+            p["ln1"], p["attn"]["wq"], p["attn"]["wk"], p["attn"]["wv"],
+            stats_l["attn_in"]["cmax"])
+        p["attn"] = attn
+
+    scales: Dict = {}
+    qw: Dict = {}
+    scales["attn"], qw["attn"] = _attn_scales_qw(
+        p["attn"], stats_l, spec, stacked=stacked)
+    if cross:
+        scales["xattn"], qw["xattn"] = _attn_scales_qw(
+            p["xattn"], stats_l, spec, prefix="x_", stacked=stacked)
+    if use_moe:
+        moe_p = dict(p["moe"])
+        # weight-only int8 per expert (the LLM.int8 analogue, Table 4)
+        moe_p["wi"] = _wqdq_experts(moe_p["wi"], spec)
+        moe_p["wo"] = _wqdq_experts(moe_p["wo"], spec)
+        p["moe"] = moe_p
+        scales["moe"], qw["moe"] = {}, {}
+    else:
+        scales["mlp"], qw["mlp"] = _mlp_scales_qw(
+            p["mlp"], stats_l, spec, stacked=stacked)
+    return p, scales, qw
+
+
+def _mamba2_layer(params_l, stats_l, spec, cfg):
+    p = dict(params_l)
+    s_in = _scale(stats_l, "in")
+    s_x = _scale(stats_l, "x", spec.x_percentile)
+    scales = {
+        "in": s_in, "x": s_x,
+        "y": _scale(stats_l, "y"), "y_had": _scale(stats_l, "y_had"),
+        "in_proj": s_in,
+        "out_proj": _scale(stats_l, "y"),
+        "out_proj_had": _scale(stats_l, "y_had"),
+    }
+    qw = {
+        "in_proj": _qw(p["in_proj"], spec),
+        "out_proj": _qw(p["out_proj"], spec),
+        "out_proj_had": _qw(p["out_proj"], spec, fold_had=True),
+    }
+    p["conv_w"] = jax.vmap(lambda w: _wqdq(w, spec))(p["conv_w"])
+    return p, scales, qw
+
+
+def _mlstm_layer(params_l, stats_l, spec, cfg, stacked=True):
+    p = dict(params_l)
+    s_in = _scale(stats_l, "in")
+    s_v = _scale(stats_l, "v", spec.x_percentile)
+    scales = {
+        "in": s_in, "v": s_v,
+        "y": _scale(stats_l, "y"), "y_had": _scale(stats_l, "y_had"),
+        "up_proj": s_in,
+        "wq": _scale(stats_l, "v"), "wk": _scale(stats_l, "v"),
+        "wv": _scale(stats_l, "v"), "w_gates": _scale(stats_l, "v"),
+        "down_proj": _scale(stats_l, "y"),
+        "down_proj_had": _scale(stats_l, "y_had"),
+    }
+    qw = {k: _qw(p[k], spec, stacked=stacked)
+          for k in ("up_proj", "wq", "wk", "wv", "w_gates", "down_proj")}
+    qw["down_proj_had"] = _qw(p["down_proj"], spec, fold_had=True,
+                              stacked=stacked)
+    p["conv_w"] = (jax.vmap(lambda w: _wqdq(w, spec))(p["conv_w"])
+                   if stacked else _wqdq(p["conv_w"], spec))
+    return p, scales, qw
+
+
+def _slstm_layer(params_l, stats_l, spec, cfg):
+    p = dict(params_l)
+    scales = {
+        "in": _scale(stats_l, "in"),
+        "w_in": _scale(stats_l, "in"),
+        "up": _scale(stats_l, "ffn_in"),
+        "down": _scale(stats_l, "ffn_down_in"),
+    }
+    qw = {k: _qw(p[k], spec) for k in ("w_in", "up", "down")}
+    return p, scales, qw
+
+
+# ---------------------------------------------------------------------------
+# top level
+# ---------------------------------------------------------------------------
+
+def quantize_model(params: Dict, stats: Dict, cfg: ModelConfig,
+                   spec: qrecipe.QuantSpec) -> Tuple[Dict, Dict]:
+    """Returns (new_params, qdata).  Use ``make_qctx(spec, qdata)`` as the
+    forward's qctx."""
+    spec.validate()
+    new_params = dict(params)
+    scales: Dict = {}
+    qw: Dict = {}
+    fam = cfg.family
+    if fam == "mamba":
+        new_params["layers"], scales["layers"], qw["layers"] = \
+            _mamba_layer(params["layers"], stats["layers"], spec, cfg)
+    elif fam in ("dense", "vlm", "moe"):
+        new_params["layers"], scales["layers"], qw["layers"] = \
+            _decoder_layer(params["layers"], stats["layers"], spec, cfg,
+                           use_moe=(fam == "moe"))
+    elif fam == "audio":
+        enc_p = dict(params["enc_layers"])
+        sc_e: Dict = {}
+        qw_e: Dict = {}
+        sc_e["attn"], qw_e["attn"] = _attn_scales_qw(
+            enc_p["attn"], stats["enc_layers"], spec)
+        sc_e["mlp"], qw_e["mlp"] = _mlp_scales_qw(
+            enc_p["mlp"], stats["enc_layers"], spec)
+        scales["enc_layers"], qw["enc_layers"] = sc_e, qw_e
+        new_params["layers"], scales["layers"], qw["layers"] = \
+            _decoder_layer(params["layers"], stats["layers"], spec, cfg,
+                           cross=True)
+    elif fam == "hybrid":
+        # stats come back grouped (groups, per, ...) by the group scan,
+        # plus an optional flat "tail"; flatten to match stacked params.
+        flat_stats = jax.tree.map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), stats["layers"])
+        if "tail" in stats:
+            flat_stats = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                flat_stats, stats["tail"])
+        new_params["layers"], scales["layers"], qw["layers"] = \
+            _mamba2_layer(params["layers"], flat_stats, spec, cfg)
+        # shared block stats come back stacked over group invocations;
+        # reduce with max for one shared scale set.
+        sh_stats = jax.tree.map(lambda a: jnp.max(a, axis=0),
+                                stats["shared"])
+        new_params["shared"], scales["shared"], qw["shared"] = \
+            _decoder_layer(params["shared"], sh_stats, spec, cfg,
+                           stacked=False)
+    elif fam == "ssm":
+        # m_blocks stacked (groups, per, ...): flatten, quantize, reshape
+        g, per = params["m_blocks"]["norm"].shape[0], \
+            params["m_blocks"]["norm"].shape[1]
+        flat_p = jax.tree.map(
+            lambda a: a.reshape((g * per,) + a.shape[2:]),
+            params["m_blocks"])
+        flat_s = jax.tree.map(
+            lambda a: a.reshape((g * per,) + a.shape[2:]),
+            stats["m_blocks"])
+        np_, sc_m, qw_m = _mlstm_layer(flat_p, flat_s, spec, cfg)
+        reshape_back = lambda t: jax.tree.map(
+            lambda a: a.reshape((g, per) + a.shape[1:]), t)
+        new_params["m_blocks"] = reshape_back(np_)
+        scales["m_blocks"] = reshape_back(sc_m)
+        qw["m_blocks"] = reshape_back(qw_m)
+        new_params["s_blocks"], scales["s_blocks"], qw["s_blocks"] = \
+            _slstm_layer(params["s_blocks"], stats["s_blocks"], spec, cfg)
+    else:
+        raise ValueError(fam)
+    return new_params, {"scales": scales, "qw": qw}

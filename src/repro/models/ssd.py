@@ -1,0 +1,112 @@
+"""Chunked SSD (Mamba-2) linear recurrence, pure jnp.
+
+State-space dual form: per head h with scalar decay a_t = exp(dt_t * A_h),
+    S_t = a_t S_{t-1} + dt_t * B_t (x) x_t          (S: (n, hd))
+    y_t = C_t S_t + D_h x_t
+
+Computed chunkwise so nothing of size O(L * n * hd) is materialized:
+intra-chunk contributions use (T x T) decay-masked score matmuls (MXU
+friendly), inter-chunk state is carried by a short lax.scan over chunks.
+Used by the Zamba2 backbone; the quantized path feeds it percentile-
+clipped x (Quamba's recipe transferred to Mamba-2, see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_head: jax.Array,
+                bmat: jax.Array, cmat: jax.Array, d_head: jax.Array,
+                chunk: int = 128, h0: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """x (b,L,h,hd); dt (b,L,h); a_head (h,) negative; bmat/cmat (b,L,n);
+    d_head (h,).  Returns y (b,L,h,hd) [and final state (b,h,n,hd)]."""
+    b, L, h, hd = x.shape
+    n = bmat.shape[-1]
+    t = min(chunk, L)
+    assert L % t == 0, (L, t)
+    nc = L // t
+    f32 = jnp.float32
+
+    xr = x.astype(f32).reshape(b, nc, t, h, hd)
+    dtr = dt.astype(f32).reshape(b, nc, t, h)
+    br = bmat.astype(f32).reshape(b, nc, t, n)
+    cr = cmat.astype(f32).reshape(b, nc, t, n)
+
+    # log decay per step and cumulative within chunk
+    la = dtr * a_head.astype(f32)                     # (b,nc,t,h) (<0)
+    lcum = jnp.cumsum(la, axis=2)                     # cumulative log decay
+
+    # ---- intra-chunk: y[t'] += sum_{s<=t'} C_t'.B_s e^{lcum_t'-lcum_s} dt_s x_s
+    cb = jnp.einsum("bctn,bcsn->bcts", cr, br)        # (b,nc,t,t)
+    decay = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (b,nc,t,s,h)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    # mask BEFORE exp: the upper triangle holds large positive values
+    # whose exp overflows and poisons gradients via inf * 0
+    decay = jnp.where(mask[None, None, :, :, None], decay, -1e30)
+    scores = jnp.exp(decay) * cb[..., None]           # (b,nc,t,s,h)
+    dx = dtr[..., None] * xr                          # (b,nc,t,h,hd)
+    y_intra = jnp.einsum("bctsh,bcshd->bcthd", scores, dx)
+
+    # ---- chunk summary state: S_c = sum_s e^{lcum_T - lcum_s} dt_s B_s (x) x_s
+    tail = lcum[:, :, -1:, :] - lcum                  # (b,nc,t,h)
+    sb = jnp.einsum("bcsn,bcsh,bcshd->bchnd",
+                    br, jnp.exp(tail) * dtr, xr)      # (b,nc,h,n,hd)
+
+    # ---- inter-chunk scan carrying S (b,h,n,hd)
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])          # (b,nc,h)
+
+    def body(s_prev, inp):
+        dec, s_c = inp                                # (b,h), (b,h,n,hd)
+        s_new = dec[..., None, None] * s_prev + s_c
+        return s_new, s_prev
+
+    s_init = (h0.astype(f32) if h0 is not None
+              else jnp.zeros((b, h, n, hd), f32))
+    s_last, s_prevs = jax.lax.scan(
+        body, s_init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(sb, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)             # (b,nc,h,n,hd)
+
+    # ---- inter-chunk contribution: y[t'] += C_t' e^{lcum_t'} S_prev
+    y_inter = jnp.einsum("bctn,bcth,bchnd->bcthd",
+                         cr, jnp.exp(lcum), s_prevs)
+
+    y = (y_intra + y_inter).reshape(b, L, h, hd)
+    y = y + d_head.astype(f32)[None, None, :, None] * x.astype(f32)
+    if return_state:
+        return y, s_last
+    return y
+
+
+def ssd_step(s: jax.Array, x: jax.Array, dt: jax.Array, a_head: jax.Array,
+             bmat: jax.Array, cmat: jax.Array, d_head: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step.  s (b,h,n,hd); x (b,h,hd); dt (b,h);
+    bmat/cmat (b,n).  Returns (y (b,h,hd), s_new)."""
+    f32 = jnp.float32
+    dec = jnp.exp(dt.astype(f32) * a_head.astype(f32))        # (b,h)
+    contrib = jnp.einsum("bn,bhd->bhnd", bmat.astype(f32),
+                         dt.astype(f32)[..., None] * x.astype(f32))
+    s_new = dec[..., None, None] * s.astype(f32) + contrib
+    y = jnp.einsum("bn,bhnd->bhd", cmat.astype(f32), s_new)
+    y = y + d_head.astype(f32)[None, :, None] * x.astype(f32)
+    return y, s_new
+
+
+def ssd_reference(x, dt, a_head, bmat, cmat, d_head, h0=None):
+    """Slow sequential oracle for tests."""
+    b, L, h, hd = x.shape
+    n = bmat.shape[-1]
+    s = (h0.astype(jnp.float32) if h0 is not None
+         else jnp.zeros((b, h, n, hd), jnp.float32))
+    ys = []
+    for i in range(L):
+        y, s = ssd_step(s, x[:, i], dt[:, i], a_head, bmat[:, i],
+                        cmat[:, i], d_head)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), s

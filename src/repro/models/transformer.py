@@ -1,0 +1,110 @@
+"""Transformer layers: decoder (self-attn [+ cross-attn] + MLP/MoE) and
+encoder, shared by the dense / moe / audio / vlm families and by Zamba2's
+shared block."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.attention import attention, init_attention, init_kv_cache
+from repro.models.mlp import init_mlp, init_moe, mlp, moe
+
+
+def init_decoder_layer(key: jax.Array, cfg: ModelConfig, *,
+                       cross: bool = False, use_moe: bool = False) -> Dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": jnp.ones((d,), jnp.float32),
+    }
+    if cross:
+        p["lnx"] = jnp.ones((d,), jnp.float32)
+        p["xattn"] = init_attention(ks[2], cfg)
+    if use_moe:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff)
+    return p
+
+
+def decoder_layer(p: Dict, cfg: ModelConfig, x: jax.Array, *,
+                  mask_kind: str = "causal",
+                  enc_out: Optional[jax.Array] = None,
+                  cache: Optional[Dict] = None,
+                  cache_pos: Optional[jax.Array] = None,
+                  use_rope: bool = True,
+                  qctx=None) -> Tuple[jax.Array, Dict, Optional[Dict]]:
+    """Returns (x, aux, new_cache)."""
+    use_moe = "moe" in p
+    h = common.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, aux1, new_cache = attention(
+        p["attn"], cfg, h, mask_kind=mask_kind, cache=cache,
+        cache_pos=cache_pos, use_rope=use_rope,
+        qctx=_sub(qctx, "attn"))
+    x = x + a
+    if enc_out is not None:
+        h = common.rmsnorm(x, p["lnx"], cfg.norm_eps)
+        a, aux_x, _ = attention(p["xattn"], cfg, h, enc_out=enc_out,
+                                use_rope=False, qctx=_sub(qctx, "xattn"))
+        x = x + a
+        aux1 = {**aux1, **{f"x_{k}": v for k, v in aux_x.items()}}
+    h = common.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if use_moe:
+        m, aux2 = moe(p["moe"], cfg, h, qctx=_sub(qctx, "moe"),
+                      no_drop=cache is not None)
+    else:
+        m, aux2 = mlp(p["mlp"], h, qctx=_sub(qctx, "mlp"))
+    return x + m, {**aux1, **aux2}, new_cache
+
+
+def init_encoder_layer(key: jax.Array, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "attn": init_attention(k1, cfg),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "mlp": init_mlp(k2, d, cfg.d_ff),
+    }
+
+
+def encoder_layer(p: Dict, cfg: ModelConfig, x: jax.Array, qctx=None
+                  ) -> Tuple[jax.Array, Dict]:
+    h = common.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, aux1, _ = attention(p["attn"], cfg, h, mask_kind="none",
+                           use_rope=False, qctx=_sub(qctx, "attn"))
+    x = x + a
+    h = common.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    m, aux2 = mlp(p["mlp"], h, qctx=_sub(qctx, "mlp"))
+    return x + m, {**aux1, **aux2}
+
+
+def _sub(qctx, name: str):
+    """Narrow a layer qctx to one sub-module's scales/qw namespace."""
+    if qctx is None:
+        return None
+    if qctx.get("mode") != "quant":
+        return qctx
+    return {
+        "mode": "quant",
+        "spec": qctx["spec"],
+        "scales": qctx["scales"].get(name, {}),
+        "qw": qctx["qw"].get(name, {}),
+        "int8_compute": qctx.get("int8_compute", False),
+    }
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) *
+                  (-jnp.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe

@@ -1,0 +1,395 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM is a matrix-memory linear recurrence (exponential input gate,
+sigmoid forget gate, max-stabilizer m):
+    m_t = max(m_{t-1} + log f_t, log i_t)
+    C_t = e^{m_{t-1}+lf_t-m_t} C_{t-1} + e^{li_t-m_t} v_t k_t^T
+    n_t = e^{m_{t-1}+lf_t-m_t} n_{t-1} + e^{li_t-m_t} k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, e^{-m_t})
+
+The chunkwise form below (the TPU-friendly one: (T x T) score matmuls per
+chunk + a short scan over chunk summaries) is exactly equivalent and is
+validated against the sequential reference in tests.
+
+Quamba transfer (DESIGN.md §Arch-applicability): the recurrence input v is
+the sensitive tensor (same causal-error argument as the paper's Thm 4.1),
+so it gets the percentile clip; the cell output is rotated with a Hadamard
+matrix before the down projection, with H folded into the weight.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import is_calib, is_quant, linear
+from repro.quant.hadamard import had_transform
+from repro.quant.observers import observe
+from repro.quant import quantizers as Q
+from repro.quant import recipe as qrecipe
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell (chunkwise parallel + sequential step)
+# ---------------------------------------------------------------------------
+
+def mlstm_chunked(q, k, v, li, lf, chunk: int = 128, state=None,
+                  return_state: bool = False):
+    """q/k/v (b,L,h,hd); li/lf (b,L,h) log input/forget gates.
+    state: (C (b,h,hd,hd), n (b,h,hd), m (b,h)).  Returns h (b,L,h,hd)."""
+    b, L, h, hd = q.shape
+    t = min(chunk, L)
+    assert L % t == 0
+    nc = L // t
+    f32 = jnp.float32
+    q = q.astype(f32) * (hd ** -0.5)
+    k = k.astype(f32)
+    v = v.astype(f32)
+
+    qr = q.reshape(b, nc, t, h, hd)
+    kr = k.reshape(b, nc, t, h, hd)
+    vr = v.reshape(b, nc, t, h, hd)
+    lir = li.astype(f32).reshape(b, nc, t, h)
+    lfr = lf.astype(f32).reshape(b, nc, t, h)
+    lf_cum = jnp.cumsum(lfr, axis=2)                       # (b,nc,t,h)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), f32)
+        n0 = jnp.zeros((b, h, hd), f32)
+        m0 = jnp.full((b, h), -1e30, f32)
+    else:
+        c0, n0, m0 = (s.astype(f32) for s in state)
+
+    # intra-chunk log weights w[t,s] = lf_cum[t] - lf_cum[s] + li[s], s<=t
+    wlog = (lf_cum[:, :, :, None, :] - lf_cum[:, :, None, :, :]
+            + lir[:, :, None, :, :])                       # (b,nc,t,s,h)
+    mask = jnp.tril(jnp.ones((t, t), bool))[None, None, :, :, None]
+    wlog = jnp.where(mask, wlog, -1e30)
+
+    # chunk summaries for the inter-chunk scan
+    lf_tot = lf_cum[:, :, -1, :]                           # (b,nc,h)
+    tail = lf_tot[:, :, None, :] - lf_cum + lir            # (b,nc,t,h)
+    m_chunk = jnp.max(tail, axis=2)                        # (b,nc,h)
+
+    # local intra stabilizer per position (carry-in part added in-scan)
+    m_intra = jnp.max(wlog, axis=3)                        # (b,nc,t,h)
+
+    def scan_body(carry, inp):
+        # The q @ C_in carry contraction happens HERE so the (b,h,hd,hd)
+        # chunk states are never stacked into a (b,nc,h,hd,hd) tensor --
+        # at hd=1024 that stack dominated the memory roofline
+        # (EXPERIMENTS.md §Perf C3 iteration 2).
+        c_in, n_in, m_in = carry
+        qc, kc, vc, tail_c, lft_c, mch_c, lfcum_c, mintra_c = inp
+        m_hist = m_in[:, None, :] + lfcum_c                # (b,t,h)
+        m_loc = jnp.maximum(m_hist, mintra_c)
+        carry_w = jnp.exp(m_hist - m_loc)                  # (b,t,h)
+        y_carry = jnp.einsum("bthd,bhdv->bthv", qc, c_in) * \
+            carry_w[..., None]
+        den_carry = jnp.einsum("bthd,bhd->bth", qc, n_in) * carry_w
+
+        m_out = jnp.maximum(m_in + lft_c, mch_c)           # (b,h)
+        w = jnp.exp(tail_c - m_out[:, None, :])            # (b,t,h)
+        decay = jnp.exp(m_in + lft_c - m_out)
+        c_new = decay[..., None, None] * c_in + \
+            jnp.einsum("bth,bthk,bthv->bhkv", w, kc, vc)
+        n_new = decay[..., None] * n_in + \
+            jnp.einsum("bth,bthk->bhk", w, kc)
+        return (c_new, n_new, m_out), (y_carry, den_carry, m_loc)
+
+    xs = (jnp.moveaxis(qr, 1, 0), jnp.moveaxis(kr, 1, 0),
+          jnp.moveaxis(vr, 1, 0), jnp.moveaxis(tail, 1, 0),
+          jnp.moveaxis(lf_tot, 1, 0), jnp.moveaxis(m_chunk, 1, 0),
+          jnp.moveaxis(lf_cum, 1, 0), jnp.moveaxis(m_intra, 1, 0))
+    (c_f, n_f, m_f), (y_carry, den_carry, m_loc) = jax.lax.scan(
+        scan_body, (c0, n0, m0), xs)
+    y_carry = jnp.moveaxis(y_carry, 0, 1)                  # (b,nc,t,h,hd)
+    den_carry = jnp.moveaxis(den_carry, 0, 1)
+    m_loc = jnp.moveaxis(m_loc, 0, 1)                      # (b,nc,t,h)
+
+    scores = jnp.einsum("bcthd,bcshd->bctsh", qr, kr)      # (b,nc,t,s,h)
+    sw = scores * jnp.exp(wlog - m_loc[:, :, :, None, :])
+    y_intra = jnp.einsum("bctsh,bcshd->bcthd", sw, vr)
+    den_intra = jnp.sum(sw, axis=3)
+
+    y_raw = y_intra + y_carry
+    den = den_intra + den_carry
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))
+    out = (y_raw / denom[..., None]).reshape(b, L, h, hd)
+    if return_state:
+        return out, (c_f, n_f, m_f)
+    return out
+
+
+def mlstm_step(state, q, k, v, li, lf):
+    """Single step.  state (C (b,h,hd,hd), n, m); q/k/v (b,h,hd);
+    li/lf (b,h)."""
+    f32 = jnp.float32
+    c, n, m = (s.astype(f32) for s in state)
+    hd = q.shape[-1]
+    q = q.astype(f32) * (hd ** -0.5)
+    k, v = k.astype(f32), v.astype(f32)
+    li, lf = li.astype(f32), lf.astype(f32)
+    m_new = jnp.maximum(m + lf, li)
+    fw = jnp.exp(m + lf - m_new)
+    iw = jnp.exp(li - m_new)
+    c_new = fw[..., None, None] * c + iw[..., None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    n_new = fw[..., None] * n + iw[..., None] * k
+    y = jnp.einsum("bhk,bhkv->bhv", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    return y / den[..., None], (c_new, n_new, m_new)
+
+
+def mlstm_reference(q, k, v, li, lf, state=None):
+    b, L, h, hd = q.shape
+    if state is None:
+        state = (jnp.zeros((b, h, hd, hd)), jnp.zeros((b, h, hd)),
+                 jnp.full((b, h), -1e30))
+    ys = []
+    for i in range(L):
+        y, state = mlstm_step(state, q[:, i], k[:, i], v[:, i],
+                              li[:, i], lf[:, i])
+        ys.append(y)
+    return jnp.stack(ys, 1), state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key: jax.Array, cfg: ModelConfig) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "up_proj": common.dense_init(ks[0], d, 2 * di),    # (x, z-gate)
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.conv_width, di),
+                                          jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": common.dense_init(ks[2], di, di),
+        "wk": common.dense_init(ks[3], di, di),
+        "wv": common.dense_init(ks[4], di, di),
+        "w_gates": common.dense_init(ks[5], di, 2 * cfg.ssm_heads),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((cfg.ssm_heads,)),                    # input gate
+            3.0 * jnp.ones((cfg.ssm_heads,)),               # forget gate
+        ]).astype(jnp.float32),
+        "gnorm": jnp.ones((di,), jnp.float32),
+        "down_proj": common.dense_init(ks[6], di, d),
+    }
+
+
+def _conv_silu(x, w, b, state=None):
+    from repro.models.mamba import _depthwise_conv_silu
+    return _depthwise_conv_silu(x, w, b, state)
+
+
+def _mlstm_inner(p, cfg, xu, qctx, aux, conv_state=None, cell_state=None,
+                 seq: bool = True):
+    """Shared q/k/v/gate computation.  xu: (b, L, di) up-projected input."""
+    b = xu.shape[0]
+    heads = cfg.ssm_heads
+    di = cfg.d_inner
+    hd = di // heads
+    xc, conv_state = _conv_silu(xu, p["conv_w"], p["conv_b"], conv_state)
+    q = linear(p, "wq", xc, qctx)
+    k = linear(p, "wk", xc, qctx)
+    v = linear(p, "wv", xu, qctx, site="wv")
+    if is_calib(qctx):
+        aux["v"] = observe(v)
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        if spec.method == "dynamic":
+            v = Q.dynamic_qdq(v)
+        else:
+            v = qrecipe.ssm_input_qdq(v, qctx["scales"]["v"], spec)
+    gates = linear(p, "w_gates", xu, qctx) + p["b_gates"].astype(xu.dtype)
+    li_pre, lf_pre = jnp.split(gates, 2, axis=-1)
+    li = li_pre.astype(jnp.float32)                    # exponential in-gate
+    lf = jax.nn.log_sigmoid(lf_pre.astype(jnp.float32))
+    shp = (b, -1, heads, hd) if seq else (b, heads, hd)
+    gshp = (b, -1, heads) if seq else (b, heads)
+    # (constraining q/k/v to head_dim sharding here was measured 3x WORSE
+    # -- GSPMD's chosen all-gather schedule beats forcing local hd
+    # contractions at these shapes; §Perf C3 iteration 3, refuted)
+    return (q.reshape(shp), k.reshape(shp), v.reshape(shp),
+            li.reshape(gshp), lf.reshape(gshp), conv_state)
+
+
+def mlstm_block(p: Dict, cfg: ModelConfig, x: jax.Array, qctx=None
+                ) -> Tuple[jax.Array, Dict]:
+    aux: Dict = {}
+    b, L, d = x.shape
+    di = cfg.d_inner
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if is_calib(qctx):
+        aux["in"] = observe(h)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        h = qrecipe.act_qdq(h, qctx["scales"]["in"], qctx["spec"])
+    xz = linear(p, "up_proj", h, qctx)
+    xu, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, li, lf, _ = _mlstm_inner(p, cfg, xu, qctx, aux)
+    y = mlstm_chunked(q, k, v, li, lf).reshape(b, L, di).astype(x.dtype)
+    y = common.rmsnorm(y, p["gnorm"], cfg.norm_eps) * common.silu(z)
+    if is_calib(qctx):
+        aux["y"] = observe(y)
+        aux["y_had"] = observe(had_transform(y))
+    if is_quant(qctx) and qctx["spec"].use_hadamard:
+        out = linear(p, "down_proj", had_transform(y), qctx,
+                     site="down_proj_had")
+    elif is_quant(qctx):
+        spec = qctx["spec"]
+        y = (Q.dynamic_qdq(y) if spec.method == "dynamic"
+             else qrecipe.act_qdq(y, qctx["scales"]["y"], spec))
+        out = linear(p, "down_proj", y, qctx)
+    else:
+        out = linear(p, "down_proj", y, qctx)
+    return x + out, aux
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    heads = cfg.ssm_heads
+    hd = cfg.d_inner // heads
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner),
+                          jnp.float32),
+        "C": jnp.zeros((batch, heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, heads, hd), jnp.float32),
+        "m": jnp.full((batch, heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_block_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
+                     qctx=None) -> Tuple[jax.Array, Dict]:
+    aux: Dict = {}
+    b, d = x.shape
+    di = cfg.d_inner
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        h = qrecipe.act_qdq(h, qctx["scales"]["in"], qctx["spec"])
+    xz = linear(p, "up_proj", h, qctx)
+    xu, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, li, lf, conv_state = _mlstm_inner(
+        p, cfg, xu[:, None, :], qctx, aux, conv_state=state["conv"])
+    y, (c_n, n_n, m_n) = mlstm_step(
+        (state["C"], state["n"], state["m"]),
+        q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0])
+    y = y.reshape(b, di).astype(x.dtype)
+    y = common.rmsnorm(y, p["gnorm"], cfg.norm_eps) * common.silu(z)
+    if is_quant(qctx) and qctx["spec"].use_hadamard:
+        out = linear(p, "down_proj", had_transform(y), qctx,
+                     site="down_proj_had")
+    else:
+        out = linear(p, "down_proj", y, qctx)
+    new_state = {"conv": conv_state, "C": c_n, "n": n_n, "m": m_n}
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential; true recurrence)
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key: jax.Array, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    heads = cfg.ssm_heads
+    hd = d // heads
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "w_in": common.dense_init(ks[0], d, 4 * d),      # z, i, f, o
+        "r": 0.1 * jax.random.normal(ks[1], (4, heads, hd, hd),
+                                     jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)),
+                              3.0 * jnp.ones((d,)),      # forget bias
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "gnorm": jnp.ones((d,), jnp.float32),
+        "up": common.dense_init(ks[2], d, 2 * 2 * d),    # gated ffn
+        "down": common.dense_init(ks[3], 2 * d, d),
+    }
+
+
+def _slstm_cell_step(p, cfg, u4, hprev, c, n):
+    """u4: (b, 4d) pre-activations from the input; recurrent term added
+    here.  Returns (h, c, n)."""
+    b = hprev.shape[0]
+    d = cfg.d_model
+    heads = cfg.ssm_heads
+    hd = d // heads
+    hr = hprev.reshape(b, heads, hd)
+    rec = jnp.einsum("bhk,ghkv->bghv", hr.astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(b, 4 * d)
+    za, ia, fa, oa = jnp.split(u4.astype(jnp.float32) + rec +
+                               p["b"].astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(za)
+    i = jnp.exp(jnp.minimum(ia, 10.0))      # capped exponential gate
+    f = jax.nn.sigmoid(fa)
+    o = jax.nn.sigmoid(oa)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h, c_new, n_new
+
+
+def slstm_block(p: Dict, cfg: ModelConfig, x: jax.Array, qctx=None
+                ) -> Tuple[jax.Array, Dict]:
+    aux: Dict = {}
+    b, L, d = x.shape
+    hn = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if is_calib(qctx):
+        aux["in"] = observe(hn)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        hn = qrecipe.act_qdq(hn, qctx["scales"]["in"], qctx["spec"])
+    u4 = linear(p, "w_in", hn, qctx)                    # (b, L, 4d)
+
+    def body(carry, u):
+        hprev, c, n = carry
+        h, c, n = _slstm_cell_step(p, cfg, u, hprev, c, n)
+        return (h, c, n), h
+
+    zero = jnp.zeros((b, d), jnp.float32)
+    (_, _, _), hs = jax.lax.scan(body, (zero, zero, zero),
+                                 jnp.moveaxis(u4, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = common.rmsnorm(y, p["gnorm"], cfg.norm_eps)
+    x = x + y
+    # gated FFN
+    if is_calib(qctx):
+        aux["ffn_in"] = observe(x)
+    gu = linear(p, "up", x, qctx)
+    g, u = jnp.split(gu, 2, axis=-1)
+    ff = common.silu(g) * u
+    if is_calib(qctx):
+        aux["ffn_down_in"] = observe(ff)
+    out = linear(p, "down", ff, qctx)
+    return x + out, aux
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_block_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
+                     qctx=None) -> Tuple[jax.Array, Dict]:
+    hn = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        hn = qrecipe.act_qdq(hn, qctx["scales"]["in"], qctx["spec"])
+    u4 = linear(p, "w_in", hn, qctx)
+    h, c, n = _slstm_cell_step(p, cfg, u4, state["h"], state["c"],
+                               state["n"])
+    y = common.rmsnorm(h.astype(x.dtype), p["gnorm"], cfg.norm_eps)
+    x = x + y
+    gu = linear(p, "up", x, qctx)
+    g, u = jnp.split(gu, 2, axis=-1)
+    out = linear(p, "down", common.silu(g) * u, qctx)
+    return x + out, {"h": h, "c": c, "n": n}

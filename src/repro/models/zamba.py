@@ -1,0 +1,143 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + periodic shared attention block.
+
+The Mamba-2 block rides the chunked SSD scan (``repro.models.ssd``); the
+shared transformer block (single weight set, applied every
+``cfg.attn_period`` backbone layers) reuses the zoo's attention + MLP.
+Quamba's recipe transfers directly: percentile clip on the SSD input x,
+Hadamard-rotated gated output folded into out_proj (DESIGN.md
+§Arch-applicability), plus W8A8 on the shared attention (the paper's
+Jamba treatment, Table 4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import is_calib, is_quant, linear
+from repro.models.mamba import _depthwise_conv_silu
+from repro.models.ssd import ssd_chunked, ssd_step
+from repro.quant.hadamard import had_transform
+from repro.quant.observers import observe
+from repro.quant import quantizers as Q
+from repro.quant import recipe as qrecipe
+
+
+def init_mamba2_block(key: jax.Array, cfg: ModelConfig) -> Dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    heads = cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[0], (heads,)) *
+                 (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "in_proj": common.dense_init(ks[1], d, 2 * di + 2 * n + heads),
+        "conv_w": 0.1 * jax.random.normal(
+            ks[2], (cfg.conv_width, di + 2 * n), jnp.float32),
+        "conv_b": jnp.zeros((di + 2 * n,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "gnorm": jnp.ones((di,), jnp.float32),
+        "out_proj": common.dense_init(ks[3], di, d),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, heads = cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    return jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
+                     axis=-1)  # z, x, B, C, dt
+
+
+def _gated_out(p, cfg, y, z, x_res, qctx, aux):
+    """RMSNorm-gated output + Hadamard quant + out_proj (shared by
+    forward/step)."""
+    y = common.rmsnorm(y * common.silu(z), p["gnorm"], cfg.norm_eps)
+    if is_calib(qctx):
+        aux["y"] = observe(y)
+        aux["y_had"] = observe(had_transform(y))
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        if spec.method == "dynamic":
+            y = Q.dynamic_qdq(y)
+            out = linear(p, "out_proj", y, qctx)
+        elif spec.use_hadamard:
+            out = linear(p, "out_proj", had_transform(y), qctx,
+                         site="out_proj_had")
+        else:
+            y = qrecipe.act_qdq(y, qctx["scales"]["y"], spec)
+            out = linear(p, "out_proj", y, qctx)
+    else:
+        out = linear(p, "out_proj", y, qctx)
+    return x_res + out
+
+
+def mamba2_block(p: Dict, cfg: ModelConfig, x: jax.Array, qctx=None
+                 ) -> Tuple[jax.Array, Dict]:
+    aux: Dict = {}
+    b, L, d = x.shape
+    di, n, heads = cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    hd = di // heads
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if is_calib(qctx):
+        aux["in"] = observe(h)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        h = qrecipe.act_qdq(h, qctx["scales"]["in"], qctx["spec"])
+    z, xi, bmat, cmat, dt = _split_in_proj(
+        cfg, linear(p, "in_proj", h, qctx))
+    xbc, _ = _depthwise_conv_silu(
+        jnp.concatenate([xi, bmat, cmat], -1), p["conv_w"], p["conv_b"])
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    if is_calib(qctx):
+        aux["x"] = observe(xi)
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        xi = (Q.dynamic_qdq(xi) if spec.method == "dynamic"
+              else qrecipe.ssm_input_qdq(xi, qctx["scales"]["x"], spec))
+    dt = common.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_head = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xi.reshape(b, L, heads, hd), dt, a_head,
+                    bmat, cmat, p["D"])
+    y = y.reshape(b, L, di).astype(x.dtype)
+    return _gated_out(p, cfg, y, z, x, qctx, aux), aux
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int) -> Dict:
+    di, n, heads = cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    hd = di // heads
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n),
+                          jnp.float32),
+        "h": jnp.zeros((batch, heads, n, hd), jnp.float32),
+    }
+
+
+def mamba2_block_step(p: Dict, cfg: ModelConfig, x: jax.Array,
+                      state: Dict, qctx=None) -> Tuple[jax.Array, Dict]:
+    aux: Dict = {}
+    b, d = x.shape
+    di, n, heads = cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    hd = di // heads
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        h = qrecipe.act_qdq(h, qctx["scales"]["in"], qctx["spec"])
+    z, xi, bmat, cmat, dt = _split_in_proj(
+        cfg, linear(p, "in_proj", h, qctx))
+    xbc3, conv_new = _depthwise_conv_silu(
+        jnp.concatenate([xi, bmat, cmat], -1)[:, None, :],
+        p["conv_w"], p["conv_b"], state=state["conv"])
+    xi, bmat, cmat = jnp.split(xbc3[:, 0], [di, di + n], axis=-1)
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        xi = (Q.dynamic_qdq(xi) if spec.method == "dynamic"
+              else qrecipe.ssm_input_qdq(xi, qctx["scales"]["x"], spec))
+    dt = common.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_head = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_new = ssd_step(state["h"], xi.reshape(b, heads, hd), dt,
+                        a_head, bmat, cmat, p["D"])
+    y = y.reshape(b, di).astype(x.dtype)
+    out = _gated_out(p, cfg, y, z, x, qctx, aux)
+    return out, {"conv": conv_new, "h": h_new}

@@ -1,0 +1,2 @@
+from repro.optim.adamw import OptimConfig, adamw_update, init_opt_state, cosine_lr, clip_by_global_norm
+from repro.optim.compression import compress_tree_with_feedback, init_error_state, psum_compressed

@@ -1,0 +1,95 @@
+"""AdamW + schedules + clipping, pure JAX (no optax in this container)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_lr(cfg: OptimConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def init_opt_state(params, keep_master: bool = False) -> Dict:
+    """keep_master: store an fp32 master copy (use when params are bf16;
+    the master lives with the ZeRO-sharded moments, params stay in the
+    compute dtype so no per-use fp32->bf16 casts are materialized)."""
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    out = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if keep_master:
+        out["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return out
+
+
+def adamw_update(cfg: OptimConfig, params, grads, opt_state
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt_state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    has_master = "master" in opt_state
+
+    def upd(p, g, m, v, w32):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w32
+        w_new = w32 - lr * delta
+        return w_new.astype(p.dtype), m_new, v_new, w_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    flat_w = (tdef.flatten_up_to(opt_state["master"]) if has_master
+              else [p.astype(jnp.float32) for p in flat_p])
+    out = [upd(p, g, m, v, w) for p, g, m, v, w
+           in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_opt = {"m": tdef.unflatten([o[1] for o in out]),
+               "v": tdef.unflatten([o[2] for o in out]),
+               "step": step}
+    if has_master:
+        new_opt["master"] = tdef.unflatten([o[3] for o in out])
+    return new_params, new_opt, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,12 @@
+from repro.quant.quantizers import (
+    quantize, dequantize, qdq, symmetric_scale, percentile_scale,
+    dynamic_qdq, log2_qdq, per_channel_scale, quant_error,
+)
+from repro.quant.hadamard import (
+    hadamard_matrix, fwht, had_transform, fold_hadamard_into_weight,
+)
+from repro.quant.observers import (
+    observe, observe_none, merge_stats, stats_scale, PERCENTILES,
+)
+from repro.quant.recipe import QuantSpec, PRESETS, get_spec, quantize_weight
+from repro.quant.calibrate import run_calibration

@@ -1,0 +1,49 @@
+"""Re-implementations of the paper's baselines (Tables 1-3, §C).
+
+* SmoothQuant (SmQ-SSM): per-channel smoothing factors s_j =
+  amax(X_j)^alpha / amax(W_j)^(1-alpha) folded into (prev-op, weight) pairs
+  so activations become easier to quantize per-tensor.
+* QuaRot-SSM: Hadamard rotations on *every* linear interface (both the
+  residual stream and the SSM input), which fixes outliers but costs extra
+  transposes/transforms at the SSM input at inference time -- this is the
+  overhead Quamba avoids (paper Table 1 discussion, §C).
+
+Model-specific folding (which weight pairs absorb the factors) is wired in
+``repro.models.quantize``; the math lives here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def smoothquant_factors(act_cmax: jax.Array, w: jax.Array,
+                        alpha: float = 0.5, in_axis: int = 0) -> jax.Array:
+    """Per-input-channel smoothing factors (SmoothQuant Eq. 4), alpha=0.5.
+
+    act_cmax: per-channel abs-max of the linear's input activations (from
+    calibration).  w: the linear weight; its per-input-channel abs-max is
+    reduced over all other axes.
+    """
+    red = tuple(i for i in range(w.ndim) if i != in_axis % w.ndim)
+    w_cmax = jnp.max(jnp.abs(w), axis=red)
+    act_cmax = jnp.maximum(act_cmax.astype(jnp.float32), 1e-5)
+    w_cmax = jnp.maximum(w_cmax.astype(jnp.float32), 1e-5)
+    s = act_cmax ** alpha / w_cmax ** (1.0 - alpha)
+    # guard: keep factors in a sane range so the folded weight stays finite
+    return jnp.clip(s, 1e-3, 1e3)
+
+
+def fold_smoothing(w_prev_out: jax.Array, w_next: jax.Array,
+                   s: jax.Array, next_in_axis: int = 0):
+    """Fold smoothing: prev output channels /= s, next input channels *= s.
+
+    ``w_prev_out`` is whatever produces the activation (an RMSNorm weight
+    vector or a previous linear's output channels, broadcast on the last
+    axis).  Returns the updated pair.
+    """
+    w_prev_out = w_prev_out / s.astype(w_prev_out.dtype)
+    shape = [1] * w_next.ndim
+    shape[next_in_axis % w_next.ndim] = -1
+    w_next = w_next * s.reshape(shape).astype(w_next.dtype)
+    return w_prev_out, w_next

@@ -1,0 +1,29 @@
+"""Calibration runner (paper §5.1): aggregate activation statistics.
+
+``forward_calib(params, batch) -> (out, stats)`` is supplied by the model
+zoo; this runner jits it once and folds the per-batch stats pytrees with an
+elementwise max.  512 random calibration sentences in the paper; here the
+batch source is any iterable of model inputs.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional
+
+import jax
+
+from repro.quant.observers import merge_stats
+
+
+def run_calibration(forward_calib: Callable, params, batches: Iterable,
+                    max_batches: Optional[int] = None):
+    """Returns the merged stats pytree over the calibration stream."""
+    fwd = jax.jit(forward_calib)
+    merged = None
+    for i, batch in enumerate(batches):
+        if max_batches is not None and i >= max_batches:
+            break
+        _, stats = fwd(params, batch)
+        merged = stats if merged is None else merge_stats(merged, stats)
+    if merged is None:
+        raise ValueError("calibration stream was empty")
+    return jax.device_get(merged)

@@ -1,0 +1,137 @@
+"""Walsh–Hadamard transforms (paper §3.3, §4.2).
+
+Quamba removes the massive outliers in the SSM output ``y`` by rotating it
+into an outlier-free basis: ``y_H = H_n @ y`` with a (scaled) Hadamard
+matrix, quantizing there, and folding the inverse rotation into the output
+projection ``W_out`` (compute-invariance: W_out^T y == (H W_out)^T (H y)/n).
+
+We provide:
+  * ``hadamard_matrix(n)``       -- explicit (normalized) H_n for n = 2^p*m,
+                                    m in {1, 12, 20} (Sloane's library bases)
+  * ``fwht(x)``                  -- O(n log n) fast transform over the last
+                                    axis (pure jnp; the TPU Pallas kernel in
+                                    ``repro.kernels`` uses a matmul (kron)
+                                    decomposition instead, which maps to the
+                                    MXU -- see DESIGN.md §Hardware-adaptation)
+  * ``had_transform(x)``         -- normalized transform for any supported n
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+def _paley_type1(q: int) -> np.ndarray:
+    """Paley-I Hadamard matrix of order q+1 for prime q == 3 (mod 4)."""
+    residues = {(i * i) % q for i in range(1, q)}
+
+    def chi(a: int) -> int:
+        a %= q
+        return 0 if a == 0 else (1 if a in residues else -1)
+
+    jac = np.array([[chi(j - i) for j in range(q)] for i in range(q)],
+                   dtype=np.float32)
+    s = np.zeros((q + 1, q + 1), dtype=np.float32)
+    s[0, 1:] = 1.0
+    s[1:, 0] = -1.0
+    s[1:, 1:] = jac
+    return s + np.eye(q + 1, dtype=np.float32)
+
+
+def _base_matrix(m: int) -> np.ndarray:
+    """Hadamard bases of order 1, 12 (Paley q=11), 20 (Paley q=19)."""
+    if m == 1:
+        return np.ones((1, 1), dtype=np.float32)
+    h = _paley_type1({12: 11, 20: 19}[m])
+    assert np.allclose(h @ h.T, m * np.eye(m)), f"H_{m} base is not Hadamard"
+    return h
+
+
+def decompose(n: int):
+    """Factor n = 2^p * m with m in {1, 12, 20}; raise if impossible."""
+    for m in (1, 12, 20):
+        if n % m == 0:
+            rest = n // m
+            if rest & (rest - 1) == 0:  # power of two
+                return int(math.log2(rest)), m
+    raise ValueError(f"no Hadamard decomposition for n={n}")
+
+
+@functools.lru_cache(maxsize=32)
+def hadamard_matrix_np(n: int, normalized: bool = True) -> np.ndarray:
+    """Dense H_n (numpy, cached). normalized -> H/sqrt(n), orthonormal."""
+    p, m = decompose(n)
+    h = _base_matrix(m)
+    h2 = np.array([[1.0, 1.0], [1.0, -1.0]], dtype=np.float32)
+    for _ in range(p):
+        h = np.kron(h2, h)
+    if normalized:
+        h = h / np.sqrt(n)
+    return h
+
+
+def hadamard_matrix(n: int, normalized: bool = True,
+                    dtype=jnp.float32) -> jax.Array:
+    return jnp.asarray(hadamard_matrix_np(n, normalized), dtype)
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Fast Walsh–Hadamard transform over the last axis (unnormalized).
+
+    Supports n = 2^p * m with m in {1, 12, 20}: the power-of-two part uses
+    log2 butterfly stages; the base part is one small dense matmul.
+    """
+    n = x.shape[-1]
+    p, m = decompose(n)
+    orig_shape = x.shape
+    x = x.reshape(-1, n)
+    if m != 1:
+        base = jnp.asarray(_base_matrix(m), x.dtype)
+        x = x.reshape(-1, 2 ** p, m) @ base.T
+        x = x.reshape(-1, n)
+    # butterfly over the 2^p part
+    for s in range(p):
+        x = x.reshape(-1, 2 ** (p - s - 1), 2, (2 ** s) * m)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(-1, n)
+    return x.reshape(orig_shape)
+
+
+def had_transform(x: jax.Array, normalized: bool = True) -> jax.Array:
+    """Normalized WHT over the last axis: x -> (1/sqrt(n)) H_n x."""
+    y = fwht(x)
+    if normalized:
+        y = y * (1.0 / jnp.sqrt(jnp.asarray(x.shape[-1], x.dtype)))
+    return y
+
+
+def had_transform_t(x: jax.Array, normalized: bool = True) -> jax.Array:
+    """Inverse (transpose) transform: x -> (1/sqrt(n)) H_n^T x.
+
+    For pure 2^p sizes H is symmetric and this equals ``had_transform``;
+    the Paley bases (12, 20) are not symmetric, so the inverse applies the
+    dense transpose explicitly.
+    """
+    n = x.shape[-1]
+    _, m = decompose(n)
+    if m == 1:
+        return had_transform(x, normalized)
+    h = jnp.asarray(hadamard_matrix_np(n, normalized), x.dtype)
+    return x @ h  # (H^T x)^T = x^T H
+
+
+def fold_hadamard_into_weight(w: jax.Array, axis: int = 0) -> jax.Array:
+    """Fold the (normalized) Hadamard rotation into a weight matrix.
+
+    With y' = H y (H orthonormal), compute-invariance requires replacing
+    W_out (applied as y @ W_out, contraction over ``axis``) by H @ W_out so
+    that (H y) @ (H W) == y @ W.
+    """
+    n = w.shape[axis]
+    w_moved = jnp.moveaxis(w, axis, 0)
+    out = had_transform(w_moved.reshape(n, -1).T).T.reshape(w_moved.shape)
+    return jnp.moveaxis(out, 0, axis)

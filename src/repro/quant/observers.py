@@ -1,0 +1,67 @@
+"""Calibration observers (paper §5.1 "Quantization setup").
+
+During calibration the model's forward pass emits, for every named
+activation site, a small summary ``{"amax": scalar, "p": vector}`` holding
+the absolute max and a fixed ladder of percentiles of |x|.  Summaries from
+different calibration batches are merged with an elementwise max (a
+conservative upper envelope, matching the paper's "absolute maximum value
+observed from the calibration set").
+
+Sites inside a ``lax.scan`` over layers come back stacked with a leading
+layer axis -- scales then stay per-layer, which is what the scanned
+quantized forward consumes.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+# percentile ladder; index with PCT_INDEX[p]
+PERCENTILES = (99.0, 99.9, 99.99, 99.999, 100.0)
+PCT_INDEX = {p: i for i, p in enumerate(PERCENTILES)}
+
+
+def observe(x: jax.Array) -> Dict[str, jax.Array]:
+    """Summary statistics of one activation tensor.
+
+    cmax (per-channel abs-max over the last axis) feeds SmoothQuant's
+    smoothing factors; amax/percentiles feed the per-tensor static scales.
+    """
+    ax = jnp.abs(x).astype(jnp.float32)
+    flat = ax.reshape(-1)
+    return {
+        "amax": jnp.max(flat),
+        "p": jnp.percentile(flat, jnp.asarray(PERCENTILES)),
+        "cmax": jnp.max(ax.reshape(-1, x.shape[-1]), axis=0),
+    }
+
+
+def observe_none(d: int) -> Dict[str, jax.Array]:
+    """Placeholder with the same pytree structure as ``observe``."""
+    return {
+        "amax": jnp.zeros((), jnp.float32),
+        "p": jnp.zeros((len(PERCENTILES),), jnp.float32),
+        "cmax": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def merge_stats(a, b):
+    """Elementwise-max merge of two stats pytrees (same structure)."""
+    return jax.tree.map(jnp.maximum, a, b)
+
+
+def stats_scale(entry: Dict[str, jax.Array], *, percentile: float = 100.0,
+                bits: int = 8) -> jax.Array:
+    """Static scale from a calibrated summary.
+
+    percentile == 100 -> plain abs-max scale (Eq. 2); otherwise the
+    percentile-max scale of paper §4.2 (used for the SSM input ``x``).
+    """
+    qmax = 2.0 ** (bits - 1) - 1.0
+    if percentile >= 100.0:
+        amax = entry["amax"]
+    else:
+        amax = entry["p"][..., PCT_INDEX[percentile]]
+    return jnp.maximum(amax, 1e-8) / qmax

@@ -1,0 +1,59 @@
+"""Quantized linear application.
+
+Two execution paths:
+
+* ``apply_int8``  -- true integer arithmetic: int8 x int8 -> int32
+  accumulation (``preferred_element_type=int32``), then one fused rescale.
+  This is what the TPU deployment uses (the MXU has an int8 mode); the CPU
+  backend executes the same graph bit-exactly.
+
+* ``apply_qdq``   -- fake-quant simulation (dequantize first, fp matmul).
+  Used inside numerics experiments where we sweep methods; identical to
+  the integer path up to fp accumulation order.
+
+Weights arrive as the ``{"qw", "s_w", ...}`` pytree from
+``repro.quant.recipe.quantize_weight``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import quantizers as Q
+
+
+def apply_int8(x: jax.Array, s_x: jax.Array, qlin: dict,
+               out_dtype=jnp.bfloat16) -> jax.Array:
+    """y = (quant(x) @ qw) * s_x * s_w  (+ bias), int32 accumulation.
+
+    x is floating point; it is statically quantized with the calibrated
+    scale ``s_x`` (all scaling factors fused into one epilogue multiply,
+    paper Fig. 4).
+    """
+    qx = Q.quantize(x, jnp.asarray(s_x, x.dtype))
+    acc = jax.lax.dot_general(
+        qx, qlin["qw"],
+        dimension_numbers=(((qx.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    s_w = qlin["s_w"]
+    scale = (jnp.asarray(s_x, jnp.float32) * s_w.astype(jnp.float32))
+    y = acc.astype(jnp.float32) * scale
+    if "b" in qlin and qlin["b"] is not None:
+        y = y + qlin["b"].astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+def apply_qdq(x: jax.Array, s_x: Optional[jax.Array], qlin: dict,
+              out_dtype=None) -> jax.Array:
+    """Fake-quant path: x is (optionally) fake-quantized, weights dequantized."""
+    out_dtype = out_dtype or x.dtype
+    if s_x is not None:
+        x = Q.qdq(x, jnp.asarray(s_x, x.dtype))
+    w = qlin["qw"].astype(x.dtype) * qlin["s_w"].astype(x.dtype)
+    y = x @ w
+    if "b" in qlin and qlin["b"] is not None:
+        y = y + qlin["b"].astype(x.dtype)
+    return y.astype(out_dtype)

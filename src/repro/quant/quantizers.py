@@ -1,0 +1,115 @@
+"""Symmetric / asymmetric / log2 uniform quantizers (paper §3.2, §F).
+
+All functions are pure-jnp and jit-safe.  The *static* path takes a
+pre-calibrated scale; the *dynamic* path computes the scale from the tensor
+itself (paper Table 9 "dynamic" baseline).
+
+Conventions
+-----------
+``quantize(x, s)``   -> int8 tensor  (clamp(round(x/s)))
+``dequantize(q, s)`` -> float tensor (q * s)
+``qdq(x, s)``        -> fake-quant round-trip (used inside fp simulations of
+                        integer ops where true int arithmetic is awkward;
+                        numerically identical to int arithmetic up to fp
+                        accumulation order)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def symmetric_scale(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Per-tensor symmetric scale from the absolute max (Eq. 2)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    amax = jnp.max(jnp.abs(x))
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def percentile_scale(x: jax.Array, p: float = 99.999, bits: int = 8
+                     ) -> jax.Array:
+    """Percentile-max scale (paper §4.2): clip the top (100-p)% outliers.
+
+    This is Quamba's treatment for the SSM input ``x``: the outliers are
+    numerically small (<10) but skew the per-tensor quantization step; a
+    99.999th-percentile max restores precision for the bulk of the values.
+    """
+    qmax = 2.0 ** (bits - 1) - 1.0
+    amax = jnp.percentile(jnp.abs(x).astype(jnp.float32).reshape(-1), p)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def asymmetric_qparams(x: jax.Array, bits: int = 8
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """(scale, zero_point) for asymmetric quantization (paper Table 9)."""
+    lo, hi = jnp.min(x), jnp.max(x)
+    qmin, qmax = -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(hi - lo, 1e-8) / (qmax - qmin)
+    zp = jnp.round(qmin - lo / scale)
+    return scale, zp
+
+
+def quantize(x: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:
+    qmin = -(2 ** (bits - 1))
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int16)
+
+
+def dequantize(q: jax.Array, scale: jax.Array,
+               dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    return q.astype(dtype) * jnp.asarray(scale, dtype)
+
+
+def qdq(x: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:
+    """Fake-quant round trip in the input dtype."""
+    return dequantize(quantize(x, scale, bits), scale, x.dtype)
+
+
+def qdq_asymmetric(x: jax.Array, scale: jax.Array, zp: jax.Array,
+                   bits: int = 8) -> jax.Array:
+    qmin = -(2.0 ** (bits - 1))
+    qmax = 2.0 ** (bits - 1) - 1.0
+    q = jnp.clip(jnp.round(x / scale) + zp, qmin, qmax)
+    return ((q - zp) * scale).astype(x.dtype)
+
+
+def dynamic_qdq(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Dynamic per-tensor symmetric fake quant (paper Table 9 'dynamic')."""
+    return qdq(x, symmetric_scale(x, bits), bits)
+
+
+def log2_qdq(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Log2 (power-of-two) quantization (paper §F).
+
+    Maps |x| to the nearest power of two with a (2^(bits-1)-1)-level
+    exponent range anchored at the tensor max; preserves small values much
+    better than uniform quantization under outliers.
+    """
+    levels = 2 ** (bits - 1) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    sign = jnp.sign(x)
+    mag = jnp.abs(x) / amax                       # (0, 1]
+    e = jnp.clip(jnp.round(-jnp.log2(jnp.maximum(mag, 2.0 ** -levels))),
+                 0, levels - 1)
+    out = sign * amax * (2.0 ** -e)
+    return jnp.where(mag < 2.0 ** -(levels - 1), jnp.zeros_like(x),
+                     out).astype(x.dtype)
+
+
+def per_channel_scale(w: jax.Array, axis: int = 0, bits: int = 8
+                      ) -> jax.Array:
+    """Per-output-channel symmetric weight scale (beyond-paper option)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    red = tuple(i for i in range(w.ndim) if i != axis)
+    amax = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quant_error(x: jax.Array, xq: jax.Array) -> jax.Array:
+    """Mean absolute quantization error (used in Fig. 2/5 style analyses)."""
+    return jnp.mean(jnp.abs(x.astype(jnp.float32) - xq.astype(jnp.float32)))

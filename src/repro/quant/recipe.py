@@ -1,0 +1,147 @@
+"""Quamba recipe driver: QuantSpec + generic weight/activation helpers.
+
+The architecture-specific wiring (which site gets the percentile clip,
+where the Hadamard rotation is folded) lives in ``repro.models.quantize``;
+this module holds the architecture-independent pieces:
+
+  * ``QuantSpec``        -- which method / bit-widths / knobs
+  * ``quantize_weight``  -- per-tensor (or per-channel) int8/int4 weights
+  * ``QLinear`` params   -- {"qw", "s_w", "b"} pytree consumed by qlinear
+  * method presets reproducing the paper's baselines (Tables 2/3/5/9)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import quantizers as Q
+from repro.quant.hadamard import fold_hadamard_into_weight
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Configuration of one quantization run.
+
+    method:
+      quamba       -- paper: static W8A8, percentile clip on SSM input x,
+                      Hadamard-rotated SSM output (H folded into W_out)
+      static       -- naive static per-tensor W8A8 (paper baseline)
+      dynamic      -- scales recomputed per tensor per step (paper baseline)
+      smoothquant  -- SmQ-SSM: per-channel smoothing folded into weights
+      quarot       -- QuaRot-SSM: Hadamard on every linear input + output
+      in_per       -- ablation: percentile clip only (Table 5 "+ In Per.")
+      out_had      -- ablation: Hadamard only    (Table 5 "+ Out Had.")
+    """
+
+    method: str = "quamba"
+    w_bits: int = 8
+    a_bits: int = 8
+    percentile: float = 99.999          # paper §4.2 p
+    smooth_alpha: float = 0.5           # SmoothQuant alpha
+    per_channel_w: bool = False         # beyond-paper: per-channel weights
+    quantize_kv_cache: bool = False     # beyond-paper: int8 KV cache
+    input_quant: str = "sym_percentile"  # Table 9 variants:
+    # sym_percentile | sym_minmax | asym_percentile | log2 | dynamic
+
+    @property
+    def use_percentile(self) -> bool:
+        return self.method in ("quamba", "in_per", "quarot")
+
+    @property
+    def use_hadamard(self) -> bool:
+        return self.method in ("quamba", "out_had", "quarot")
+
+    @property
+    def x_percentile(self) -> float:
+        return self.percentile if self.use_percentile else 100.0
+
+    def validate(self) -> None:
+        assert self.method in ("quamba", "static", "dynamic", "smoothquant",
+                               "quarot", "in_per", "out_had"), self.method
+        assert self.w_bits in (4, 8) and self.a_bits in (4, 8)
+
+
+PRESETS = {
+    "fp": None,
+    "quamba": QuantSpec(method="quamba"),
+    "static": QuantSpec(method="static"),
+    "dynamic": QuantSpec(method="dynamic"),
+    "smoothquant": QuantSpec(method="smoothquant"),
+    "quarot": QuantSpec(method="quarot"),
+    "in_per": QuantSpec(method="in_per"),
+    "out_had": QuantSpec(method="out_had"),
+    "quamba-w4a8": QuantSpec(method="quamba", w_bits=4),
+    "quamba-pc": QuantSpec(method="quamba", per_channel_w=True),
+}
+
+
+def get_spec(name: str) -> Optional[QuantSpec]:
+    if name not in PRESETS:
+        raise KeyError(f"unknown quant preset {name!r}: {sorted(PRESETS)}")
+    spec = PRESETS[name]
+    if spec is not None:
+        spec.validate()
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# weights
+# ---------------------------------------------------------------------------
+
+def quantize_weight(w: jax.Array, spec: QuantSpec, *,
+                    fold_hadamard_axis: Optional[int] = None,
+                    out_axis: int = -1) -> dict:
+    """Quantize one weight matrix to a QLinear params dict.
+
+    fold_hadamard_axis: if set, fold the normalized Hadamard rotation into
+    this (input) axis before quantizing -- this is the W_out^H = H W_out
+    fusion of paper §4.2 that makes the rotated output quantization free at
+    inference time.
+    """
+    if fold_hadamard_axis is not None:
+        w = fold_hadamard_into_weight(w, axis=fold_hadamard_axis)
+    if spec.per_channel_w:
+        axis = out_axis % w.ndim
+        s_w = Q.per_channel_scale(w, axis=axis, bits=spec.w_bits)
+    else:
+        s_w = Q.symmetric_scale(w, bits=spec.w_bits)
+    qw = Q.quantize(w, s_w, bits=spec.w_bits)
+    return {"qw": qw, "s_w": jnp.asarray(s_w, jnp.float32)}
+
+
+def dequantize_weight(qlin: dict, dtype=jnp.float32) -> jax.Array:
+    return qlin["qw"].astype(dtype) * qlin["s_w"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def act_qdq(x: jax.Array, scale: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Static fake-quant of an activation with a calibrated scale."""
+    return Q.qdq(x, jnp.asarray(scale, x.dtype), bits=spec.a_bits)
+
+
+def ssm_input_qdq(x: jax.Array, scale: jax.Array, spec: QuantSpec
+                  ) -> jax.Array:
+    """Quantize the SSM input x per the configured Table-9 variant.
+
+    The static symmetric-percentile path (the paper's choice) uses the
+    pre-calibrated percentile scale.  The alternatives reproduce §F.
+    """
+    kind = spec.input_quant
+    if kind in ("sym_percentile", "sym_minmax"):
+        return Q.qdq(x, jnp.asarray(scale, x.dtype), bits=spec.a_bits)
+    if kind == "dynamic":
+        return Q.dynamic_qdq(x, bits=spec.a_bits)
+    if kind == "log2":
+        return Q.log2_qdq(x, bits=spec.a_bits)
+    if kind == "asym_percentile":
+        # static scale, dynamic zero-point estimate from clip range
+        s = jnp.asarray(scale, x.dtype)
+        zp = jnp.round(-jnp.mean(x) / s)
+        return Q.qdq_asymmetric(x, s, zp, bits=spec.a_bits)
+    raise ValueError(f"unknown input_quant {kind!r}")

@@ -1,0 +1,2 @@
+from repro.serve.engine import Engine, Request, generate
+from repro.serve.sampler import sample

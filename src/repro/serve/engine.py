@@ -1,0 +1,130 @@
+"""Batched serving engine with continuous batching over decode slots.
+
+The engine owns a fixed-capacity decode state (the model's KV/SSM state
+for ``max_batch`` slots).  Requests join free slots; every ``step()``
+decodes one token for all live slots; finished sequences free their slot
+immediately so queued requests start without waiting for the batch to
+drain (continuous batching).  Prefill runs through the same decode path
+(a lax.scan over prompt tokens), so quantized execution (Quamba qctx) is
+identical between prefill and generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_decode_state
+from repro.models.model import merge_slot, reset_slot
+from repro.serve.sampler import sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
+                 max_len: int = 2048, qctx=None, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.qctx = qctx
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.state = init_decode_state(cfg, max_batch, max_len,
+                                       cache_dtype=jnp.float32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        # slot-local positions (the global state["pos"] advances for all
+        # slots; per-slot bookkeeping is host-side)
+        self._step_fn = jax.jit(self._one_step)
+        self._next_tokens = jnp.zeros((max_batch,), jnp.int32)
+
+    # -- jitted core ------------------------------------------------------
+    def _one_step(self, params, state, tokens, key, temps):
+        logits, new_state = decode_step(params, self.cfg, state, tokens,
+                                        qctx=self.qctx)
+        toks = sample(key, logits, temps)
+        return toks, logits, new_state
+
+    # -- API --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self.state = reset_slot(self.cfg, self.state, i)
+                # prefill: feed prompt tokens through the decode path for
+                # this slot (other slots get pad token but their state is
+                # masked by position bookkeeping at this scale of engine).
+                for t in req.prompt[:-1]:
+                    tok = self._next_tokens.at[i].set(t)
+                    self.key, k = jax.random.split(self.key)
+                    _, _, new_state = self._step_fn(
+                        self.params, self.state, tok, k,
+                        jnp.zeros((self.max_batch,)))
+                    # only slot i's state advances during its prefill
+                    self.state = merge_slot(self.cfg, self.state,
+                                            new_state, i)
+                self._next_tokens = self._next_tokens.at[i].set(
+                    req.prompt[-1])
+
+    def step(self) -> None:
+        """Decode one token for all live slots."""
+        self._admit()
+        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if not live:
+            return
+        self.key, k = jax.random.split(self.key)
+        temps = jnp.asarray([
+            (self.slots[i].temperature if self.slots[i] else 0.0)
+            for i in range(self.max_batch)], jnp.float32)
+        toks, _, self.state = self._step_fn(
+            self.params, self.state, self._next_tokens, k, temps)
+        toks_host = jax.device_get(toks)
+        for i in live:
+            req = self.slots[i]
+            tok = int(toks_host[i])
+            req.output.append(tok)
+            if (len(req.output) >= req.max_new_tokens or
+                    (req.eos_id is not None and tok == req.eos_id)):
+                req.done = True
+                self.slots[i] = None       # free slot -> continuous batching
+            else:
+                self._next_tokens = self._next_tokens.at[i].set(tok)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                return
+            self.step()
+
+
+def generate(params, cfg: ModelConfig, prompts: List[List[int]], *,
+             max_new_tokens: int = 32, temperature: float = 0.0,
+             qctx=None, max_len: int = 2048) -> List[List[int]]:
+    """Convenience batch generation through the engine."""
+    eng = Engine(params, cfg, max_batch=min(8, len(prompts)),
+                 max_len=max_len, qctx=qctx)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new_tokens,
+                    temperature=temperature)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [r.output for r in reqs]

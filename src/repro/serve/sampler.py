@@ -1,0 +1,18 @@
+"""Token samplers for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(key: jax.Array, logits: jax.Array, temperature) -> jax.Array:
+    """Greedy when temperature <= 0 (per-row), else temperature sampling.
+
+    logits (B, V); temperature scalar or (B,).
+    """
+    temps = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32),
+                             logits.shape[:1])
+    greedy = jnp.argmax(logits, axis=-1)
+    scaled = logits / jnp.maximum(temps, 1e-4)[:, None]
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    return jnp.where(temps <= 0.0, greedy, sampled).astype(jnp.int32)

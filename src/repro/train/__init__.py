@@ -1,0 +1,3 @@
+from repro.train.step import init_train_state, make_train_step, make_eval_step
+from repro.train.loop import LoopConfig, Trainer, train
+from repro.train import checkpoint

@@ -1,0 +1,112 @@
+"""Fault-tolerant checkpointing: atomic step directories, manifest with
+integrity hashes, retention, resume-from-latest.
+
+Layout:
+  <dir>/step_00001000.tmp-<nonce>/   (written first)
+  <dir>/step_00001000/               (atomic rename when complete)
+      manifest.json                  (leaf paths, shapes, dtypes, crc32)
+      arr_00000.npy ...
+A crashed writer leaves only .tmp-* litter, which ``latest_step`` ignores
+and ``save`` garbage-collects -- restart is always consistent.  On a real
+multi-host cluster each host writes its own param shards under
+``host_<k>/`` (see DESIGN.md §Fault-tolerance); in this container there
+is one host.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    # GC stale tmp dirs from crashed writers
+    for name in os.listdir(ckpt_dir):
+        if ".tmp-" in name:
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = f"{final}.tmp-{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(jax.device_get(tree))
+    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(arr.tobytes()),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                     # atomic commit
+
+    # retention
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+    return final
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and ".tmp-" not in name:
+            if os.path.exists(os.path.join(ckpt_dir, name,
+                                           "manifest.json")):
+                out.append(int(name[5:]))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like``.  Verifies crc32 of
+    every leaf; raises on corruption (caller falls back to older step)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_meta = manifest["leaves"]
+    _, treedef = _flatten(tree_like)
+    loaded = []
+    for meta in leaves_meta:
+        arr = np.load(os.path.join(d, meta["file"]))
+        if zlib.crc32(arr.tobytes()) != meta["crc32"]:
+            raise IOError(f"checkpoint corruption in {d}/{meta['file']}")
+        loaded.append(arr)
+    return jax.tree.unflatten(treedef, loaded), step
+
+
+def restore_any(ckpt_dir: str, tree_like):
+    """Try newest -> oldest until one restores cleanly (node-failure /
+    torn-write recovery path)."""
+    for step in sorted(all_steps(ckpt_dir), reverse=True):
+        try:
+            return restore(ckpt_dir, tree_like, step)
+        except Exception:
+            continue
+    raise FileNotFoundError(f"no restorable checkpoint in {ckpt_dir}")

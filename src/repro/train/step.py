@@ -1,0 +1,96 @@
+"""Train-step builders: loss -> grads -> (optional EF-int8 compression)
+-> AdamW, with microbatch gradient accumulation and remat."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro.optim.adamw import OptimConfig, adamw_update, init_opt_state
+from repro.optim.compression import (compress_tree_with_feedback,
+                                     init_error_state)
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig,
+                     compress_grads: bool = False,
+                     param_dtype: str = None) -> Dict:
+    """param_dtype='bfloat16' stores weights in the compute dtype and an
+    fp32 master copy with the (ZeRO-sharded) optimizer moments -- removes
+    per-use fp32->bf16 weight casts (EXPERIMENTS.md §Perf)."""
+    from repro.models import init_params
+    params = init_params(key, cfg)
+    if param_dtype is not None:
+        keep_master = True
+        lowp = jax.tree.map(
+            lambda p: p.astype(param_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        state = {"params": lowp,
+                 "opt": init_opt_state(params, keep_master=True)}
+        state["opt"]["master"] = params
+    else:
+        state = {"params": params, "opt": init_opt_state(params)}
+    if compress_grads:
+        state["err"] = init_error_state(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimConfig, *,
+                    remat: bool = True, microbatches: int = 1,
+                    compress_grads: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 accumulates gradients over equal splits of the batch
+    (sequential lax.scan: peak activation memory / microbatches).
+    """
+
+    def loss_wrap(params, batch):
+        return loss_fn(params, cfg, batch, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_wrap, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        split = lambda x: x.reshape(
+            (microbatches, x.shape[0] // microbatches) + x.shape[1:])
+        mb = jax.tree.map(split, batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, b):
+            (loss, metrics), grads = grad_fn(params, b)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc, grads)
+            return acc, (loss, metrics)
+
+        acc, (losses, metricses) = jax.lax.scan(body, zeros, mb)
+        grads = jax.tree.map(lambda a: a / microbatches, acc)
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metricses)
+        return jnp.mean(losses), metrics, grads
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        new_state = dict(state)
+        if compress_grads:
+            grads, new_state["err"] = compress_tree_with_feedback(
+                grads, state["err"])
+        params, opt, opt_metrics = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"])
+        new_state["params"] = params
+        new_state["opt"] = opt
+        return new_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, qctx=None):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, cfg, batch, qctx=qctx)
+        return metrics
+
+    return eval_step

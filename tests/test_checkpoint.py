@@ -1,0 +1,55 @@
+"""Checkpoint atomicity, integrity, retention, corruption fallback."""
+import os
+import shutil
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+@pytest.fixture()
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path, tree):
+    ckpt.save(str(tmp_path), 10, tree)
+    restored, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 10
+    assert np.allclose(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == np.int32
+
+
+def test_retention(tmp_path, tree):
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_tmp_litter_ignored_and_gced(tmp_path, tree):
+    ckpt.save(str(tmp_path), 1, tree)
+    litter = tmp_path / "step_00000002.tmp-999"
+    litter.mkdir()
+    (litter / "arr_00000.npy").write_bytes(b"junk")
+    assert ckpt.latest_step(str(tmp_path)) == 1       # tmp ignored
+    ckpt.save(str(tmp_path), 3, tree)                  # gc happens
+    assert not litter.exists()
+
+
+def test_corruption_falls_back(tmp_path, tree):
+    ckpt.save(str(tmp_path), 1, tree, keep=5)
+    ckpt.save(str(tmp_path), 2, tree, keep=5)
+    # corrupt newest
+    d = tmp_path / "step_00000002"
+    f = d / "arr_00000.npy"
+    f.write_bytes(f.read_bytes()[:-4] + b"\x00\x00\x00\x00")
+    restored, step = ckpt.restore_any(str(tmp_path), tree)
+    assert step == 1
+
+
+def test_restore_missing_raises(tmp_path, tree):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), tree)

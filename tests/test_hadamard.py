@@ -1,0 +1,72 @@
+"""Hadamard transform tests: orthogonality, FWHT vs dense, compute
+invariance of the W_out fold (paper §4.2)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.hadamard import (decompose, fold_hadamard_into_weight,
+                                  fwht, had_transform, had_transform_t,
+                                  hadamard_matrix_np)
+
+SIZES = [2, 8, 12, 20, 24, 40, 128, 160, 768, 1024, 2048, 2560, 5120]
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_orthogonality(n):
+    h = hadamard_matrix_np(n, normalized=False)
+    assert np.allclose(h @ h.T, n * np.eye(n), atol=1e-2)
+    assert set(np.unique(h)) <= {-1.0, 1.0}
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_fwht_matches_dense(n):
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(4, n)).astype(np.float32)
+    h = hadamard_matrix_np(n, normalized=False)
+    got = np.asarray(fwht(jnp.asarray(x)))
+    want = x @ h.T
+    assert np.allclose(got, want, atol=1e-2 * np.abs(want).max())
+
+
+@pytest.mark.parametrize("n", [128, 768, 2560])
+def test_inverse_round_trip(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(3, n)).astype(np.float32))
+    back = had_transform_t(had_transform(x))
+    assert np.allclose(np.asarray(back), np.asarray(x), atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [64, 768, 2560])
+def test_fold_compute_invariance(n):
+    """(H y) @ (H W) == y @ W -- the zero-overhead fusion of §4.2."""
+    rng = np.random.default_rng(n)
+    y = jnp.asarray(rng.normal(size=(5, n)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, 32)).astype(np.float32))
+    ref = y @ w
+    got = had_transform(y) @ fold_hadamard_into_weight(w, axis=0)
+    assert np.allclose(np.asarray(got), np.asarray(ref),
+                       atol=1e-3 * float(jnp.abs(ref).max()))
+
+
+def test_hadamard_flattens_outliers():
+    """Rotation spreads single-channel outliers across the basis."""
+    rng = np.random.default_rng(0)
+    y = rng.normal(size=(256, 2048)).astype(np.float32)
+    y[:, 7] *= 300.0                        # massive channel outlier
+    yh = np.asarray(had_transform(jnp.asarray(y)))
+    kurt = lambda a: float((((a - a.mean()) / a.std()) ** 4).mean())
+    assert kurt(yh) < kurt(y) / 5
+    assert np.abs(yh).max() < np.abs(y).max() / 3
+
+
+@given(st.sampled_from([48, 96, 160, 384, 1280]))
+@settings(max_examples=5, deadline=None)
+def test_decompose_valid(n):
+    p, m = decompose(n)
+    assert (2 ** p) * m == n and m in (1, 12, 20)
+
+
+def test_decompose_rejects_impossible():
+    with pytest.raises(ValueError):
+        decompose(18)

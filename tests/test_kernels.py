@@ -1,0 +1,260 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (per-kernel allclose against ref.py)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.causal_conv1d import causal_conv1d
+from repro.kernels.hadamard_quant import hadamard_quant
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.rmsnorm_quant import rmsnorm_quant
+from repro.kernels.selective_scan import selective_scan
+from repro.quant import quantizers as Q
+
+RNG = np.random.default_rng(0)
+
+
+def _i8(*shape):
+    return jnp.asarray(RNG.integers(-128, 128, shape, dtype=np.int8))
+
+
+def _f32(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (100, 300, 170),
+                                   (256, 128, 384), (33, 257, 65)])
+def test_int8_matmul_shapes(m, k, n):
+    qx, qw = _i8(m, k), _i8(k, n)
+    bias = _f32(n)
+    got = int8_matmul(qx, qw, 0.01, 0.02, bias)
+    want = ref.int8_matmul_ref(qx, qw, 0.01, 0.02, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul_dtypes(out_dtype):
+    qx, qw = _i8(64, 64), _i8(64, 64)
+    got = int8_matmul(qx, qw, 0.01, 0.02, out_dtype=out_dtype)
+    assert got.dtype == out_dtype
+
+
+def test_int8_matmul_silu_int8_out():
+    qx, qw = _i8(64, 128), _i8(128, 64)
+    got = int8_matmul(qx, qw, 0.01, 0.02, s_out=0.05, apply_silu=True)
+    want = Q.quantize(jax.nn.silu(
+        ref.int8_matmul_ref(qx, qw, 0.01, 0.02)), 0.05)
+    assert got.dtype == jnp.int8
+    # allow off-by-one from rounding at the fp boundary
+    assert np.abs(np.asarray(got, np.int32)
+                  - np.asarray(want, np.int32)).max() <= 1
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm + residual + quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,d", [(4, 64), (100, 512), (257, 384)])
+def test_rmsnorm_quant(t, d):
+    x, r, w = _f32(t, d), _f32(t, d), _f32(d)
+    q1, r1 = rmsnorm_quant(x, r, w, 0.02)
+    q2, r2 = ref.rmsnorm_quant_ref(x, r, w, 0.02)
+    assert np.abs(np.asarray(q1, np.int32)
+                  - np.asarray(q2, np.int32)).max() <= 1
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hadamard quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [256, 512, 768, 2048, 2560])
+def test_hadamard_quant_sizes(n):
+    y = _f32(64, n)
+    got = hadamard_quant(y, 0.03)
+    want = ref.hadamard_quant_ref(y, 0.03)
+    match = (np.asarray(got) == np.asarray(want)).mean()
+    assert match > 0.9999, match
+
+
+# ---------------------------------------------------------------------------
+# causal conv1d
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,l,d,w", [(1, 8, 32, 4), (2, 37, 96, 4),
+                                     (3, 64, 256, 2)])
+def test_causal_conv(b, l, d, w):
+    qx, qw = _i8(b, l, d), _i8(w, d)
+    bias = _f32(d)
+    state = _i8(b, w - 1, d)
+    y1, s1 = causal_conv1d(qx, qw, bias, 0.02, 0.01, state=state)
+    y2, s2 = ref.causal_conv1d_ref(qx, qw, bias, 0.02, 0.01, state=state)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    assert np.array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_causal_conv_chunked_equals_full():
+    """Carrying the int8 tail state across chunks == one full pass."""
+    b, l, d, w = 2, 64, 32, 4
+    qx, qw = _i8(b, l, d), _i8(w, d)
+    bias = _f32(d)
+    full, _ = causal_conv1d(qx, qw, bias, 0.02, 0.01)
+    st = None
+    parts = []
+    for i in range(0, l, 16):
+        y, st = causal_conv1d(qx[:, i:i + 16], qw, bias, 0.02, 0.01,
+                              state=st)
+        parts.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(parts, 1)),
+                               np.asarray(full), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# selective scan (the paper's core kernel)
+# ---------------------------------------------------------------------------
+
+def _scan_inputs(b, l, d, n, seed=0):
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(b, l, d)).astype(np.float32) * 0.5
+    dt = np.abs(rng.normal(size=(b, l, d))).astype(np.float32) * 0.1
+    a = -np.abs(rng.normal(size=(d, n))).astype(np.float32)
+    bm = rng.normal(size=(b, l, n)).astype(np.float32)
+    cm = rng.normal(size=(b, l, n)).astype(np.float32)
+    dr = rng.normal(size=d).astype(np.float32)
+    z = rng.normal(size=(b, l, d)).astype(np.float32)
+    qs, scales = {}, {}
+    for name, arr in [("u", u), ("dt", dt), ("A", a), ("B", bm),
+                      ("C", cm)]:
+        s = float(Q.symmetric_scale(jnp.asarray(arr)))
+        scales[name] = s
+        qs[name] = Q.quantize(jnp.asarray(arr), s)
+    svec = jnp.asarray([scales[k] for k in ("u", "dt", "A", "B", "C")],
+                       jnp.float32)
+    return qs, scales, svec, jnp.asarray(dr), jnp.asarray(z)
+
+
+@pytest.mark.parametrize("b,l,d,n,chunk,bd", [
+    (1, 16, 32, 8, 16, 32),
+    (2, 100, 192, 16, 32, 64),
+    (2, 64, 128, 16, 128, 256),   # chunk > L, block > D
+    (1, 33, 96, 4, 8, 32),        # ragged L
+])
+def test_selective_scan_shapes(b, l, d, n, chunk, bd):
+    qs, scales, svec, dr, z = _scan_inputs(b, l, d, n, seed=l)
+    y1, h1 = selective_scan(qs["u"], qs["dt"], qs["A"], qs["B"], qs["C"],
+                            svec, dr, z=z, chunk=chunk, block_d=bd)
+    y2, h2 = ref.selective_scan_quant_ref(
+        qs["u"], qs["dt"], qs["A"], qs["B"], qs["C"], scales, dr, z=z,
+        return_state=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_selective_scan_state_carry():
+    """h0 in, h_last out: chunked prefill equals one full scan."""
+    b, l, d, n = 1, 64, 64, 8
+    qs, scales, svec, dr, _ = _scan_inputs(b, l, d, n, seed=9)
+    y_full, h_full = selective_scan(qs["u"], qs["dt"], qs["A"], qs["B"],
+                                    qs["C"], svec, dr, chunk=32,
+                                    block_d=64)
+    h = None
+    ys = []
+    for i in range(0, l, 16):
+        sl = lambda a: a[:, i:i + 16]
+        y, h = selective_scan(sl(qs["u"]), sl(qs["dt"]), qs["A"],
+                              sl(qs["B"]), sl(qs["C"]), svec, dr, h0=h,
+                              chunk=16, block_d=64)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(1, 3), st.sampled_from([8, 24, 64]),
+       st.sampled_from([32, 64]), st.sampled_from([4, 16]))
+@settings(max_examples=8, deadline=None)
+def test_selective_scan_property(b, l, d, n):
+    qs, scales, svec, dr, z = _scan_inputs(b, l, d, n, seed=b * l + d)
+    y1, _ = selective_scan(qs["u"], qs["dt"], qs["A"], qs["B"], qs["C"],
+                           svec, dr, z=z, chunk=16, block_d=32)
+    y2 = ref.selective_scan_quant_ref(qs["u"], qs["dt"], qs["A"], qs["B"],
+                                      qs["C"], scales, dr, z=z)
+    assert np.allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3,
+                       atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# quantized SSD scan (Mamba-2 kernel, MXU-matmul formulation)
+# ---------------------------------------------------------------------------
+
+def _ssd_kernel_inputs(b, l, h, hd, n, seed=7):
+    from repro.models.ssd import ssd_chunked
+    rng = np.random.default_rng(seed)
+    arrs = {
+        "x": rng.normal(size=(b, l, h, hd)).astype(np.float32) * 0.5,
+        "dt": (np.abs(rng.normal(size=(b, l, h))) * 0.2
+               ).astype(np.float32),
+        "A": (-np.abs(rng.normal(size=h)) - 0.1).astype(np.float32),
+        "B": rng.normal(size=(b, l, n)).astype(np.float32),
+        "C": rng.normal(size=(b, l, n)).astype(np.float32),
+    }
+    dres = rng.normal(size=h).astype(np.float32)
+    qs, sc = {}, {}
+    for k, a in arrs.items():
+        s = float(Q.symmetric_scale(jnp.asarray(a)))
+        sc[k] = s
+        qs[k] = Q.quantize(jnp.asarray(a), s)
+    svec = jnp.asarray([sc[k] for k in ("x", "dt", "A", "B", "C")],
+                       jnp.float32)
+    dq = {k: jnp.asarray(np.asarray(qs[k]).astype(np.float32) * sc[k])
+          for k in qs}
+    return qs, svec, dq, jnp.asarray(dres)
+
+
+@pytest.mark.parametrize("b,l,h,hd,n,chunk", [
+    (1, 32, 2, 8, 8, 16),
+    (2, 96, 3, 8, 16, 32),
+    (1, 33, 1, 4, 4, 16),     # ragged L
+])
+def test_ssd_scan_kernel(b, l, h, hd, n, chunk):
+    from repro.kernels.ssd_scan import ssd_scan
+    from repro.models.ssd import ssd_chunked
+    qs, svec, dq, dres = _ssd_kernel_inputs(b, l, h, hd, n, seed=l)
+    y_k, s_k = ssd_scan(qs["x"], qs["dt"], qs["A"], qs["B"], qs["C"],
+                        svec, dres, chunk=chunk)
+    y_r, s_r = ssd_chunked(dq["x"], dq["dt"], dq["A"], dq["B"], dq["C"],
+                           dres, chunk=l, return_state=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_scan_kernel_state_carry():
+    from repro.kernels.ssd_scan import ssd_scan
+    qs, svec, dq, dres = _ssd_kernel_inputs(1, 64, 2, 8, 8, seed=3)
+    y_full, s_full = ssd_scan(qs["x"], qs["dt"], qs["A"], qs["B"],
+                              qs["C"], svec, dres, chunk=16)
+    h0 = None
+    ys = []
+    for i in range(0, 64, 32):
+        sl = lambda a: a[:, i:i + 32]
+        y, h0 = ssd_scan(sl(qs["x"]), sl(qs["dt"]), qs["A"],
+                         sl(qs["B"]), sl(qs["C"]), svec, dres, h0=h0,
+                         chunk=16)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(s_full),
+                               rtol=2e-3, atol=2e-3)

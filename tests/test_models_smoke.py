@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting shapes and finiteness, plus
+decode/forward consistency (deliverable f)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, scale_down
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn)
+from repro.optim.adamw import OptimConfig
+from repro.train.step import init_train_state, make_train_step
+
+ALL_ARCHS = ASSIGNED_ARCHS + ["mamba-130m"]
+
+
+def _batch(cfg, key, b=2, l=32):
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(key, (b, 24, cfg.d_model)),
+                "tokens": jax.random.randint(key, (b, 8), 0,
+                                             cfg.vocab_size),
+                "targets": jax.random.randint(key, (b, 8), 0,
+                                              cfg.vocab_size)}
+    if cfg.family == "vlm":
+        lt = l - cfg.prefix_len
+        return {"patches": jax.random.normal(
+                    key, (b, cfg.prefix_len, cfg.d_model)),
+                "tokens": jax.random.randint(key, (b, lt), 0,
+                                             cfg.vocab_size),
+                "targets": jax.random.randint(key, (b, lt), 0,
+                                              cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (b, l), 0, cfg.vocab_size),
+            "targets": jax.random.randint(key, (b, l), 0,
+                                          cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = scale_down(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, _ = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    assert logits.shape[0] == batch["tokens"].shape[0]
+    assert logits.shape[1] == batch["tokens"].shape[1]
+    assert logits.shape[2] == cfg.vocab_size
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_one_train_step(arch):
+    cfg = scale_down(get_config(arch))
+    key = jax.random.PRNGKey(1)
+    state = init_train_state(key, cfg)
+    step = jax.jit(make_train_step(cfg, OptimConfig(total_steps=10),
+                                   remat=True))
+    state2, metrics = step(state, _batch(cfg, key))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # params actually changed
+    delta = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()),
+        state["params"], state2["params"])
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = scale_down(get_config(arch))
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    b, l = 2, 8
+    toks = jax.random.randint(key, (b, l), 0, cfg.vocab_size)
+    state = init_decode_state(cfg, b, 32, cache_dtype=jnp.float32)
+    if cfg.family == "audio":
+        frames = jax.random.normal(key, (b, 16, cfg.d_model))
+        logits_full, _ = forward(params, cfg,
+                                 {"frames": frames, "tokens": toks})
+        # build enc_out the way forward does
+        from repro.models import common as C
+        from repro.models.model import _scan_blocks
+        from repro.models.transformer import (encoder_layer,
+                                              sinusoidal_positions)
+        x = frames.astype(jnp.float32) + sinusoidal_positions(
+            16, cfg.d_model)[None]
+        enc, _ = _scan_blocks(
+            lambda lp, h, q: encoder_layer(lp, cfg, h, qctx=q), x,
+            params["enc_layers"], None, "enc")
+        state["enc_out"] = C.rmsnorm(enc, params["enc_norm"],
+                                     cfg.norm_eps)
+    elif cfg.family == "vlm":
+        pytest.skip("vlm prefix prefill is exercised in serving tests")
+    else:
+        logits_full, _ = forward(params, cfg, {"tokens": toks})
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t))
+    outs = []
+    for i in range(l):
+        lg, state = step(params, state, toks[:, i])
+        outs.append(lg)
+    err = float(jnp.abs(logits_full - jnp.stack(outs, 1)).max())
+    scale = float(jnp.abs(logits_full).max())
+    assert err <= 1e-3 * max(scale, 1.0), (err, scale)
+
+
+def test_long_context_applicability():
+    """long_500k runs for SSM/hybrid archs and is skipped for pure
+    attention (DESIGN.md §Arch-applicability)."""
+    from repro.configs import LONG_500K, cell_supported
+    runnable = {a for a in ASSIGNED_ARCHS
+                if cell_supported(get_config(a), LONG_500K)[0]}
+    assert runnable == {"zamba2-1.2b", "xlstm-1.3b"}

@@ -1,0 +1,87 @@
+"""Unit + property tests for the quantizer primitives (paper §3.2, §F)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import quantizers as Q
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.1, 100.0))
+@settings(max_examples=25, deadline=None)
+def test_qdq_error_bounded_by_half_step(seed, scale_mag):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=256).astype(np.float32) * scale_mag)
+    s = Q.symmetric_scale(x)
+    err = jnp.abs(Q.qdq(x, s) - x)
+    assert float(err.max()) <= float(s) / 2 + 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_quantize_range(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=512).astype(np.float32) * 10)
+    q = Q.quantize(x, Q.symmetric_scale(x))
+    assert q.dtype == jnp.int8
+    assert int(q.min()) >= -128 and int(q.max()) <= 127
+
+
+def test_percentile_scale_smaller_under_outliers():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=100_000).astype(np.float32)
+    x[::1000] *= 50.0                       # 0.1% outliers (paper Fig. 12)
+    xj = jnp.asarray(x)
+    s_mm = float(Q.symmetric_scale(xj))
+    s_p = float(Q.percentile_scale(xj, 99.9))
+    assert s_p < s_mm / 5
+    # bulk error must improve (the paper's central observation for x)
+    bulk = np.abs(x) < s_p * 127
+    e_mm = np.abs(np.asarray(Q.qdq(xj, s_mm)) - x)[bulk].mean()
+    e_p = np.abs(np.asarray(Q.qdq(xj, s_p)) - x)[bulk].mean()
+    assert e_p < e_mm / 5
+
+
+def test_dynamic_equals_static_with_same_scale():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=128).astype(np.float32))
+    assert np.allclose(np.asarray(Q.dynamic_qdq(x)),
+                       np.asarray(Q.qdq(x, Q.symmetric_scale(x))))
+
+
+def test_log2_preserves_small_values_better():
+    rng = np.random.default_rng(2)
+    x = np.abs(rng.normal(size=10_000)).astype(np.float32) * 0.01
+    x[0] = 100.0                            # one huge outlier
+    xj = jnp.asarray(x)
+    uni = np.asarray(Q.qdq(xj, Q.symmetric_scale(xj)))
+    log2 = np.asarray(Q.log2_qdq(xj))
+    small = x < 0.05
+    rel_uni = np.abs(uni[small] - x[small]).mean()
+    rel_log = np.abs(log2[small] - x[small]).mean()
+    assert rel_log < rel_uni
+
+
+def test_asymmetric_handles_shifted_distributions():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray((rng.normal(size=4096) * 0.1 + 5.0).astype(np.float32))
+    s, zp = Q.asymmetric_qparams(x)
+    err_asym = float(jnp.abs(Q.qdq_asymmetric(x, s, zp) - x).mean())
+    err_sym = float(jnp.abs(Q.qdq(x, Q.symmetric_scale(x)) - x).mean())
+    assert err_asym < err_sym
+
+
+@given(st.integers(1, 7))
+@settings(max_examples=7, deadline=None)
+def test_per_channel_no_worse_than_per_tensor(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    w[:, 0] *= 50                            # one hot channel
+    wj = jnp.asarray(w)
+    s_pc = Q.per_channel_scale(wj, axis=1)
+    e_pc = float(jnp.abs(Q.qdq(wj, s_pc) - wj).mean())
+    e_pt = float(jnp.abs(Q.qdq(wj, Q.symmetric_scale(wj)) - wj).mean())
+    assert e_pc <= e_pt + 1e-7

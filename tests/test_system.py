@@ -1,0 +1,91 @@
+"""End-to-end system tests: the full paper pipeline on a small model.
+
+train -> calibrate -> quantize -> evaluate -> serve, all through the
+public API.  Accuracy-ordering claims on trained models live in the
+benchmark harness (they need more training steps than a unit test
+budget); here we assert the pipeline's invariants.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scale_down
+from repro.data import batches, eval_batches
+from repro.models import forward, loss_fn
+from repro.models.quantize import make_qctx, quantize_model
+from repro.optim import OptimConfig
+from repro.quant.calibrate import run_calibration
+from repro.quant.recipe import get_spec
+from repro.serve import generate
+from repro.train import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    cfg = scale_down(get_config("mamba-130m"))
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, OptimConfig(
+        lr=2e-3, warmup_steps=10, total_steps=60)))
+    losses = []
+    for b in batches(cfg.vocab_size, 8, 64, seed=11, num_steps=40):
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    params = state["params"]
+    calib = eval_batches(cfg.vocab_size, 4, 64, 4, seed=777)
+    stats = run_calibration(
+        lambda p, b: forward(p, cfg, b, qctx={"mode": "calib"}),
+        params, calib)
+    return cfg, params, stats, losses
+
+
+def _ppl(cfg, params, qctx=None):
+    evalb = eval_batches(cfg.vocab_size, 8, 64, 3, seed=999)
+    f = jax.jit(lambda p, b: loss_fn(p, cfg, b, qctx=qctx)[0])
+    return math.exp(float(np.mean([float(f(params, b)) for b in evalb])))
+
+
+def test_training_learned_structure(pipeline):
+    cfg, params, stats, losses = pipeline
+    assert losses[-1] < losses[0] - 0.3
+    # eval ppl far below uniform (the corpus-graph consistency invariant)
+    assert _ppl(cfg, params) < cfg.vocab_size / 2
+
+
+def test_quantized_ppl_close_to_fp(pipeline):
+    cfg, params, stats, _ = pipeline
+    fp = _ppl(cfg, params)
+    spec = get_spec("quamba")
+    qp, qd = quantize_model(params, stats, cfg, spec)
+    q = _ppl(cfg, qp, make_qctx(spec, qd))
+    assert q < fp * 1.3, (fp, q)
+
+
+def test_quamba_no_worse_than_static(pipeline):
+    cfg, params, stats, _ = pipeline
+    vals = {}
+    for m in ("quamba", "static"):
+        spec = get_spec(m)
+        qp, qd = quantize_model(params, stats, cfg, spec)
+        vals[m] = _ppl(cfg, qp, make_qctx(spec, qd))
+    assert vals["quamba"] <= vals["static"] * 1.02
+
+
+def test_quantized_generation_end_to_end(pipeline):
+    cfg, params, stats, _ = pipeline
+    spec = get_spec("quamba")
+    qp, qd = quantize_model(params, stats, cfg, spec)
+    outs = generate(qp, cfg, [[1, 2], [3]], max_new_tokens=5,
+                    qctx=make_qctx(spec, qd), max_len=32)
+    assert len(outs) == 2 and all(len(o) == 5 for o in outs)
+    assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
+
+
+def test_calibration_stats_structure(pipeline):
+    cfg, params, stats, _ = pipeline
+    layer_stats = stats["layers"]
+    for site in ("in", "x", "y", "y_had", "dt", "B", "C"):
+        assert site in layer_stats, site
+        assert layer_stats[site]["amax"].shape == (cfg.n_layers,)
