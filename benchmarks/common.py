@@ -14,13 +14,11 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 import jax
 
+from repro import api
 from repro.configs import ModelConfig, get_config, scale_down
 from repro.data import batches, eval_batches
 from repro.models import forward, loss_fn
-from repro.models.quantize import make_qctx, quantize_model
 from repro.optim import OptimConfig
-from repro.quant.calibrate import run_calibration
-from repro.quant.recipe import QuantSpec, get_spec
 from repro.train import checkpoint as ckpt
 from repro.train import init_train_state, make_train_step
 
@@ -54,9 +52,7 @@ def trained_model(arch: str = "mamba-130m") -> Tuple[ModelConfig, Dict]:
 
 def calibration_stats(cfg: ModelConfig, params, n: int = 6):
     calib = eval_batches(cfg.vocab_size, 8, SEQ, n, seed=777)
-    return run_calibration(
-        lambda p, b: forward(p, cfg, b, qctx={"mode": "calib"}),
-        params, calib)
+    return api.calibration_stats(cfg, params, calib)
 
 
 def perplexity_of(cfg: ModelConfig, params, qctx=None, n: int = 4
@@ -66,11 +62,23 @@ def perplexity_of(cfg: ModelConfig, params, qctx=None, n: int = 4
     return math.exp(float(np.mean([float(f(params, b)) for b in evalb])))
 
 
+def perplexity_of_model(model: api.QuantizedModel, n: int = 4) -> float:
+    """Perplexity of a QuantizedModel artifact (fp or quantized)."""
+    # pass params as a jit argument (closing over them would bake the
+    # whole weight tree into the executable as XLA constants)
+    return perplexity_of(model.cfg, model.params, model.qctx(), n)
+
+
+def quantized_model(cfg, params, stats, method_or_spec) -> api.QuantizedModel:
+    """Quantize through the public facade -> QuantizedModel artifact."""
+    return api.Quantizer(cfg, method_or_spec).with_stats(stats) \
+        .quantize(params)
+
+
 def quantized(cfg, params, stats, method_or_spec):
-    spec = (method_or_spec if isinstance(method_or_spec, QuantSpec)
-            else get_spec(method_or_spec))
-    qparams, qdata = quantize_model(params, stats, cfg, spec)
-    return qparams, make_qctx(spec, qdata)
+    """Back-compat helper: (qparams, qctx) pair from the artifact."""
+    qm = quantized_model(cfg, params, stats, method_or_spec)
+    return qm.params, qm.qctx()
 
 
 def cloze_accuracy(cfg: ModelConfig, params, qctx=None, n: int = 4

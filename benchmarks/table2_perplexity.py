@@ -18,8 +18,8 @@ def run() -> dict:
     stats = common.calibration_stats(cfg, params)
     out = {"fp16": common.perplexity_of(cfg, params)}
     for m in METHODS:
-        qparams, qctx = common.quantized(cfg, params, stats, m)
-        out[m] = common.perplexity_of(cfg, qparams, qctx)
+        model = common.quantized_model(cfg, params, stats, m)
+        out[m] = common.perplexity_of_model(model)
     for k, v in out.items():
         common.emit(f"table2/ppl_{k}", 0.0, f"ppl={v:.4f}")
     # the paper's headline orderings

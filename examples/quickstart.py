@@ -1,10 +1,21 @@
-"""Quickstart: the full Quamba pipeline on a laptop-scale Mamba LM.
+"""Quickstart: the full Quamba pipeline on a laptop-scale Mamba LM,
+driven entirely through the public API (``repro.api``).
 
 1. train a small Mamba on the synthetic corpus
-2. calibrate static scales on 512-ish held-out samples (paper §5.1)
-3. quantize with the Quamba recipe (percentile x-clip + Hadamard y)
-4. compare perplexity: FP vs naive-static vs Quamba
+2. build quantized artifacts with ``api.Quantizer``: calibration scales
+   come from 512-ish held-out samples (paper §5.1) and the Quamba recipe
+   (percentile x-clip + Hadamard-rotated output) is applied site-by-site
+   via the family's registered site map
+3. compare perplexity: FP vs naive-static vs Quamba, all through
+   ``QuantizedModel.loss``
+4. save the artifact and reload it (atomic, crc-checked)
 5. generate tokens with the quantized model through the serving engine
+
+The legacy free functions (``run_calibration`` / ``quantize_model`` /
+``make_qctx``) still exist but are deprecated shims; new code should use
+``api.Quantizer(cfg, spec).calibrate(batches).quantize(params)``, which
+returns a ``QuantizedModel`` bundling (params, qdata, spec, cfg) with
+``forward`` / ``loss`` / ``engine`` / ``save`` / ``load``.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--steps 150]
 """
@@ -12,17 +23,15 @@ from __future__ import annotations
 
 import argparse
 import math
+import os
+import tempfile
 
 import jax
 
+from repro import api
 from repro.configs import get_config, scale_down
 from repro.data import batches, eval_batches
-from repro.models import forward, loss_fn
-from repro.models.quantize import make_qctx, quantize_model
 from repro.optim import OptimConfig
-from repro.quant.calibrate import run_calibration
-from repro.quant.recipe import get_spec
-from repro.serve import generate
 from repro.train import init_train_state, make_train_step
 
 
@@ -45,34 +54,40 @@ def main() -> None:
             print(f"    step {i+1}: loss {float(m['loss']):.3f}")
     params = state["params"]
 
-    print("[2/5] calibrating activation scales")
-    calib = eval_batches(cfg.vocab_size, 8, 128, 6, seed=777)
-    stats = run_calibration(
-        lambda p, b: forward(p, cfg, b, qctx={"mode": "calib"}),
-        params, calib)
+    print("[2/5] calibrating + quantizing (Quamba W8A8 + static baseline)")
+    calib = list(eval_batches(cfg.vocab_size, 8, 128, 6, seed=777))
+    stats = api.calibration_stats(cfg, params, calib)
+    q_model = api.Quantizer(cfg, "quamba").with_stats(stats) \
+        .quantize(params)
+    s_model = api.Quantizer(cfg, "static").with_stats(stats) \
+        .quantize(params)
+    fp_model = api.Quantizer(cfg, "fp").quantize(params)
 
-    print("[3/5] quantizing (Quamba W8A8) + naive static baseline")
-    q_spec = get_spec("quamba")
-    q_params, q_data = quantize_model(params, stats, cfg, q_spec)
-    s_spec = get_spec("static")
-    s_params, s_data = quantize_model(params, stats, cfg, s_spec)
+    print("[3/5] perplexity comparison")
+    evalb = list(eval_batches(cfg.vocab_size, 16, 128, 4, seed=999))
 
-    print("[4/5] perplexity comparison")
-    evalb = eval_batches(cfg.vocab_size, 16, 128, 4, seed=999)
-
-    def ppl(p, qctx=None):
+    def ppl(model: api.QuantizedModel) -> float:
         import numpy as np
-        f = jax.jit(lambda pp, b: loss_fn(pp, cfg, b, qctx=qctx)[0])
-        return math.exp(float(np.mean([float(f(p, b)) for b in evalb])))
+        from repro.models import loss_fn
+        # params ride as a jit argument, not as baked-in XLA constants
+        qctx = model.qctx()
+        f = jax.jit(lambda p, b: loss_fn(p, cfg, b, qctx=qctx)[0])
+        return math.exp(float(np.mean(
+            [float(f(model.params, b)) for b in evalb])))
 
-    print(f"    fp32          : {ppl(params):.3f}")
-    print(f"    static  W8A8  : {ppl(s_params, make_qctx(s_spec, s_data)):.3f}")
-    print(f"    quamba  W8A8  : {ppl(q_params, make_qctx(q_spec, q_data)):.3f}")
+    print(f"    fp32          : {ppl(fp_model):.3f}")
+    print(f"    static  W8A8  : {ppl(s_model):.3f}")
+    print(f"    quamba  W8A8  : {ppl(q_model):.3f}")
+
+    print("[4/5] save / load round trip")
+    path = os.path.join(tempfile.mkdtemp(prefix="quamba_"), "artifact")
+    q_model.save(path)
+    q_model = api.load(path)
+    print(f"    reloaded {q_model} from {path}")
 
     print("[5/5] generating with the quantized model")
-    outs = generate(q_params, cfg, [[1, 2, 3], [42, 7]],
-                    max_new_tokens=12, qctx=make_qctx(q_spec, q_data),
-                    max_len=64)
+    outs = q_model.generate([[1, 2, 3], [42, 7]], max_new_tokens=12,
+                            max_len=64)
     for i, o in enumerate(outs):
         print(f"    prompt {i}: {o}")
     print("done.")

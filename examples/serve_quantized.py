@@ -14,8 +14,9 @@ import time
 
 import jax
 
-from benchmarks.common import calibration_stats, quantized, trained_model
-from repro.serve import Engine, Request
+from benchmarks.common import calibration_stats, quantized_model, \
+    trained_model
+from repro.serve import Request
 
 
 def main() -> None:
@@ -27,13 +28,10 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg, params = trained_model()
-    if args.quant == "fp":
-        qparams, qctx = params, None
-    else:
-        stats = calibration_stats(cfg, params)
-        qparams, qctx = quantized(cfg, params, stats, args.quant)
-
-    eng = Engine(qparams, cfg, max_batch=4, max_len=256, qctx=qctx)
+    stats = (calibration_stats(cfg, params)
+             if args.quant != "fp" else None)
+    model = quantized_model(cfg, params, stats, args.quant)
+    eng = model.engine(max_batch=4, max_len=256)
     reqs = [Request(uid=i, prompt=[(7 * i + j) % cfg.vocab_size
                                    for j in range(2 + i % 5)],
                     max_new_tokens=args.max_new,

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# One-command verification: runs the tier-1 test suite exactly as CI does.
+#   ./scripts/check.sh            # full suite
+#   ./scripts/check.sh tests/test_api.py   # any extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -1,0 +1,24 @@
+"""Public quantization API (the supported entry point).
+
+    from repro import api
+
+    qm = (api.Quantizer(cfg, spec="quamba")
+          .calibrate(calib_batches)
+          .quantize(params))            # -> QuantizedModel artifact
+    logits, _ = qm.forward(batch)
+    loss, metrics = qm.loss(batch)
+    eng = qm.engine(max_batch=8)        # continuous-batching server
+    qm.save("artifacts/mamba-quamba")   # atomic, crc-checked
+    qm2 = api.load("artifacts/mamba-quamba")
+
+Architecture families resolve their quant sites through the declarative
+site-map registry (``repro.quant.sitemap``); supporting a new family is a
+``register_site_map`` call, not an edit to this package.
+"""
+from repro.api.artifact import QuantizedModel
+from repro.api.quantizer import Quantizer, calibration_stats, quantize
+
+load = QuantizedModel.load
+
+__all__ = ["QuantizedModel", "Quantizer", "calibration_stats", "quantize",
+           "load"]

@@ -1,0 +1,128 @@
+"""QuantizedModel: the saveable product of the quantization pipeline.
+
+Bundles ``(params, qdata, spec, cfg)`` so callers never hand-thread a raw
+``qctx`` dict into forward/loss/engine again.  Serialization reuses the
+fault-tolerant key-path tree format of ``repro.train.checkpoint``
+(atomic tmp-dir rename, per-leaf crc32), so a saved artifact survives
+crashed writers and detects corruption on load.
+
+Layout of ``save(path)``:
+  <path>/quantized_model.json    spec + cfg (dataclass fields) + version
+  <path>/arrays/                 params (+ qdata) leaves, self-describing
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, loss_fn
+from repro.quant.recipe import QuantSpec
+
+_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    """A quantized (or fp, when ``spec is None``) model artifact."""
+
+    params: Dict
+    qdata: Optional[Dict]
+    spec: Optional[QuantSpec]
+    cfg: ModelConfig
+
+    # -- execution --------------------------------------------------------
+    def qctx(self, int8_compute: bool = False) -> Optional[Dict]:
+        """The forward-pass quant context (None in fp mode)."""
+        if self.spec is None or self.qdata is None:
+            return None
+        out = {"mode": "quant", "spec": self.spec, **self.qdata}
+        if int8_compute:
+            out["int8_compute"] = True
+        return out
+
+    def forward(self, batch: Dict, **kw):
+        """Quantized forward pass -> (logits, aux)."""
+        return forward(self.params, self.cfg, batch,
+                       qctx=self.qctx(), **kw)
+
+    def loss(self, batch: Dict, **kw):
+        """Quantized loss -> (loss, metrics)."""
+        return loss_fn(self.params, self.cfg, batch,
+                       qctx=self.qctx(), **kw)
+
+    def engine(self, **kw):
+        """A continuous-batching ``repro.serve.Engine`` over this model.
+
+        The spec's ``quantize_kv_cache`` flag flows through: attention KV
+        caches are stored int8 with per-entry scales when it is set.
+        """
+        from repro.serve.engine import Engine  # local: avoid import cycle
+        return Engine(self.params, self.cfg, qctx=self.qctx(), **kw)
+
+    def generate(self, prompts: List[List[int]], *,
+                 max_new_tokens: int = 32, temperature: float = 0.0,
+                 max_len: int = 2048) -> List[List[int]]:
+        """Convenience batch generation through the serving engine."""
+        from repro.serve.engine import generate
+        return generate(self.params, self.cfg, prompts,
+                        max_new_tokens=max_new_tokens,
+                        temperature=temperature, qctx=self.qctx(),
+                        max_len=max_len)
+
+    # -- persistence ------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Atomic: arrays + metadata are staged together and committed
+        with a single directory swap, so a crash mid-save never leaves a
+        torn artifact (and never destroys the previous one)."""
+        from repro.train import checkpoint as ckpt
+        path = os.path.abspath(path)
+        parent = os.path.dirname(path)
+        os.makedirs(parent, exist_ok=True)
+        ckpt.gc_stale_dirs(parent, os.path.basename(path))
+        stage = f"{path}.tmp-{os.getpid()}"
+        os.makedirs(stage)
+        trees: Dict[str, Any] = {"params": self.params}
+        if self.qdata is not None:
+            trees["qdata"] = self.qdata
+        ckpt.save_tree(os.path.join(stage, "arrays"), trees)
+        meta = {
+            "format_version": _FORMAT_VERSION,
+            "spec": (dataclasses.asdict(self.spec)
+                     if self.spec is not None else None),
+            "cfg": dataclasses.asdict(self.cfg),
+        }
+        with open(os.path.join(stage, "quantized_model.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        ckpt.commit_dir(stage, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "QuantizedModel":
+        from repro.train import checkpoint as ckpt
+        with open(os.path.join(path, "quantized_model.json")) as f:
+            meta = json.load(f)
+        if meta["format_version"] > _FORMAT_VERSION:
+            raise ValueError(
+                f"artifact at {path} has format_version "
+                f"{meta['format_version']} > supported {_FORMAT_VERSION}")
+        trees = ckpt.load_tree(os.path.join(path, "arrays"))
+        spec = (QuantSpec(**meta["spec"])
+                if meta["spec"] is not None else None)
+        cfg = ModelConfig(**meta["cfg"])
+        qdata = trees.get("qdata")
+        # int8 weights round-trip through .npy bit-exactly; re-wrap as jnp
+        # lazily (forward casts as needed), keeping load cheap.
+        return cls(params=trees["params"], qdata=qdata, spec=spec, cfg=cfg)
+
+    # -- misc -------------------------------------------------------------
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        m = self.spec.method if self.spec is not None else "fp"
+        bits = (f"W{self.spec.w_bits}A{self.spec.a_bits}"
+                if self.spec is not None else "fp32")
+        return (f"QuantizedModel({self.cfg.name}, method={m}, {bits}, "
+                f"family={self.cfg.family})")

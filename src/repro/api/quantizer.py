@@ -1,0 +1,113 @@
+"""Quantizer: the chainable builder over calibrate -> quantize.
+
+    qm = (Quantizer(cfg, spec="quamba")
+          .calibrate(batches)
+          .quantize(params))          # -> QuantizedModel
+
+absorbs the legacy free-function chain (``run_calibration`` ->
+``quantize_model`` -> ``make_qctx``): the calibration forward is derived
+from the config automatically, stats merge across batches with the
+conservative elementwise max (paper §5.1), and the result is a saveable
+:class:`repro.api.QuantizedModel` artifact.
+
+``calibrate(batches)`` records the stream; the statistics run lazily
+inside ``quantize(params)`` (calibration needs the fp params).  To share
+one calibration pass across several specs, compute the stats once with
+:func:`calibration_stats` and hand them to each builder via
+``with_stats``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, Optional, Union
+
+from repro.api.artifact import QuantizedModel
+from repro.configs.base import ModelConfig
+from repro.models import forward
+from repro.quant.calibrate import run_calibration
+from repro.quant.recipe import QuantSpec, get_spec
+
+
+def _calib_forward(cfg: ModelConfig) -> Callable:
+    return lambda p, b: forward(p, cfg, b, qctx={"mode": "calib"})
+
+
+def calibration_stats(cfg: ModelConfig, params: Dict, batches: Iterable,
+                      max_batches: Optional[int] = None):
+    """Run the calibration pass once; reusable across many specs."""
+    return run_calibration(_calib_forward(cfg), params, batches,
+                           max_batches=max_batches)
+
+
+class Quantizer:
+    """Builds a :class:`QuantizedModel` from a config and a quant spec.
+
+    ``spec`` is a preset name from ``repro.quant.recipe.PRESETS`` (e.g.
+    ``"quamba"``, ``"static"``, ``"quamba-w4a8"``), a ``QuantSpec``, or
+    ``None`` / ``"fp"`` for a pass-through fp artifact (useful so callers
+    can treat fp and quantized models uniformly).
+    """
+
+    def __init__(self, cfg: ModelConfig,
+                 spec: Union[str, QuantSpec, None] = "quamba"):
+        self.cfg = cfg
+        if isinstance(spec, str):
+            spec = get_spec(spec)            # "fp" -> None
+        if spec is not None:
+            spec.validate()
+        self.spec: Optional[QuantSpec] = spec
+        self._stats = None
+        self._batches: Optional[Iterable] = None
+        self._max_batches: Optional[int] = None
+
+    # -- calibration ------------------------------------------------------
+    def calib_forward(self) -> Callable:
+        """The auto-derived calibration forward: emits per-site activation
+        stats (stacked per layer by the scan) instead of quantizing."""
+        return _calib_forward(self.cfg)
+
+    def calibrate(self, batches: Iterable,
+                  max_batches: Optional[int] = None) -> "Quantizer":
+        """Record the calibration stream (consumed inside ``quantize``)."""
+        self._batches = batches
+        self._max_batches = max_batches
+        return self
+
+    def with_stats(self, stats) -> "Quantizer":
+        """Supply pre-computed calibration stats (skips ``calibrate``)."""
+        self._stats = stats
+        return self
+
+    @property
+    def stats(self):
+        return self._stats
+
+    # -- quantization -----------------------------------------------------
+    def quantize(self, params: Dict) -> QuantizedModel:
+        """Apply the spec's recipe site-by-site via the family's
+        registered site map -> a saveable artifact."""
+        if self.spec is None:
+            return QuantizedModel(params=params, qdata=None, spec=None,
+                                  cfg=self.cfg)
+        if self._stats is None:
+            if self._batches is None:
+                raise ValueError(
+                    "no calibration data: call .calibrate(batches) or "
+                    ".with_stats(stats) before .quantize(params)")
+            self._stats = calibration_stats(
+                self.cfg, params, self._batches,
+                max_batches=self._max_batches)
+            self._batches = None             # generator: consumed once
+        from repro.models.quantize import quantize_model
+        new_params, qdata = quantize_model(params, self._stats, self.cfg,
+                                           self.spec)
+        return QuantizedModel(params=new_params, qdata=qdata,
+                              spec=self.spec, cfg=self.cfg)
+
+
+def quantize(params: Dict, cfg: ModelConfig, calib_batches: Iterable,
+             spec: Union[str, QuantSpec, None] = "quamba",
+             max_batches: Optional[int] = None) -> QuantizedModel:
+    """One-shot convenience: calibrate on ``calib_batches`` and quantize."""
+    return (Quantizer(cfg, spec)
+            .calibrate(calib_batches, max_batches=max_batches)
+            .quantize(params))

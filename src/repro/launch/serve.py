@@ -10,12 +10,10 @@ import time
 
 import jax
 
+from repro import api
 from repro.configs import get_config, scale_down
 from repro.data import eval_batches
-from repro.models import forward, init_params
-from repro.models.quantize import make_qctx, quantize_model
-from repro.quant.calibrate import run_calibration
-from repro.quant.recipe import get_spec
+from repro.models import init_params
 from repro.serve import Engine, Request
 
 
@@ -33,17 +31,10 @@ def main() -> None:
         cfg = scale_down(cfg)
     params = init_params(jax.random.PRNGKey(0), cfg)
 
-    qctx = None
-    if args.quant != "fp":
-        calib = eval_batches(cfg.vocab_size, 4, 64, 4, seed=777)
-        stats = run_calibration(
-            lambda p, b: forward(p, cfg, b, qctx={"mode": "calib"}),
-            params, calib)
-        spec = get_spec(args.quant)
-        params, qdata = quantize_model(params, stats, cfg, spec)
-        qctx = make_qctx(spec, qdata)
-
-    eng = Engine(params, cfg, max_batch=4, max_len=128, qctx=qctx)
+    calib = eval_batches(cfg.vocab_size, 4, 64, 4, seed=777)
+    model = api.Quantizer(cfg, args.quant).calibrate(calib) \
+        .quantize(params)
+    eng = model.engine(max_batch=4, max_len=128)
     for i in range(args.requests):
         eng.submit(Request(uid=i, prompt=[1 + i, 2, 3],
                            max_new_tokens=args.max_new))

@@ -43,10 +43,18 @@ def init_attention(key: jax.Array, cfg: ModelConfig) -> Dict:
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   dtype=jnp.bfloat16) -> Dict:
     hd = cfg.resolved_head_dim
-    return {
+    cache = {
         "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
         "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
     }
+    if jnp.dtype(dtype) == jnp.int8:
+        # int8 storage (QuantSpec.quantize_kv_cache): one fp32 scale per
+        # (row, position, kv-head), written alongside each entry
+        cache["k_s"] = jnp.zeros((batch, max_len, cfg.n_kv_heads),
+                                 jnp.float32)
+        cache["v_s"] = jnp.zeros((batch, max_len, cfg.n_kv_heads),
+                                 jnp.float32)
+    return cache
 
 
 def _attend(q, k, v, mask, softcap: float) -> jax.Array:
@@ -67,6 +75,24 @@ def _attend(q, k, v, mask, softcap: float) -> jax.Array:
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bghqk,bkgd->bqghd", p.astype(v.dtype),
                       v, preferred_element_type=jnp.float32)
+
+
+def _attend_int8(q, qk, k_s, qv, v_s, mask, softcap: float) -> jax.Array:
+    """Attend over an int8 KV cache.  The per-entry scales fold into the
+    score and probability tensors (B,G,Hg,1,S) -- a factor head_dim/Hg
+    smaller than dequantizing the full (B,S,G,hd) cache would be."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bqghd,bkgd->bghqk", q, qk.astype(q.dtype),
+                   preferred_element_type=jnp.float32) * scale
+    s = s * jnp.transpose(k_s, (0, 2, 1))[:, :, None, None, :]
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if mask is not None:
+        s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = p * jnp.transpose(v_s, (0, 2, 1))[:, :, None, None, :]
+    return jnp.einsum("bghqk,bkgd->bqghd", p, qv.astype(p.dtype),
+                      preferred_element_type=jnp.float32)
 
 
 def _chunked_attention(q, k, v, q_pos, k_pos, mask_kind: str,
@@ -176,16 +202,36 @@ def attention(p: Dict, cfg: ModelConfig, x: jax.Array, *,
                                   cfg.rope_theta).reshape(b, l, g, hg, hd)
             k = common.apply_rope(k, step_pos, cfg.rope_theta)
         rows = jnp.arange(b)
-        ck = cache["k"].at[rows, cur].set(
-            k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[rows, cur].set(
-            v[:, 0].astype(cache["v"].dtype))
-        new_cache = {"k": ck, "v": cv}
-        k_pos = jnp.arange(ck.shape[1])
+        k_pos = jnp.arange(cache["k"].shape[1])
         mask = (k_pos[None, None, :] <= step_pos[:, :, None])  # (B,1,S)
-        # pass the cache in its storage dtype: _attend accumulates in fp32
-        # without materializing converted copies of the whole cache
-        ctx = _attend(q, ck, cv, mask, cfg.attn_logit_softcap)
+        if cache["k"].dtype == jnp.int8:
+            # int8 KV cache: quantize each new entry with its own
+            # per-(row, head) scale; scales fold into the attention
+            # scores on read (no dequantized cache copy)
+            def q_entry(store, scales, val):        # val (B, g, hd)
+                s = jnp.maximum(jnp.max(jnp.abs(val), axis=-1),
+                                1e-8) / 127.0       # (B, g)
+                qv = jnp.clip(jnp.round(val / s[..., None]),
+                              -127, 127).astype(jnp.int8)
+                return (store.at[rows, cur].set(qv),
+                        scales.at[rows, cur].set(s.astype(jnp.float32)))
+
+            ck, ks = q_entry(cache["k"], cache["k_s"],
+                             k[:, 0].astype(jnp.float32))
+            cv, vs = q_entry(cache["v"], cache["v_s"],
+                             v[:, 0].astype(jnp.float32))
+            new_cache = {"k": ck, "v": cv, "k_s": ks, "v_s": vs}
+            ctx = _attend_int8(q, ck, ks, cv, vs, mask,
+                               cfg.attn_logit_softcap)
+        else:
+            ck = cache["k"].at[rows, cur].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, cur].set(
+                v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            # pass the cache in its storage dtype: _attend accumulates in
+            # fp32 without materializing converted copies of the cache
+            ctx = _attend(q, ck, cv, mask, cfg.attn_logit_softcap)
     else:
         # ---- full-sequence (train / prefill / encoder / cross) ----
         if pos is None:

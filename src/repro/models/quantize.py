@@ -1,5 +1,4 @@
-"""Model quantization transform: (fp params, calibration stats, QuantSpec)
--> (adjusted params, quant-context data) for every architecture family.
+"""Per-family quantization site maps + the (now generic) model transform.
 
 This is where the paper's recipe is wired site-by-site:
   * static per-tensor scales from calibrated abs-max (Eq. 2)
@@ -7,26 +6,34 @@ This is where the paper's recipe is wired site-by-site:
   * ``out_proj`` is quantized with the Hadamard rotation folded in
     (W_out^H = H W_out), paired with the rotated activation scale ``y_had``
   * SmoothQuant-SSM folds per-channel factors into (norm, in_proj) and
-    (conv, x_proj) pairs; QuaRot-SSM adds the rotated-input path
+    attention (ln1, qkv) pairs; QuaRot-SSM adds the rotated-input path
   * conv weights are fake-quantized in place (the fused int8 conv of §4.3)
   * MoE expert weights get weight-only int8 (the LLM.int8 analogue the
     paper pairs with Quamba on Jamba, Table 4)
 
+The wiring itself is *declarative*: each architecture family registers a
+``SiteMap`` (see ``repro.quant.sitemap``) and one generic walker turns
+(params, stats, spec) into (new params, qdata).  Adding an architecture
+means adding a registration, not a new ``if/elif`` branch.
+
 Returned qdata = {"scales": ..., "qw": ...} mirrors the layer-stacked
 structure that ``repro.models.model`` scans over.
+
+NOTE: ``quantize_model`` / ``make_qctx`` remain importable here for
+backward compatibility, but the supported entry point is ``repro.api``
+(``Quantizer`` -> ``QuantizedModel``).
 """
 from __future__ import annotations
 
 from typing import Dict, Tuple
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import ModelConfig
-from repro.quant import quantizers as Q
 from repro.quant import recipe as qrecipe
-from repro.quant.baselines import fold_smoothing, smoothquant_factors
-from repro.quant.observers import stats_scale
+from repro.quant.sitemap import (
+    PCT_NEVER, PCT_X, PCT_X_UNLESS_QUAROT, AliasScale, BlockSites,
+    ComputedScale, FakeQuantSite, Group, ScaleSite, Section, SiteMap,
+    SmoothFold, WeightSite, quantize_with_site_map, register_site_map,
+)
 
 
 def make_qctx(spec: qrecipe.QuantSpec, qdata: Dict,
@@ -37,263 +44,199 @@ def make_qctx(spec: qrecipe.QuantSpec, qdata: Dict,
     return out
 
 
-def _scale(stats, site: str, percentile: float = 100.0):
-    return stats_scale(stats[site], percentile=percentile)
-
-
-def _qw(w, spec, fold_had: bool = False, stacked: bool = True):
-    fn = lambda wi: qrecipe.quantize_weight(
-        wi, spec, fold_hadamard_axis=0 if fold_had else None)
-    return jax.vmap(fn)(w) if stacked else fn(w)
-
-
-def _wqdq(w, spec):
-    """In-place weight fake-quant (conv weights)."""
-    s = Q.symmetric_scale(w, bits=spec.w_bits)
-    return Q.qdq(w, s, bits=spec.w_bits)
-
-
-def _wqdq_experts(w, spec):
-    """Per-expert weight fake-quant: w (..., E, in, out) with leading
-    layer/expert batch dims -> one scale per (layer, expert)."""
-    flat = w.reshape((-1,) + w.shape[-2:])
-    out = jax.vmap(lambda wi: _wqdq(wi, spec))(flat)
-    return out.reshape(w.shape)
-
-
 # ---------------------------------------------------------------------------
-# per-block-type site maps
+# per-block-type site declarations
 # ---------------------------------------------------------------------------
 
-def _mamba_layer(params_l, stats_l, spec, cfg):
-    """Stacked mamba-1 layers -> (new params, scales, qw)."""
-    p = dict(params_l)
-    if spec.method == "smoothquant":
-        # Fold per-channel smoothing into (norm, in_proj) only.  The SSM
-        # input x feeds BOTH x_proj and the scan itself, so smoothing the
-        # x_proj pair would corrupt the recurrence (this is exactly why
-        # SmQ-SSM "fails to address the sensitive x tensor", paper §5.3).
-        def fold_one(norm, w_in, cmax_in):
-            s1 = smoothquant_factors(cmax_in, w_in, spec.smooth_alpha)
-            norm, w_in = fold_smoothing(norm, w_in, s1)
-            new_amax = jnp.max(cmax_in / s1)
-            return norm, w_in, jnp.maximum(new_amax, 1e-8) / 127.0
-
-        (p["norm"], p["in_proj"], s_in) = jax.vmap(fold_one)(
-            p["norm"], p["in_proj"], stats_l["in"]["cmax"])
-        s_x = _scale(stats_l, "x")           # minmax: x left unsmoothed
-    else:
-        s_in = _scale(stats_l, "in")
-        s_x = _scale(stats_l, "x", spec.x_percentile)
-
-    scales = {
-        "in": s_in,
-        "conv_in": _scale(stats_l, "conv_in"),
-        "x": s_x,
-        "x_had": _scale(stats_l, "x_had"),
-        "dt_low": _scale(stats_l, "dt_low"),
-        "dt": _scale(stats_l, "dt"),
-        "B": _scale(stats_l, "B"),
-        "C": _scale(stats_l, "C"),
-        "y": _scale(stats_l, "y"),
-        "y_had": _scale(stats_l, "y_had"),
-        "A": jax.vmap(lambda a: Q.symmetric_scale(-jnp.exp(a)))(
-            p["A_log"]),
+# Mamba-1 (the paper's family).  The SSM input x feeds BOTH x_proj and the
+# scan itself, so SmoothQuant folds only the (norm, in_proj) pair -- the
+# x_proj fold would corrupt the recurrence (exactly why SmQ-SSM "fails to
+# address the sensitive x tensor", paper §5.3).  Under QuaRot the x_proj
+# input is the rotated x, so its scale stays minmax.
+MAMBA_BLOCK = BlockSites(
+    smooth=SmoothFold(kind="norm_linear", norm="norm",
+                      weights=("in_proj",), stat="in", produces="in"),
+    scales=(
+        ScaleSite("in"),
+        ScaleSite("conv_in"),
+        ScaleSite("x", percentile=PCT_X),
+        ScaleSite("x_had"),
+        ScaleSite("dt_low"),
+        ScaleSite("dt"),
+        ScaleSite("B"),
+        ScaleSite("C"),
+        ScaleSite("y"),
+        ScaleSite("y_had"),
+        ComputedScale("A", fn="neg_exp_symmetric", param="A_log"),
         # linear input scales (site name = weight name)
-        "in_proj": s_in,
-        "x_proj": s_x if spec.method != "quarot" else _scale(stats_l, "x"),
-        "dt_proj": _scale(stats_l, "dt_low"),
-        "out_proj": _scale(stats_l, "y"),
-        "out_proj_had": _scale(stats_l, "y_had"),
-    }
-    qw = {
-        "in_proj": _qw(p["in_proj"], spec),
-        "x_proj": _qw(p["x_proj"], spec),
-        "dt_proj": _qw(p["dt_proj"], spec),
-        "out_proj": _qw(p["out_proj"], spec),
-        "out_proj_had": _qw(p["out_proj"], spec, fold_had=True),
-    }
-    p["conv_w"] = jax.vmap(lambda w: _wqdq(w, spec))(p["conv_w"])
-    return p, scales, qw
+        AliasScale("in_proj", of="in"),
+        ScaleSite("x_proj", stat="x", percentile=PCT_X_UNLESS_QUAROT),
+        AliasScale("dt_proj", of="dt_low"),
+        AliasScale("out_proj", of="y"),
+        AliasScale("out_proj_had", of="y_had"),
+    ),
+    weights=(
+        WeightSite("in_proj"),
+        WeightSite("x_proj"),
+        WeightSite("dt_proj"),
+        WeightSite("out_proj"),
+        WeightSite("out_proj_had", param="out_proj", fold_hadamard=True),
+    ),
+    fakequant=(FakeQuantSite("conv_w"),),
+)
+
+# Mamba-2 (Zamba2 hybrid backbone)
+MAMBA2_BLOCK = BlockSites(
+    scales=(
+        ScaleSite("in"),
+        ScaleSite("x", percentile=PCT_X),
+        ScaleSite("y"),
+        ScaleSite("y_had"),
+        AliasScale("in_proj", of="in"),
+        AliasScale("out_proj", of="y"),
+        AliasScale("out_proj_had", of="y_had"),
+    ),
+    weights=(
+        WeightSite("in_proj"),
+        WeightSite("out_proj"),
+        WeightSite("out_proj_had", param="out_proj", fold_hadamard=True),
+    ),
+    fakequant=(FakeQuantSite("conv_w"),),
+)
 
 
-def _attn_scales_qw(p_attn, stats_l, spec, prefix: str = "",
-                    stacked: bool = True):
-    s_in = _scale(stats_l, prefix + "attn_in")
-    s_o = _scale(stats_l, prefix + "o_in")
-    scales = {"wq": s_in, "wk": s_in, "wv": s_in, "wo": s_o}
-    qw = {k: _qw(p_attn[k], spec, stacked=stacked)
-          for k in ("wq", "wk", "wv", "wo")}
-    return scales, qw
+def _attn_group(name: str = "attn", subtree: str = "attn",
+                prefix: str = "") -> Group:
+    """Per-tensor static W8A8 on the four projections (paper §I: attention
+    activations are smooth; Quamba+LLM.int8 treatment of Table 4)."""
+    return Group(
+        name=name, subtree=subtree,
+        scales=(
+            ScaleSite("wq", stat=prefix + "attn_in"),
+            AliasScale("wk", of="wq"),
+            AliasScale("wv", of="wq"),
+            ScaleSite("wo", stat=prefix + "o_in"),
+        ),
+        weights=(WeightSite("wq"), WeightSite("wk"), WeightSite("wv"),
+                 WeightSite("wo")),
+    )
 
 
-def _mlp_scales_qw(p_mlp, stats_l, spec, stacked: bool = True):
-    scales = {"mlp_wi": _scale(stats_l, "mlp_in"),
-              "mlp_wo": _scale(stats_l, "down_in")}
-    qw = {"mlp_wi": _qw(p_mlp["wi"], spec, stacked=stacked),
-          "mlp_wo": _qw(p_mlp["wo"], spec, stacked=stacked)}
-    return scales, qw
+_MLP_GROUP = Group(
+    name="mlp", subtree="mlp",
+    scales=(ScaleSite("mlp_wi", stat="mlp_in"),
+            ScaleSite("mlp_wo", stat="down_in")),
+    weights=(WeightSite("mlp_wi", param="wi"),
+             WeightSite("mlp_wo", param="wo")),
+)
+
+# weight-only int8 per expert (the LLM.int8 analogue, Table 4)
+_MOE_GROUP = Group(
+    name="moe", subtree="moe",
+    fakequant=(FakeQuantSite("wi", per_expert=True),
+               FakeQuantSite("wo", per_expert=True)),
+)
+
+_QKV_SMOOTH = SmoothFold(kind="norm_qkv", norm="ln1",
+                         weights=("wq", "wk", "wv"), stat="attn_in",
+                         subtree="attn")
 
 
-def _decoder_layer(params_l, stats_l, spec, cfg, cross=False,
-                   use_moe=False, stacked=True):
-    p = dict(params_l)
-    if spec.method == "smoothquant":
-        def fold_one(ln1, wq, wk, wv, cmax):
-            s = smoothquant_factors(cmax, wq, spec.smooth_alpha)
-            ln1 = ln1 / s
-            shape = (-1, 1)
-            return (ln1, wq * s.reshape(shape), wk * s.reshape(shape),
-                    wv * s.reshape(shape))
-        fold = jax.vmap(fold_one) if stacked else fold_one
-        attn = dict(p["attn"])
-        (p["ln1"], attn["wq"], attn["wk"], attn["wv"]) = fold(
-            p["ln1"], p["attn"]["wq"], p["attn"]["wk"], p["attn"]["wv"],
-            stats_l["attn_in"]["cmax"])
-        p["attn"] = attn
-
-    scales: Dict = {}
-    qw: Dict = {}
-    scales["attn"], qw["attn"] = _attn_scales_qw(
-        p["attn"], stats_l, spec, stacked=stacked)
+def _decoder_block(cross: bool = False, use_moe: bool = False) -> BlockSites:
+    groups = [_attn_group()]
     if cross:
-        scales["xattn"], qw["xattn"] = _attn_scales_qw(
-            p["xattn"], stats_l, spec, prefix="x_", stacked=stacked)
-    if use_moe:
-        moe_p = dict(p["moe"])
-        # weight-only int8 per expert (the LLM.int8 analogue, Table 4)
-        moe_p["wi"] = _wqdq_experts(moe_p["wi"], spec)
-        moe_p["wo"] = _wqdq_experts(moe_p["wo"], spec)
-        p["moe"] = moe_p
-        scales["moe"], qw["moe"] = {}, {}
-    else:
-        scales["mlp"], qw["mlp"] = _mlp_scales_qw(
-            p["mlp"], stats_l, spec, stacked=stacked)
-    return p, scales, qw
+        groups.append(_attn_group(name="xattn", subtree="xattn",
+                                  prefix="x_"))
+    groups.append(_MOE_GROUP if use_moe else _MLP_GROUP)
+    return BlockSites(smooth=_QKV_SMOOTH, groups=tuple(groups))
 
 
-def _mamba2_layer(params_l, stats_l, spec, cfg):
-    p = dict(params_l)
-    s_in = _scale(stats_l, "in")
-    s_x = _scale(stats_l, "x", spec.x_percentile)
-    scales = {
-        "in": s_in, "x": s_x,
-        "y": _scale(stats_l, "y"), "y_had": _scale(stats_l, "y_had"),
-        "in_proj": s_in,
-        "out_proj": _scale(stats_l, "y"),
-        "out_proj_had": _scale(stats_l, "y_had"),
-    }
-    qw = {
-        "in_proj": _qw(p["in_proj"], spec),
-        "out_proj": _qw(p["out_proj"], spec),
-        "out_proj_had": _qw(p["out_proj"], spec, fold_had=True),
-    }
-    p["conv_w"] = jax.vmap(lambda w: _wqdq(w, spec))(p["conv_w"])
-    return p, scales, qw
+ENCODER_BLOCK = BlockSites(groups=(_attn_group(), _MLP_GROUP))
 
+# xLSTM mLSTM block: the value path v is the outlier-carrying analogue of
+# the SSM input, so it gets the percentile clip; q/k/v/gate projections
+# read the un-clipped minmax scale.
+MLSTM_BLOCK = BlockSites(
+    scales=(
+        ScaleSite("in"),
+        ScaleSite("v", percentile=PCT_X),
+        ScaleSite("y"),
+        ScaleSite("y_had"),
+        AliasScale("up_proj", of="in"),
+        ScaleSite("wq", stat="v"),
+        AliasScale("wk", of="wq"),
+        AliasScale("wv", of="wq"),
+        AliasScale("w_gates", of="wq"),
+        AliasScale("down_proj", of="y"),
+        AliasScale("down_proj_had", of="y_had"),
+    ),
+    weights=(
+        WeightSite("up_proj"),
+        WeightSite("wq"),
+        WeightSite("wk"),
+        WeightSite("wv"),
+        WeightSite("w_gates"),
+        WeightSite("down_proj"),
+        WeightSite("down_proj_had", param="down_proj",
+                   fold_hadamard=True),
+    ),
+    fakequant=(FakeQuantSite("conv_w"),),
+)
 
-def _mlstm_layer(params_l, stats_l, spec, cfg, stacked=True):
-    p = dict(params_l)
-    s_in = _scale(stats_l, "in")
-    s_v = _scale(stats_l, "v", spec.x_percentile)
-    scales = {
-        "in": s_in, "v": s_v,
-        "y": _scale(stats_l, "y"), "y_had": _scale(stats_l, "y_had"),
-        "up_proj": s_in,
-        "wq": _scale(stats_l, "v"), "wk": _scale(stats_l, "v"),
-        "wv": _scale(stats_l, "v"), "w_gates": _scale(stats_l, "v"),
-        "down_proj": _scale(stats_l, "y"),
-        "down_proj_had": _scale(stats_l, "y_had"),
-    }
-    qw = {k: _qw(p[k], spec, stacked=stacked)
-          for k in ("up_proj", "wq", "wk", "wv", "w_gates", "down_proj")}
-    qw["down_proj_had"] = _qw(p["down_proj"], spec, fold_had=True,
-                              stacked=stacked)
-    p["conv_w"] = (jax.vmap(lambda w: _wqdq(w, spec))(p["conv_w"])
-                   if stacked else _wqdq(p["conv_w"], spec))
-    return p, scales, qw
-
-
-def _slstm_layer(params_l, stats_l, spec, cfg):
-    p = dict(params_l)
-    scales = {
-        "in": _scale(stats_l, "in"),
-        "w_in": _scale(stats_l, "in"),
-        "up": _scale(stats_l, "ffn_in"),
-        "down": _scale(stats_l, "ffn_down_in"),
-    }
-    qw = {k: _qw(p[k], spec) for k in ("w_in", "up", "down")}
-    return p, scales, qw
+SLSTM_BLOCK = BlockSites(
+    scales=(
+        ScaleSite("in"),
+        AliasScale("w_in", of="in"),
+        ScaleSite("up", stat="ffn_in"),
+        ScaleSite("down", stat="ffn_down_in"),
+    ),
+    weights=(WeightSite("w_in"), WeightSite("up"), WeightSite("down")),
+)
 
 
 # ---------------------------------------------------------------------------
-# top level
+# family registrations
+# ---------------------------------------------------------------------------
+
+register_site_map(SiteMap("mamba", (
+    Section("layers", MAMBA_BLOCK),
+)))
+
+register_site_map(SiteMap("dense", (
+    Section("layers", _decoder_block()),
+)), "dense", "vlm")
+
+register_site_map(SiteMap("moe", (
+    Section("layers", _decoder_block(use_moe=True)),
+)))
+
+register_site_map(SiteMap("audio", (
+    Section("enc_layers", ENCODER_BLOCK),
+    Section("layers", _decoder_block(cross=True)),
+)))
+
+register_site_map(SiteMap("hybrid", (
+    Section("layers", MAMBA2_BLOCK, stats_transform="hybrid_flatten"),
+    Section("shared", _decoder_block(), layout="single",
+            stats_transform="max0"),
+)))
+
+register_site_map(SiteMap("ssm", (
+    Section("m_blocks", MLSTM_BLOCK, layout="grouped"),
+    Section("s_blocks", SLSTM_BLOCK),
+)))
+
+
+# ---------------------------------------------------------------------------
+# top level (compatibility shim -- prefer repro.api)
 # ---------------------------------------------------------------------------
 
 def quantize_model(params: Dict, stats: Dict, cfg: ModelConfig,
                    spec: qrecipe.QuantSpec) -> Tuple[Dict, Dict]:
-    """Returns (new_params, qdata).  Use ``make_qctx(spec, qdata)`` as the
-    forward's qctx."""
-    spec.validate()
-    new_params = dict(params)
-    scales: Dict = {}
-    qw: Dict = {}
-    fam = cfg.family
-    if fam == "mamba":
-        new_params["layers"], scales["layers"], qw["layers"] = \
-            _mamba_layer(params["layers"], stats["layers"], spec, cfg)
-    elif fam in ("dense", "vlm", "moe"):
-        new_params["layers"], scales["layers"], qw["layers"] = \
-            _decoder_layer(params["layers"], stats["layers"], spec, cfg,
-                           use_moe=(fam == "moe"))
-    elif fam == "audio":
-        enc_p = dict(params["enc_layers"])
-        sc_e: Dict = {}
-        qw_e: Dict = {}
-        sc_e["attn"], qw_e["attn"] = _attn_scales_qw(
-            enc_p["attn"], stats["enc_layers"], spec)
-        sc_e["mlp"], qw_e["mlp"] = _mlp_scales_qw(
-            enc_p["mlp"], stats["enc_layers"], spec)
-        scales["enc_layers"], qw["enc_layers"] = sc_e, qw_e
-        new_params["layers"], scales["layers"], qw["layers"] = \
-            _decoder_layer(params["layers"], stats["layers"], spec, cfg,
-                           cross=True)
-    elif fam == "hybrid":
-        # stats come back grouped (groups, per, ...) by the group scan,
-        # plus an optional flat "tail"; flatten to match stacked params.
-        flat_stats = jax.tree.map(
-            lambda a: a.reshape((-1,) + a.shape[2:]), stats["layers"])
-        if "tail" in stats:
-            flat_stats = jax.tree.map(
-                lambda a, b: jnp.concatenate([a, b], axis=0),
-                flat_stats, stats["tail"])
-        new_params["layers"], scales["layers"], qw["layers"] = \
-            _mamba2_layer(params["layers"], flat_stats, spec, cfg)
-        # shared block stats come back stacked over group invocations;
-        # reduce with max for one shared scale set.
-        sh_stats = jax.tree.map(lambda a: jnp.max(a, axis=0),
-                                stats["shared"])
-        new_params["shared"], scales["shared"], qw["shared"] = \
-            _decoder_layer(params["shared"], sh_stats, spec, cfg,
-                           stacked=False)
-    elif fam == "ssm":
-        # m_blocks stacked (groups, per, ...): flatten, quantize, reshape
-        g, per = params["m_blocks"]["norm"].shape[0], \
-            params["m_blocks"]["norm"].shape[1]
-        flat_p = jax.tree.map(
-            lambda a: a.reshape((g * per,) + a.shape[2:]),
-            params["m_blocks"])
-        flat_s = jax.tree.map(
-            lambda a: a.reshape((g * per,) + a.shape[2:]),
-            stats["m_blocks"])
-        np_, sc_m, qw_m = _mlstm_layer(flat_p, flat_s, spec, cfg)
-        reshape_back = lambda t: jax.tree.map(
-            lambda a: a.reshape((g, per) + a.shape[1:]), t)
-        new_params["m_blocks"] = reshape_back(np_)
-        scales["m_blocks"] = reshape_back(sc_m)
-        qw["m_blocks"] = reshape_back(qw_m)
-        new_params["s_blocks"], scales["s_blocks"], qw["s_blocks"] = \
-            _slstm_layer(params["s_blocks"], stats["s_blocks"], spec, cfg)
-    else:
-        raise ValueError(fam)
-    return new_params, {"scales": scales, "qw": qw}
+    """Returns (new_params, qdata) by walking the family's site map.
+
+    Deprecated free-function surface: prefer
+    ``repro.api.Quantizer(cfg, spec).calibrate(...).quantize(params)``,
+    which returns a saveable ``QuantizedModel`` artifact.
+    """
+    return quantize_with_site_map(params, stats, cfg, spec)

@@ -10,3 +10,6 @@ from repro.quant.observers import (
 )
 from repro.quant.recipe import QuantSpec, PRESETS, get_spec, quantize_weight
 from repro.quant.calibrate import run_calibration
+from repro.quant.sitemap import (
+    SiteMap, register_site_map, get_site_map, registered_families,
+)

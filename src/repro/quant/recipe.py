@@ -59,9 +59,17 @@ class QuantSpec:
         return self.percentile if self.use_percentile else 100.0
 
     def validate(self) -> None:
-        assert self.method in ("quamba", "static", "dynamic", "smoothquant",
-                               "quarot", "in_per", "out_had"), self.method
-        assert self.w_bits in (4, 8) and self.a_bits in (4, 8)
+        # explicit raises (bare asserts are stripped under ``python -O``)
+        methods = ("quamba", "static", "dynamic", "smoothquant", "quarot",
+                   "in_per", "out_had")
+        if self.method not in methods:
+            raise ValueError(
+                f"unknown quantization method {self.method!r}; "
+                f"expected one of {methods}")
+        if self.w_bits not in (4, 8):
+            raise ValueError(f"w_bits must be 4 or 8, got {self.w_bits}")
+        if self.a_bits not in (4, 8):
+            raise ValueError(f"a_bits must be 4 or 8, got {self.a_bits}")
 
 
 PRESETS = {
@@ -75,6 +83,7 @@ PRESETS = {
     "out_had": QuantSpec(method="out_had"),
     "quamba-w4a8": QuantSpec(method="quamba", w_bits=4),
     "quamba-pc": QuantSpec(method="quamba", per_channel_w=True),
+    "quamba-kv8": QuantSpec(method="quamba", quantize_kv_cache=True),
 }
 
 

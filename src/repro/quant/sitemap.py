@@ -1,0 +1,376 @@
+"""Declarative quantization site maps + the generic walker.
+
+The paper's recipe assigns, per architecture family, a set of *quant
+sites*: which activation gets a static per-tensor scale (and whether the
+scale comes from the percentile max of §4.2), which weight is quantized
+(and whether the Hadamard rotation of §4.2 is folded in first), which
+weights are fake-quantized in place (fused int8 conv, §4.3; MoE experts,
+Table 4), and where SmoothQuant-style per-channel factors are folded.
+
+Instead of hard-coding that assignment in an ``if/elif`` over families,
+each family registers a :class:`SiteMap` -- pure data -- and a single
+generic :func:`quantize_with_site_map` interprets it.  New architectures
+add a registration (see ``repro.models.quantize``), not a new branch.
+
+Site vocabulary
+---------------
+``ScaleSite``      static activation scale from a calibrated stats entry
+``ComputedScale``  scale derived from a parameter (e.g. A from A_log)
+``AliasScale``     reuse of an already-computed scale under a new name
+                   (linear-input scales share the producing site's scale)
+``WeightSite``     int8/int4 weight for a quantized linear
+``FakeQuantSite``  in-place weight fake-quant (conv kernels, MoE experts)
+``SmoothFold``     SmoothQuant per-channel factors folded into a
+                   (norm, linear) pair -- only active for that method
+``Group``          nested sub-block (attn / mlp / moe) whose scales and
+                   weights live under a sub-key of the block's dicts
+``Section``        one top-level parameter collection (``layers``,
+                   ``shared``, ``enc_layers``, ...) plus its stacking
+                   layout and stats transform
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import quantizers as Q
+from repro.quant import recipe as qrecipe
+from repro.quant.baselines import fold_smoothing, smoothquant_factors
+from repro.quant.observers import stats_scale
+
+# percentile policy of a ScaleSite
+PCT_NEVER = "never"                 # plain abs-max scale (Eq. 2)
+PCT_X = "x"                         # spec.x_percentile (SSM input, §4.2)
+PCT_X_UNLESS_QUAROT = "x_unless_quarot"  # rotated-input path keeps minmax
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleSite:
+    name: str
+    stat: Optional[str] = None      # stats entry; defaults to ``name``
+    percentile: str = PCT_NEVER
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputedScale:
+    name: str
+    fn: str                         # key into _COMPUTED_SCALE_FNS
+    param: str
+
+
+@dataclasses.dataclass(frozen=True)
+class AliasScale:
+    name: str
+    of: str
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightSite:
+    name: str
+    param: Optional[str] = None     # param entry; defaults to ``name``
+    fold_hadamard: bool = False     # W^H = H W fusion of §4.2
+
+
+@dataclasses.dataclass(frozen=True)
+class FakeQuantSite:
+    param: str
+    per_expert: bool = False        # MoE: one scale per (layer, expert)
+
+
+@dataclasses.dataclass(frozen=True)
+class SmoothFold:
+    kind: str                       # key into _SMOOTH_KINDS
+    norm: str                       # norm param folded by 1/s
+    weights: Tuple[str, ...]        # linear params folded by s
+    stat: str                       # stats entry supplying cmax
+    subtree: Optional[str] = None   # weights live under p[subtree]
+    produces: Optional[str] = None  # scale name replaced by the fold
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    name: str                       # output key in scales/qw dicts
+    subtree: Optional[str]          # param sub-dict holding the weights
+    scales: Tuple = ()
+    weights: Tuple[WeightSite, ...] = ()
+    fakequant: Tuple[FakeQuantSite, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSites:
+    """All quant sites of one block type (flat and/or grouped)."""
+
+    scales: Tuple = ()
+    weights: Tuple[WeightSite, ...] = ()
+    fakequant: Tuple[FakeQuantSite, ...] = ()
+    smooth: Optional[SmoothFold] = None
+    groups: Tuple[Group, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Section:
+    """One top-level parameter collection walked by the generic pass."""
+
+    params_key: str
+    block: BlockSites
+    stats_key: Optional[str] = None       # defaults to params_key
+    layout: str = "stacked"               # stacked | single | grouped
+    stats_transform: str = "identity"     # identity | hybrid_flatten | max0
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteMap:
+    family: str
+    sections: Tuple[Section, ...]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, SiteMap] = {}
+
+
+def register_site_map(site_map: SiteMap, *families: str) -> SiteMap:
+    """Register ``site_map`` under its family (plus optional aliases)."""
+    for fam in families or (site_map.family,):
+        _REGISTRY[fam] = site_map
+    return site_map
+
+
+def get_site_map(family: str) -> SiteMap:
+    # site maps are registered at import of the model zoo's quantize module
+    import repro.models.quantize  # noqa: F401  (registration side effect)
+    if family not in _REGISTRY:
+        raise KeyError(
+            f"no quantization site map registered for family {family!r}; "
+            f"registered: {registered_families()}")
+    return _REGISTRY[family]
+
+
+def registered_families() -> Tuple[str, ...]:
+    import repro.models.quantize  # noqa: F401
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# site interpreters
+# ---------------------------------------------------------------------------
+
+_COMPUTED_SCALE_FNS = {
+    # scale of the dequantized A = -exp(A_log) used by the int8 scan
+    "neg_exp_symmetric": lambda a: Q.symmetric_scale(-jnp.exp(a)),
+}
+
+
+def _percentile_of(spec: qrecipe.QuantSpec, mode: str) -> float:
+    if mode == PCT_NEVER:
+        return 100.0
+    if mode == PCT_X:
+        return spec.x_percentile
+    if mode == PCT_X_UNLESS_QUAROT:
+        return 100.0 if spec.method == "quarot" else spec.x_percentile
+    raise ValueError(f"unknown percentile policy {mode!r}")
+
+
+def _qw(w, spec, fold_had: bool = False, stacked: bool = True):
+    fn = lambda wi: qrecipe.quantize_weight(
+        wi, spec, fold_hadamard_axis=0 if fold_had else None)
+    return jax.vmap(fn)(w) if stacked else fn(w)
+
+
+def _wqdq(w, spec):
+    s = Q.symmetric_scale(w, bits=spec.w_bits)
+    return Q.qdq(w, s, bits=spec.w_bits)
+
+
+def _wqdq_experts(w, spec):
+    flat = w.reshape((-1,) + w.shape[-2:])
+    out = jax.vmap(lambda wi: _wqdq(wi, spec))(flat)
+    return out.reshape(w.shape)
+
+
+def _smooth_norm_linear(fold: SmoothFold, p, stats_l, spec, stacked):
+    """Fold s into (norm, linear); the folded input's scale is recomputed
+    from the smoothed channel maxima (SmQ-SSM, paper §5.3)."""
+    (weight,) = fold.weights
+
+    def fold_one(norm, w_in, cmax_in):
+        s1 = smoothquant_factors(cmax_in, w_in, spec.smooth_alpha)
+        norm, w_in = fold_smoothing(norm, w_in, s1)
+        new_amax = jnp.max(cmax_in / s1)
+        return norm, w_in, jnp.maximum(new_amax, 1e-8) / 127.0
+
+    run = jax.vmap(fold_one) if stacked else fold_one
+    p[fold.norm], p[weight], s = run(
+        p[fold.norm], p[weight], stats_l[fold.stat]["cmax"])
+    return {fold.produces: s} if fold.produces else {}
+
+
+def _smooth_norm_qkv(fold: SmoothFold, p, stats_l, spec, stacked):
+    """Fold s into (norm, wq/wk/wv) -- the attention-input smoothing of
+    the SmoothQuant baseline on transformer blocks."""
+    wq_name, wk_name, wv_name = fold.weights
+
+    def fold_one(ln1, wq, wk, wv, cmax):
+        s = smoothquant_factors(cmax, wq, spec.smooth_alpha)
+        ln1 = ln1 / s
+        shape = (-1, 1)
+        return (ln1, wq * s.reshape(shape), wk * s.reshape(shape),
+                wv * s.reshape(shape))
+
+    run = jax.vmap(fold_one) if stacked else fold_one
+    sub = dict(p[fold.subtree]) if fold.subtree else p
+    p[fold.norm], sub[wq_name], sub[wk_name], sub[wv_name] = run(
+        p[fold.norm], sub[wq_name], sub[wk_name], sub[wv_name],
+        stats_l[fold.stat]["cmax"])
+    if fold.subtree:
+        p[fold.subtree] = sub
+    return {}
+
+
+_SMOOTH_KINDS = {
+    "norm_linear": _smooth_norm_linear,
+    "norm_qkv": _smooth_norm_qkv,
+}
+
+
+def _scale_sites(sites, stats_l, spec, p, stacked, pre: Dict) -> Dict:
+    """Interpret a tuple of scale sites (aliases resolve last)."""
+    scales: Dict = {}
+    for site in sites:
+        if isinstance(site, ScaleSite):
+            if site.name in pre:            # produced by a SmoothFold
+                scales[site.name] = pre[site.name]
+                continue
+            stat = site.stat or site.name
+            scales[site.name] = stats_scale(
+                stats_l[stat],
+                percentile=_percentile_of(spec, site.percentile))
+        elif isinstance(site, ComputedScale):
+            fn = _COMPUTED_SCALE_FNS[site.fn]
+            arr = p[site.param]
+            scales[site.name] = jax.vmap(fn)(arr) if stacked else fn(arr)
+    for site in sites:
+        if isinstance(site, AliasScale):
+            scales[site.name] = scales[site.of]
+    return scales
+
+
+def _weight_sites(sites, p_src, spec, stacked) -> Dict:
+    qw: Dict = {}
+    for site in sites:
+        param = site.param or site.name
+        qw[site.name] = _qw(p_src[param], spec,
+                            fold_had=site.fold_hadamard, stacked=stacked)
+    return qw
+
+
+def _fakequant_sites(sites, p_dst, spec, stacked) -> None:
+    for site in sites:
+        w = p_dst[site.param]
+        if site.per_expert:
+            p_dst[site.param] = _wqdq_experts(w, spec)
+        elif stacked:
+            p_dst[site.param] = jax.vmap(lambda wi: _wqdq(wi, spec))(w)
+        else:
+            p_dst[site.param] = _wqdq(w, spec)
+
+
+def quantize_block(block: BlockSites, params_l, stats_l,
+                   spec: qrecipe.QuantSpec, stacked: bool = True):
+    """Interpret one block's sites -> (new params, scales, qw)."""
+    p = dict(params_l)
+    pre: Dict = {}
+    if block.smooth is not None and spec.method == "smoothquant":
+        pre = _SMOOTH_KINDS[block.smooth.kind](
+            block.smooth, p, stats_l, spec, stacked)
+
+    scales = _scale_sites(block.scales, stats_l, spec, p, stacked, pre)
+    qw = _weight_sites(block.weights, p, spec, stacked)
+    _fakequant_sites(block.fakequant, p, spec, stacked)
+
+    for grp in block.groups:
+        src = p[grp.subtree] if grp.subtree else p
+        scales[grp.name] = _scale_sites(grp.scales, stats_l, spec, src,
+                                        stacked, pre)
+        qw[grp.name] = _weight_sites(grp.weights, src, spec, stacked)
+        if grp.fakequant:
+            sub = dict(src) if grp.subtree else p
+            _fakequant_sites(grp.fakequant, sub, spec, stacked)
+            if grp.subtree:
+                p[grp.subtree] = sub
+    return p, scales, qw
+
+
+# ---------------------------------------------------------------------------
+# section layouts / stats transforms
+# ---------------------------------------------------------------------------
+
+def _stats_for(section: Section, stats: Dict):
+    key = section.stats_key or section.params_key
+    kind = section.stats_transform
+    if kind == "identity":
+        return stats[key]
+    if kind == "hybrid_flatten":
+        # group-scanned stats come back (groups, per, ...); flatten to
+        # match the stacked params, then append the flat tail if present
+        flat = jax.tree.map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), stats[key])
+        if "tail" in stats:
+            flat = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                flat, stats["tail"])
+        return flat
+    if kind == "max0":
+        # shared-block stats are stacked over invocations; reduce to one
+        # conservative scale set
+        return jax.tree.map(lambda a: jnp.max(a, axis=0), stats[key])
+    raise ValueError(f"unknown stats_transform {kind!r}")
+
+
+def _quantize_section(section: Section, params, stats, spec):
+    p_sec = params[section.params_key]
+    s_sec = _stats_for(section, stats)
+    if section.layout == "stacked":
+        return quantize_block(section.block, p_sec, s_sec, spec,
+                              stacked=True)
+    if section.layout == "single":
+        return quantize_block(section.block, p_sec, s_sec, spec,
+                              stacked=False)
+    if section.layout == "grouped":
+        # (groups, per, ...) leading dims: flatten, quantize, reshape back
+        g, per = jax.tree.leaves(p_sec)[0].shape[:2]
+        flat = lambda t: jax.tree.map(
+            lambda a: a.reshape((g * per,) + a.shape[2:]), t)
+        np_, sc, qw = quantize_block(section.block, flat(p_sec),
+                                     flat(s_sec), spec, stacked=True)
+        back = lambda t: jax.tree.map(
+            lambda a: a.reshape((g, per) + a.shape[1:]), t)
+        return back(np_), back(sc), back(qw)
+    raise ValueError(f"unknown layout {section.layout!r}")
+
+
+# ---------------------------------------------------------------------------
+# generic walker
+# ---------------------------------------------------------------------------
+
+def quantize_with_site_map(params: Dict, stats: Dict, cfg,
+                           spec: qrecipe.QuantSpec,
+                           site_map: Optional[SiteMap] = None):
+    """Walk the family's registered site map -> (new_params, qdata)."""
+    spec.validate()
+    if site_map is None:
+        site_map = get_site_map(cfg.family)
+    new_params = dict(params)
+    scales: Dict = {}
+    qw: Dict = {}
+    for section in site_map.sections:
+        np_, sc, qws = _quantize_section(section, params, stats, spec)
+        new_params[section.params_key] = np_
+        scales[section.params_key] = sc
+        qw[section.params_key] = qws
+    return new_params, {"scales": scales, "qw": qw}

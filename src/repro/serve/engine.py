@@ -36,14 +36,23 @@ class Request:
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
-                 max_len: int = 2048, qctx=None, seed: int = 0):
+                 max_len: int = 2048, qctx=None, seed: int = 0,
+                 cache_dtype=None):
         self.params = params
         self.cfg = cfg
         self.qctx = qctx
         self.max_batch = max_batch
         self.max_len = max_len
+        if cache_dtype is None:
+            # QuantSpec.quantize_kv_cache flows through the qctx: int8
+            # attention caches with per-entry scales (see models.attention)
+            spec = qctx.get("spec") if isinstance(qctx, dict) else None
+            kv8 = spec is not None and getattr(spec, "quantize_kv_cache",
+                                               False)
+            cache_dtype = jnp.int8 if kv8 else jnp.float32
+        self.cache_dtype = jnp.dtype(cache_dtype)
         self.state = init_decode_state(cfg, max_batch, max_len,
-                                       cache_dtype=jnp.float32)
+                                       cache_dtype=cache_dtype)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
         self.key = jax.random.PRNGKey(seed)

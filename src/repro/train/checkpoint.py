@@ -101,6 +101,154 @@ def restore(ckpt_dir: str, tree_like, step: Optional[int] = None):
     return jax.tree.unflatten(treedef, loaded), step
 
 
+# ---------------------------------------------------------------------------
+# self-describing trees (no tree_like needed on load)
+#
+# ``save``/``restore`` above serialize leaves positionally and need a
+# template tree to rebuild the structure.  Quantized-model artifacts
+# (repro.api) must load standalone, so these variants additionally record
+# each leaf's key path in the manifest and rebuild nested dicts/lists on
+# load.  Same atomic tmp-dir + crc32 discipline as ``save``.
+# ---------------------------------------------------------------------------
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+        return True
+    except OSError:
+        return False
+
+
+def gc_stale_dirs(parent: str, base: str) -> None:
+    """Remove tmp/aside litter of ``base`` left by crashed writers.
+
+    Two safety rules: a dir whose owner pid is still alive belongs to a
+    concurrent writer and is left alone; an ``.old-`` backup is kept
+    whenever ``base`` itself is missing -- after a crash mid-swap it may
+    be the only surviving copy."""
+    for name in os.listdir(parent):
+        tag = next((t for t in (".tmp-", ".old-")
+                    if name.startswith(base + t)), None)
+        if tag is None:
+            continue
+        suffix = name[len(base + tag):]
+        pid = int(suffix) if suffix.isdigit() else None
+        if pid is not None and pid != os.getpid() and _pid_alive(pid):
+            continue
+        if tag == ".old-" and not os.path.exists(
+                os.path.join(parent, base)):
+            continue
+        shutil.rmtree(os.path.join(parent, name), ignore_errors=True)
+
+
+def _encode_keypath(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):          # DictKey
+            if not isinstance(k.key, str):
+                raise TypeError(
+                    f"save_tree supports string dict keys only, got "
+                    f"{k.key!r} ({type(k.key).__name__}): non-string "
+                    f"keys would be ambiguous with sequence indices on "
+                    f"load")
+            out.append({"k": k.key})
+        elif hasattr(k, "idx"):        # SequenceKey
+            out.append({"i": k.idx})
+        elif hasattr(k, "name"):       # GetAttrKey
+            out.append({"k": k.name})
+        else:
+            raise TypeError(f"unsupported tree key {k!r}")
+    return out
+
+
+def save_tree(path: str, tree) -> str:
+    """Write ``tree`` (nested dicts/lists of arrays) self-describingly.
+
+    Dict keys must be strings; tuple nodes load back as lists; leafless
+    subtrees (empty dicts) leave no keypath, so they are dropped from
+    dict nodes on load and ``load_tree`` raises when one sat inside a
+    list (the surrounding indices cannot be reconstructed)."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    gc_stale_dirs(parent, os.path.basename(path))
+    tmp = f"{path}.tmp-{os.getpid()}"
+    os.makedirs(tmp)
+    flat = jax.tree_util.tree_flatten_with_path(jax.device_get(tree))[0]
+    manifest = {"format": "tree-v1", "leaves": []}
+    for i, (keypath, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "file": fname, "path": _encode_keypath(keypath),
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(arr.tobytes()),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    commit_dir(tmp, path)
+    return path
+
+
+def commit_dir(tmp: str, path: str) -> None:
+    """Swap ``tmp`` into ``path``: the old version is renamed aside (not
+    deleted) before the new one lands, so a crash never destroys the only
+    copy; the aside dir is removed once the swap succeeds."""
+    if os.path.exists(path):
+        old = f"{path}.old-{os.getpid()}"
+        shutil.rmtree(old, ignore_errors=True)
+        os.rename(path, old)
+        os.rename(tmp, path)
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.rename(tmp, path)
+
+
+def _insert_at(root: dict, path: list, value):
+    node = root
+    for step, nxt in zip(path, path[1:] + [None]):
+        key = step["k"] if "k" in step else step["i"]
+        if nxt is None:
+            node[key] = value
+        else:
+            node = node.setdefault(key, {})
+    return root
+
+
+def _listify(node):
+    """Convert int-keyed dicts (from SequenceKeys) back into lists."""
+    if not isinstance(node, dict):
+        return node
+    if node and all(isinstance(k, int) for k in node):
+        idxs = sorted(node)
+        if idxs != list(range(len(idxs))):
+            # a leafless element (e.g. an empty dict) inside a list
+            # leaves no keypath, so the saved indices have a gap and the
+            # original structure is unrecoverable
+            raise IOError(
+                "saved tree has leafless elements inside a list; "
+                "save_tree cannot round-trip those")
+        return [_listify(node[i]) for i in idxs]
+    return {k: _listify(v) for k, v in node.items()}
+
+
+def load_tree(path: str):
+    """Rebuild a tree written by ``save_tree``; verifies crc32 per leaf."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    root: Dict = {}
+    empty = True
+    for meta in manifest["leaves"]:
+        arr = np.load(os.path.join(path, meta["file"]))
+        if zlib.crc32(arr.tobytes()) != meta["crc32"]:
+            raise IOError(f"checkpoint corruption in {path}/{meta['file']}")
+        if not meta["path"]:
+            return arr                        # bare-leaf tree
+        _insert_at(root, meta["path"], arr)
+        empty = False
+    return _listify(root) if not empty else {}
+
+
 def restore_any(ckpt_dir: str, tree_like):
     """Try newest -> oldest until one restores cleanly (node-failure /
     torn-write recovery path)."""

@@ -1,0 +1,85 @@
+"""Test-suite bootstrap.
+
+Property tests use ``hypothesis`` when it is installed.  On machines
+without it (this suite must collect and run everywhere), a tiny
+deterministic stand-in is registered under the same import name: ``given``
+replays each strategy's boundary values first and then seeded random
+draws, so the property tests still execute as example-based tests with a
+fixed, reproducible sample.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+def _install_hypothesis_fallback() -> None:
+    try:
+        import hypothesis  # noqa: F401  (the real thing is available)
+        return
+    except ImportError:
+        pass
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw           # draw(rnd, i) -> value
+
+        def draw(self, rnd, i):
+            return self._draw(rnd, i)
+
+    def integers(lo, hi):
+        return _Strategy(lambda r, i: lo if i == 0 else
+                         hi if i == 1 else r.randint(lo, hi))
+
+    def floats(lo, hi):
+        return _Strategy(lambda r, i: lo if i == 0 else
+                         hi if i == 1 else r.uniform(lo, hi))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r, i: seq[i % len(seq)])
+
+    def booleans():
+        return _Strategy(lambda r, i: (False, True)[i % 2])
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper():
+                # read at call time: works whether @settings is applied
+                # above @given (stamps wrapper) or below (stamps fn)
+                n = getattr(wrapper, "_fallback_max_examples",
+                            getattr(fn, "_fallback_max_examples", 10))
+                rnd = random.Random(0)
+                for i in range(n):
+                    fn(*[s.draw(rnd, i) for s in strategies])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.floats = floats
+    st_mod.sampled_from = sampled_from
+    st_mod.booleans = booleans
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st_mod
+    hyp.__fallback__ = True
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+_install_hypothesis_fallback()

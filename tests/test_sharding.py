@@ -8,6 +8,10 @@ import textwrap
 
 import pytest
 
+# both tests exercise the repro.dist sharding rules, which are not
+# present in every checkout yet; skip cleanly instead of failing
+pytest.importorskip("repro.dist.sharding")
+
 from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, cell_supported
 
 
