@@ -1,0 +1,131 @@
+"""PR perf trajectory: decode TPOT (fp vs quamba-qdq vs quamba+kernels),
+chunked-prefill throughput/dispatch counts, and bytes moved.
+
+``python -m benchmarks.run pr_speed`` writes the results to
+``BENCH_PR.json`` at the repo root so future PRs have a baseline to
+beat.  On CPU the Pallas kernels execute in interpret mode, so the
+kernel-backend wall clock is NOT the deployment number -- the json
+records ``interpret_mode`` so the trajectory is comparable only within
+a fixed backend; the dispatch counts and byte ratios are
+hardware-independent.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels._backend import default_interpret
+from repro.models import (decode_step, init_decode_state, param_count,
+                          prefill_step)
+from repro.serve import Engine, Request
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR.json")
+DECODE_BATCH = 8
+PREFILL_LEN = 256
+PREFILL_CHUNK = 128
+
+
+def _tpot(cfg, params, qctx, iters: int = 20) -> float:
+    state = init_decode_state(cfg, DECODE_BATCH, 256,
+                              cache_dtype=jnp.float32)
+    tok = jnp.zeros((DECODE_BATCH,), jnp.int32)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t,
+                                               qctx=qctx)[0])
+    return common.timer(step, params, state, tok, iters=iters)
+
+
+def _prefill_rate(cfg, params, qctx, iters: int = 5):
+    """(tokens/s through chunked prefill, tokens/s per-token fallback)."""
+    toks = jnp.zeros((1, PREFILL_CHUNK), jnp.int32)
+    state = init_decode_state(cfg, 1, PREFILL_LEN + 8,
+                              cache_dtype=jnp.float32)
+    pf = jax.jit(lambda p, s, t: prefill_step(p, cfg, s, t,
+                                              qctx=qctx)[1])
+    us_chunk = common.timer(pf, params, state, toks, iters=iters)
+    chunked_tps = PREFILL_CHUNK / (us_chunk / 1e6)
+
+    tok1 = jnp.zeros((1,), jnp.int32)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t,
+                                               qctx=qctx)[1])
+    us_tok = common.timer(step, params, state, tok1, iters=iters)
+    per_token_tps = 1.0 / (us_tok / 1e6)
+    return chunked_tps, per_token_tps
+
+
+def _engine_dispatches(cfg, params, qctx) -> dict:
+    eng = Engine(params, cfg, max_batch=2, max_len=PREFILL_LEN + 8,
+                 qctx=qctx, prefill_chunk=PREFILL_CHUNK)
+    prompt = list(np.arange(PREFILL_LEN) % cfg.vocab_size)
+    eng.submit(Request(uid=0, prompt=[int(t) for t in prompt],
+                       max_new_tokens=2))
+    eng.run()
+    return {
+        "prompt_len": PREFILL_LEN,
+        "prefill_chunk": PREFILL_CHUNK,
+        "prefill_dispatches": eng.counters["prefill_dispatches"],
+        "per_token_dispatches_would_be": PREFILL_LEN - 1,
+    }
+
+
+def run() -> dict:
+    cfg, params = common.trained_model()
+    stats = common.calibration_stats(cfg, params)
+    qm = common.quantized_model(cfg, params, stats, "quamba")
+    smoke = os.environ.get("BENCH_SMOKE", "") == "1"
+    iters = 3 if smoke else 20
+    p_iters = 2 if smoke else 5
+
+    out: dict = {
+        "model": cfg.name,
+        "interpret_mode": default_interpret(),
+        "decode_batch": DECODE_BATCH,
+    }
+    out["tpot_fp_us"] = _tpot(cfg, params, None, iters)
+    out["tpot_quamba_qdq_us"] = _tpot(cfg, qm.params,
+                                      qm.qctx(backend="qdq"), iters)
+    out["tpot_quamba_kernels_us"] = _tpot(cfg, qm.params,
+                                          qm.qctx(backend="kernels"),
+                                          iters)
+    common.emit("pr_speed/tpot_fp", out["tpot_fp_us"], "decode_step")
+    common.emit("pr_speed/tpot_quamba_qdq", out["tpot_quamba_qdq_us"],
+                "decode_step(fake-quant oracle)")
+    common.emit("pr_speed/tpot_quamba_kernels",
+                out["tpot_quamba_kernels_us"],
+                "decode_step(int8 Pallas kernels; interpret mode off-TPU)")
+
+    ch_tps, tok_tps = _prefill_rate(cfg, qm.params, qm.qctx(), p_iters)
+    out["prefill_chunked_tokens_per_s"] = ch_tps
+    out["prefill_per_token_tokens_per_s"] = tok_tps
+    common.emit("pr_speed/prefill_chunked", 1e6 / max(ch_tps, 1e-9),
+                f"{ch_tps:.0f} tok/s (chunk={PREFILL_CHUNK})")
+    common.emit("pr_speed/prefill_per_token", 1e6 / max(tok_tps, 1e-9),
+                f"{tok_tps:.0f} tok/s (1 dispatch/token)")
+    out["engine_prefill"] = _engine_dispatches(cfg, qm.params, qm.qctx())
+
+    # bytes moved per decode step: weights read once per token (the
+    # memory-bound regime the paper's 1.7x rides on) + recurrent state
+    n_params = param_count(cfg)
+    di, n, w = cfg.d_inner, cfg.d_state, cfg.conv_width
+    state_elems = DECODE_BATCH * cfg.n_layers * (di * n + (w - 1) * di)
+    out["bytes"] = {
+        "weights_fp16_mb": n_params * 2 / 1e6,
+        "weights_int8_mb": n_params * 1 / 1e6,
+        "state_fp32_mb": state_elems * 4 / 1e6,
+        "state_int8_mb": state_elems * 1 / 1e6,
+        "weight_ratio": 2.0,
+    }
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    common.emit("pr_speed/bench_pr_json", 0.0,
+                os.path.abspath(OUT_PATH))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -2,6 +2,11 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [table ...]``
 prints ``name,us_per_call,derived`` CSV lines.
+
+``pr_speed`` additionally writes ``BENCH_PR.json`` at the repo root
+(decode TPOT fp vs quamba vs quamba+kernels, prefill tokens/s and
+dispatch counts, bytes moved) -- the perf trajectory future PRs are
+measured against.  ``BENCH_SMOKE=1`` shrinks iteration counts for CI.
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ TABLES = (
     "table9_input_quant",
     "fig5_error_bound",
     "roofline_report",
+    "pr_speed",
 )
 
 

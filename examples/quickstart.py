@@ -86,6 +86,10 @@ def main() -> None:
     print(f"    reloaded {q_model} from {path}")
 
     print("[5/5] generating with the quantized model")
+    # Execution backend: the default spec runs the qdq fake-quant oracle.
+    # spec="quamba-kernels" (or model.qctx(backend="kernels")) feeds int8
+    # activations straight to the Pallas kernels -- the deployed dataflow,
+    # native on TPU and interpret-mode (slow, identical numerics) off-TPU.
     outs = q_model.generate([[1, 2, 3], [42, 7]], max_new_tokens=12,
                             max_len=64)
     for i, o in enumerate(outs):

@@ -5,7 +5,7 @@ Trains a small model (or restores the benchmark checkpoint), quantizes it
 with the paper's recipe, then serves a stream of batched requests with
 mixed prompt lengths and measures TPOT.
 
-Run:  PYTHONPATH=src python examples/serve_quantized.py [--requests 12]
+Run:  PYTHONPATH=src:. python examples/serve_quantized.py [--requests 12]
 """
 from __future__ import annotations
 
@@ -23,15 +23,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
+    # "quamba-kernels" runs the int8 Pallas execution backend (native on
+    # TPU; interpret mode -- slow but identical -- off-TPU)
     ap.add_argument("--quant", default="quamba",
-                    choices=["fp", "quamba", "static", "dynamic"])
+                    choices=["fp", "quamba", "quamba-kernels", "static",
+                             "dynamic"])
+    ap.add_argument("--prefill-chunk", type=int, default=128)
     args = ap.parse_args()
 
     cfg, params = trained_model()
     stats = (calibration_stats(cfg, params)
              if args.quant != "fp" else None)
     model = quantized_model(cfg, params, stats, args.quant)
-    eng = model.engine(max_batch=4, max_len=256)
+    # prompts longer than one token prefill through the sequence path in
+    # chunks of --prefill-chunk (one dispatch per chunk, not per token)
+    eng = model.engine(max_batch=4, max_len=256,
+                       prefill_chunk=args.prefill_chunk)
     reqs = [Request(uid=i, prompt=[(7 * i + j) % cfg.vocab_size
                                    for j in range(2 + i % 5)],
                     max_new_tokens=args.max_new,

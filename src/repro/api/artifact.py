@@ -36,14 +36,19 @@ class QuantizedModel:
     cfg: ModelConfig
 
     # -- execution --------------------------------------------------------
-    def qctx(self, int8_compute: bool = False) -> Optional[Dict]:
-        """The forward-pass quant context (None in fp mode)."""
+    def qctx(self, int8_compute: bool = False,
+             backend: Optional[str] = None) -> Optional[Dict]:
+        """The forward-pass quant context (None in fp mode).
+
+        ``backend`` overrides ``spec.backend`` without re-quantizing
+        ("qdq" fake-quant oracle vs "kernels" int8 Pallas execution) --
+        the qdata is identical between the two, only execution differs.
+        """
         if self.spec is None or self.qdata is None:
             return None
-        out = {"mode": "quant", "spec": self.spec, **self.qdata}
-        if int8_compute:
-            out["int8_compute"] = True
-        return out
+        from repro.models.quantize import make_qctx  # local: avoid cycle
+        return make_qctx(self.spec, self.qdata, int8_compute=int8_compute,
+                         backend=backend)
 
     def forward(self, batch: Dict, **kw):
         """Quantized forward pass -> (logits, aux)."""

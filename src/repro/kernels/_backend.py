@@ -1,0 +1,23 @@
+"""Shared Pallas execution-mode detection.
+
+Every kernel in this package accepts ``interpret=None`` and resolves it
+here: compile natively on TPU, fall back to interpret mode (the kernel
+body executed in Python with identical semantics) everywhere else.  This
+keeps *direct* imports of the kernel modules honest -- before, only the
+``repro.kernels.ops`` wrappers auto-detected, and importing a kernel
+module directly would silently run interpret mode on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True when Pallas must run in interpret mode (no TPU backend)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)

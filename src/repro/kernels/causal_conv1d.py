@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._backend import resolve_interpret
+
 
 def _kernel(xp_ref, w_ref, b_ref, s_ref, o_ref, *, width: int, L: int,
             apply_silu: bool, out_is_int8: bool):
@@ -47,12 +49,15 @@ def causal_conv1d(qx: jax.Array, qw: jax.Array, bias: jax.Array,
                   s_out: Optional[jax.Array] = None,
                   state: Optional[jax.Array] = None, *,
                   apply_silu: bool = True, out_dtype=jnp.float32,
-                  block_d: int = 256, interpret: bool = True
+                  block_d: int = 256,
+                  interpret: Optional[bool] = None
                   ) -> Tuple[jax.Array, jax.Array]:
     """qx (B, L, D) int8 -> (y (B, L, D) int8|fp, new_state (B, W-1, D) int8).
 
     qw: (W, D) int8 depthwise taps; state: (B, W-1, D) int8 previous tail.
+    interpret=None auto-detects: native on TPU, interpret elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     bsz, L, d = qx.shape
     width = qw.shape[0]
     out_is_int8 = s_out is not None

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._backend import resolve_interpret
 from repro.quant.hadamard import decompose, hadamard_matrix_np
 
 
@@ -56,8 +57,11 @@ def _kernel(y_ref, ha_ref, hb_ref, s_ref, q_ref, *, a: int, b: int):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def hadamard_quant(y: jax.Array, s_y: jax.Array, *, block_rows: int = 256,
-                   interpret: bool = True) -> jax.Array:
-    """(tokens, n) fp -> (tokens, n) int8 = quant(H_n y / sqrt(n), s_y)."""
+                   interpret=None) -> jax.Array:
+    """(tokens, n) fp -> (tokens, n) int8 = quant(H_n y / sqrt(n), s_y).
+
+    interpret=None auto-detects: native on TPU, interpret elsewhere."""
+    interpret = resolve_interpret(interpret)
     t, n = y.shape
     a, b = _split(n)
     ha = jnp.asarray(hadamard_matrix_np(a, normalized=False))

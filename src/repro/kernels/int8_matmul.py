@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._backend import resolve_interpret
+
 
 def _mm_kernel(qx_ref, qw_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
                apply_silu: bool, out_is_int8: bool):
@@ -57,11 +59,13 @@ def int8_matmul(qx: jax.Array, qw: jax.Array, s_x: jax.Array,
                 s_out: Optional[jax.Array] = None, *,
                 apply_silu: bool = False, out_dtype=jnp.float32,
                 bm: int = 128, bn: int = 128, bk: int = 128,
-                interpret: bool = True) -> jax.Array:
+                interpret: Optional[bool] = None) -> jax.Array:
     """qx (M,K) int8 @ qw (K,N) int8 -> (M,N) out_dtype (or int8 if s_out).
 
     Pads M/N/K up to block multiples (zero padding is exact for matmul).
+    interpret=None auto-detects: native on TPU, interpret elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     m, k = qx.shape
     k2, n = qw.shape
     assert k == k2, (qx.shape, qw.shape)

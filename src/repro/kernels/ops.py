@@ -1,54 +1,38 @@
-"""Public jit'd wrappers around the Pallas kernels (the ``ops.py`` layer).
+"""Public wrappers around the Pallas kernels (the ``ops.py`` layer).
 
-On TPU the kernels compile natively (interpret=False); everywhere else
-(this CPU container, unit tests) they run in interpret mode, which executes
-the kernel body in Python with identical semantics.  ``use_kernels`` lets
-callers (the model zoo, the serving engine) fall back to the pure-jnp
-oracles -- that is also what the dry-run uses, so the roofline HLO reflects
-the XLA path (see DESIGN.md §Dry-run-vs-kernels).
+Every kernel resolves ``interpret=None`` through the shared
+``repro.kernels._backend`` logic: native compilation on TPU, interpret
+mode (the kernel body executed in Python with identical semantics)
+everywhere else -- so importing a kernel module directly is never
+silently slow on TPU.  The fallback to the pure-jnp oracles in ``ref``
+is selected by ``QuantSpec.backend`` ("qdq") -- that is also what the
+dry-run uses, so the roofline HLO reflects the XLA path (see DESIGN.md
+§Dry-run-vs-kernels).
+
+The model zoo's quantized kernel backend (``QuantSpec.backend ==
+"kernels"``, see ``repro.models.mamba``) calls these wrappers -- always
+through the module attribute (``ops.selective_scan``), which keeps the
+call sites monkeypatchable for routing tests.
 """
 from __future__ import annotations
 
-import jax
-
 from repro.kernels import ref
-from repro.kernels.causal_conv1d import causal_conv1d as _causal_conv1d
-from repro.kernels.hadamard_quant import hadamard_quant as _hadamard_quant
-from repro.kernels.int8_matmul import int8_matmul as _int8_matmul
-from repro.kernels.rmsnorm_quant import rmsnorm_quant as _rmsnorm_quant
-from repro.kernels.selective_scan import selective_scan as _selective_scan
-from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+from repro.kernels._backend import default_interpret
+from repro.kernels.causal_conv1d import causal_conv1d
+from repro.kernels.hadamard_quant import hadamard_quant
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.rmsnorm_quant import rmsnorm_quant
+from repro.kernels.scan_step import selective_scan_step
+from repro.kernels.selective_scan import selective_scan
+from repro.kernels.ssd_scan import ssd_scan
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def int8_matmul(*args, **kwargs):
-    return _int8_matmul(*args, interpret=_interpret(), **kwargs)
-
-
-def rmsnorm_quant(*args, **kwargs):
-    return _rmsnorm_quant(*args, interpret=_interpret(), **kwargs)
-
-
-def hadamard_quant(*args, **kwargs):
-    return _hadamard_quant(*args, interpret=_interpret(), **kwargs)
-
-
-def causal_conv1d(*args, **kwargs):
-    return _causal_conv1d(*args, interpret=_interpret(), **kwargs)
-
-
-def selective_scan(*args, **kwargs):
-    return _selective_scan(*args, interpret=_interpret(), **kwargs)
-
-
-def ssd_scan(*args, **kwargs):
-    return _ssd_scan(*args, interpret=_interpret(), **kwargs)
+    """Back-compat alias for the shared auto-detection."""
+    return default_interpret()
 
 
 __all__ = [
     "int8_matmul", "rmsnorm_quant", "hadamard_quant", "causal_conv1d",
-    "selective_scan", "ssd_scan", "ref",
+    "selective_scan", "selective_scan_step", "ssd_scan", "ref",
 ]

@@ -67,6 +67,46 @@ def selective_scan_ref(u: jax.Array, dt: jax.Array, A: jax.Array,
     return y
 
 
+def selective_scan_seq_ref(u: jax.Array, dt: jax.Array, A: jax.Array,
+                           B: jax.Array, C: jax.Array, D: jax.Array,
+                           z: Optional[jax.Array] = None,
+                           h0: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (lax.scan over time) selective scan; always returns
+    (y, h_last).
+
+    Same semantics as :func:`selective_scan_ref`, but the recurrence is
+    evaluated strictly in time order with the exact fp operations of
+    :func:`selective_scan_step_ref` -- so a chunked prefill through this
+    path is bitwise-identical to stepping token by token (the property
+    the serving engine's prefill->decode handoff relies on).  The Pallas
+    kernels are sequential-in-time too, so this is also their oracle
+    ordering.
+    """
+    bsz, L, d = u.shape
+    n = A.shape[-1]
+    dtype = jnp.float32
+    h_init = (h0.astype(dtype) if h0 is not None
+              else jnp.zeros((bsz, d, n), dtype))
+    a32 = A.astype(dtype)
+
+    def step(h, t):
+        u_t, dt_t, b_t, c_t = t
+        dA = jnp.exp(dt_t.astype(dtype)[..., None] * a32)
+        dBu = (dt_t.astype(dtype) * u_t.astype(dtype))[..., None] * \
+            b_t.astype(dtype)[:, None, :]
+        h_new = dA * h + dBu
+        y_t = jnp.einsum("bdn,bn->bd", h_new, c_t.astype(dtype))
+        return h_new, y_t
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (u, dt, B, C))
+    h_last, ys = jax.lax.scan(step, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1) + D.astype(dtype) * u.astype(dtype)
+    if z is not None:
+        y = y * jax.nn.silu(z.astype(dtype))
+    return y, h_last
+
+
 def selective_scan_step_ref(h: jax.Array, u: jax.Array, dt: jax.Array,
                             A: jax.Array, B: jax.Array, C: jax.Array,
                             D: jax.Array, z: Optional[jax.Array] = None

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._backend import resolve_interpret
+
 
 def _kernel(x_ref, res_ref, w_ref, s_ref, q_ref, r_ref, *, eps: float):
     r = x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
@@ -32,8 +34,11 @@ def _kernel(x_ref, res_ref, w_ref, s_ref, q_ref, r_ref, *, eps: float):
                                              "interpret"))
 def rmsnorm_quant(x_out: jax.Array, x_res: jax.Array, w: jax.Array,
                   s_out: jax.Array, *, eps: float = 1e-5,
-                  block_rows: int = 256, interpret: bool = True):
-    """(tokens, d) x 2 -> (int8 (tokens, d), fp32 residual (tokens, d))."""
+                  block_rows: int = 256, interpret=None):
+    """(tokens, d) x 2 -> (int8 (tokens, d), fp32 residual (tokens, d)).
+
+    interpret=None auto-detects: native on TPU, interpret elsewhere."""
+    interpret = resolve_interpret(interpret)
     t, d = x_out.shape
     rows = min(block_rows, t)
     tp = -(-t // rows) * rows

@@ -1,0 +1,110 @@
+"""Fused int8 single-token selective-scan step (decode TPOT kernel).
+
+One generation step of the Mamba-1 recurrence (paper Eq. 1):
+    h' = exp(dt * A) h + dt * u * B
+    y  = <h', C> + D u        (then y *= silu(z) if gated)
+
+All tensor operands arrive int8 with the same per-tensor scales as the
+sequence kernel (``selective_scan``); dequantization happens once per
+VMEM tile and the update runs in fp32.  Decode is the latency-critical
+path (TPOT): at batch B the op reads the (B, D, N) state plus O(B*D)
+activations and writes the state back -- purely memory-bound, so the
+whole step is fused into a single pass with no intermediate HBM traffic.
+
+Channels (D) tile onto the 128-lane vector unit exactly as in the
+sequence kernel; the state block (bd, N) stays resident in VMEM for the
+duration of the (single) time step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._backend import resolve_interpret
+
+
+def _kernel(qu_ref, qdt_ref, qA_ref, qB_ref, qC_ref, dres_ref, z_ref,
+            h_ref, s_ref, y_ref, hout_ref, *, gated: bool):
+    s_u, s_dt, s_A, s_B, s_C = (s_ref[0, 0], s_ref[0, 1], s_ref[0, 2],
+                                s_ref[0, 3], s_ref[0, 4])
+    u = qu_ref[0].astype(jnp.float32) * s_u           # (bd,)
+    dt = qdt_ref[0].astype(jnp.float32) * s_dt        # (bd,)
+    a = qA_ref[...].astype(jnp.float32) * s_A         # (bd, N)
+    bvec = qB_ref[0].astype(jnp.float32) * s_B        # (N,)
+    cvec = qC_ref[0].astype(jnp.float32) * s_C        # (N,)
+    h = h_ref[0].astype(jnp.float32)                  # (bd, N)
+
+    da = jnp.exp(dt[:, None] * a)
+    h_new = da * h + (dt * u)[:, None] * bvec[None, :]
+    y = jnp.sum(h_new * cvec[None, :], axis=-1)
+    y = y + dres_ref[...].astype(jnp.float32) * u
+    if gated:
+        z = z_ref[0].astype(jnp.float32)
+        y = y * (z * jax.nn.sigmoid(z))
+    y_ref[0] = y.astype(y_ref.dtype)
+    hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "out_dtype",
+                                             "interpret"))
+def selective_scan_step(qu: jax.Array, qdt: jax.Array, qA: jax.Array,
+                        qB: jax.Array, qC: jax.Array, scales: jax.Array,
+                        D: jax.Array, h: jax.Array,
+                        z: Optional[jax.Array] = None, *,
+                        block_d: int = 256, out_dtype=jnp.float32,
+                        interpret: Optional[bool] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized single-token scan step.
+
+    qu, qdt: (B, D) int8;  qA: (D, N) int8;  qB, qC: (B, N) int8;
+    scales: (5,) fp32 = (s_u, s_dt, s_A, s_B, s_C);  D: (D,) fp32;
+    h: (B, D, N) fp32 running state;  z: optional (B, D) fp gate.
+    Returns (y (B, D) out_dtype, h_new (B, D, N) fp32).
+    interpret=None auto-detects: native on TPU, interpret elsewhere.
+    """
+    bsz, d = qu.shape
+    n = qA.shape[-1]
+    gated = z is not None
+
+    bd = min(block_d, d)
+    dp = -(-d // bd) * bd
+    pad_d = ((0, 0), (0, dp - d))
+    qu_p = jnp.pad(qu, pad_d)
+    qdt_p = jnp.pad(qdt, pad_d)
+    qA_p = jnp.pad(qA, ((0, dp - d), (0, 0)))
+    d_p = jnp.pad(D.astype(jnp.float32), (0, dp - d))
+    z_p = (jnp.pad(z, pad_d) if gated
+           else jnp.zeros((bsz, dp), jnp.float32))
+    h_p = jnp.pad(h.astype(jnp.float32), ((0, 0), (0, dp - d), (0, 0)))
+    s = scales.astype(jnp.float32).reshape(1, 5)
+
+    y, h_new = pl.pallas_call(
+        functools.partial(_kernel, gated=gated),
+        grid=(bsz, dp // bd),
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda b, j: (b, j)),       # qu
+            pl.BlockSpec((1, bd), lambda b, j: (b, j)),       # qdt
+            pl.BlockSpec((bd, n), lambda b, j: (j, 0)),       # qA
+            pl.BlockSpec((1, n), lambda b, j: (b, 0)),        # qB
+            pl.BlockSpec((1, n), lambda b, j: (b, 0)),        # qC
+            pl.BlockSpec((bd,), lambda b, j: (j,)),           # D
+            pl.BlockSpec((1, bd), lambda b, j: (b, j)),       # z
+            pl.BlockSpec((1, bd, n), lambda b, j: (b, j, 0)),  # h
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # scales
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bd), lambda b, j: (b, j)),
+            pl.BlockSpec((1, bd, n), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, dp), out_dtype),
+            jax.ShapeDtypeStruct((bsz, dp, n), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(qu_p, qdt_p, qA_p, qB, qC, d_p, z_p, h_p, s)
+    return y[:, :d], h_new[:, :d]

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._backend import resolve_interpret
+
 
 def _kernel(qu_ref, qdt_ref, qA_ref, qB_ref, qC_ref, dres_ref, z_ref,
             h0_ref, s_ref, y_ref, hout_ref, h_ref, *,
@@ -84,7 +86,8 @@ def selective_scan(qu: jax.Array, qdt: jax.Array, qA: jax.Array,
                    D: jax.Array, z: Optional[jax.Array] = None,
                    h0: Optional[jax.Array] = None, *,
                    chunk: int = 128, block_d: int = 256,
-                   out_dtype=jnp.float32, interpret: bool = True
+                   out_dtype=jnp.float32,
+                   interpret: Optional[bool] = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Quantized selective scan.
 
@@ -92,7 +95,9 @@ def selective_scan(qu: jax.Array, qdt: jax.Array, qA: jax.Array,
     scales: (5,) fp32 = (s_u, s_dt, s_A, s_B, s_C);  D: (D,) fp32;
     z: optional (B, L, D) fp gate;  h0: optional (B, D, N) fp32.
     Returns (y (B, L, D) out_dtype, h_last (B, D, N) fp32).
+    interpret=None auto-detects: native on TPU, interpret elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     bsz, L, d = qu.shape
     n = qA.shape[-1]
     gated = z is not None

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._backend import resolve_interpret
+
 
 def _kernel(qx_ref, qdt_ref, qa_ref, qb_ref, qc_ref, dres_ref, s_ref,
             h0_ref, y_ref, hout_ref, state_ref, *, chunk: int,
@@ -91,7 +93,7 @@ def _kernel(qx_ref, qdt_ref, qa_ref, qb_ref, qc_ref, dres_ref, s_ref,
 def ssd_scan(qx: jax.Array, qdt: jax.Array, qa: jax.Array, qb: jax.Array,
              qc: jax.Array, scales: jax.Array, dres: jax.Array,
              h0: Optional[jax.Array] = None, *, chunk: int = 128,
-             out_dtype=jnp.float32, interpret: bool = True
+             out_dtype=jnp.float32, interpret: Optional[bool] = None
              ) -> Tuple[jax.Array, jax.Array]:
     """Quantized Mamba-2 scan.
 
@@ -99,7 +101,9 @@ def ssd_scan(qx: jax.Array, qdt: jax.Array, qa: jax.Array, qb: jax.Array,
     qb, qc (B, L, N) int8; scales (5,) fp32 = (s_x, s_dt, s_a, s_b, s_c);
     dres (H,) fp32; h0 optional (B, H, N, hd) fp32.
     Returns (y (B, L, H, hd) out_dtype, h_last (B, H, N, hd) fp32).
+    interpret=None auto-detects: native on TPU, interpret elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     bsz, L, h, hd = qx.shape
     n = qb.shape[-1]
     has_h0 = h0 is not None

@@ -1,5 +1,5 @@
 from repro.models.common import param_count, cross_entropy
 from repro.models.model import (
     init_params, forward, loss_fn, init_decode_state, decode_step,
-    input_specs, decode_input_specs,
+    prefill_step, supports_seq_prefill, input_specs, decode_input_specs,
 )

@@ -31,7 +31,22 @@ from repro.quant.hadamard import had_transform, had_transform_t
 from repro.quant.observers import observe
 from repro.quant import quantizers as Q
 from repro.quant import recipe as qrecipe
+from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+
+
+def use_kernel_backend(qctx) -> bool:
+    """True when this qctx routes the block through the int8 Pallas
+    kernels (``QuantSpec.backend == "kernels"``) instead of the qdq
+    fake-quant oracle.  Requires int8 conv taps in the qdata (absent in
+    artifacts quantized before the kernel backend existed -> fall back)."""
+    if not is_quant(qctx):
+        return False
+    if not qrecipe.uses_kernel_backend(qctx["spec"]):
+        return False
+    # the fused conv kernel needs the int8 taps ("conv_w" in the block's
+    # qw dict) -- absent in pre-backend artifacts, which keep the oracle
+    return "conv_w" in qctx.get("qw", {})
 
 
 def init_mamba_block(key: jax.Array, cfg: ModelConfig) -> Dict:
@@ -134,9 +149,155 @@ def _quant_A(p: Dict, qctx) -> jax.Array:
     return a
 
 
+# ---------------------------------------------------------------------------
+# kernel-backed int8 execution (QuantSpec.backend == "kernels")
+# ---------------------------------------------------------------------------
+#
+# The paper's deployed dataflow (Fig. 4): activations are quantized ONCE
+# to int8 at each site and the int8 tensors feed the fused Pallas kernels
+# directly -- no qdq round-trips, no fp reference scan.  All calls go
+# through the ``kops`` module attributes so routing tests can monkeypatch
+# them and count dispatches.
+
+def _kernel_out_proj(y2d: jax.Array, sc: Dict, qw: Dict,
+                     spec) -> jax.Array:
+    """SSM output -> out_proj: Hadamard-rotate+quantize (H folded into
+    W_out) or plain static quantize, then one int8 matmul."""
+    if spec.use_hadamard:
+        q_y = kops.hadamard_quant(y2d, sc["y_had"])
+        lin = qw["out_proj_had"]
+        return kops.int8_matmul(q_y, lin["qw"], sc["y_had"], lin["s_w"])
+    q_y = Q.quantize(y2d, sc["y"])
+    lin = qw["out_proj"]
+    return kops.int8_matmul(q_y, lin["qw"], sc["y"], lin["s_w"])
+
+
+def _kernel_selection(bcdt: jax.Array, p: Dict, cfg: ModelConfig,
+                      sc: Dict, qw: Dict):
+    """(dt_low | B | C) fp32 rows -> (qdt, qB, qC) int8 rows."""
+    dtr, n = cfg.resolved_dt_rank, cfg.d_state
+    dt_low, bmat, cmat = jnp.split(bcdt, [dtr, dtr + n], axis=-1)
+    q_dt_low = Q.quantize(dt_low, sc["dt_low"])
+    lin = qw["dt_proj"]
+    dt = kops.int8_matmul(q_dt_low, lin["qw"], sc["dt_low"], lin["s_w"])
+    dt = common.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    return (Q.quantize(dt, sc["dt"]), Q.quantize(bmat, sc["B"]),
+            Q.quantize(cmat, sc["C"]))
+
+
+def _kernel_scan_operands(p: Dict, sc: Dict, qw: Dict):
+    """(qA int8, scale vector (s_u, s_dt, s_A, s_B, s_C), D fp32).
+
+    qA is precomputed at quantize time (sitemap ``QuantizedTensor``);
+    the on-the-fly derivation only remains for qdata generated before
+    that site existed."""
+    if "A" in qw:
+        qa = qw["A"]["qw"]
+    else:
+        qa = Q.quantize(-jnp.exp(p["A_log"].astype(jnp.float32)),
+                        sc["A"])
+    svec = jnp.stack([jnp.asarray(s, jnp.float32) for s in
+                      (sc["x"], sc["dt"], sc["A"], sc["B"], sc["C"])])
+    return qa, svec, p["D"].astype(jnp.float32)
+
+
+def _mamba_kernels_seq(p: Dict, cfg: ModelConfig, x: jax.Array, qctx,
+                       state: Optional[Dict] = None
+                       ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Kernel-backed sequence forward.  x (B, L, d); optional recurrent
+    ``state`` {"conv", "h"} turns it into a prefill chunk (state carried
+    across chunks via the conv tail and the scan's h0/h_last)."""
+    spec, sc, qw = qctx["spec"], qctx["scales"], qctx["qw"]
+    bsz, L, d = x.shape
+    di = cfg.d_inner
+    x2d = x.astype(jnp.float32).reshape(-1, d)
+
+    # fused residual-add + RMSNorm + static int8 quantization (§4.3);
+    # the residual operand is zero here because the block adds its own
+    # residual on return (the layer scan owns the stream).
+    q_in, _ = kops.rmsnorm_quant(x2d, jnp.zeros_like(x2d), p["norm"],
+                                 sc["in"], eps=cfg.norm_eps)
+    lin = qw["in_proj"]
+    xz = kops.int8_matmul(q_in, lin["qw"], sc["in"], lin["s_w"])
+    xc, z = jnp.split(xz, 2, axis=-1)
+    z = z.reshape(bsz, L, di)
+
+    # fused int8 conv + SiLU + requant straight to the SSM-input scale
+    # (the percentile-max scale of §4.2) -- one kernel, int8 in/out.
+    qxc = Q.quantize(xc, sc["conv_in"]).reshape(bsz, L, di)
+    conv_state = (Q.quantize(state["conv"].astype(jnp.float32),
+                             sc["conv_in"])
+                  if state is not None else None)
+    cw = qw["conv_w"]
+    qu, new_conv_q = kops.causal_conv1d(
+        qxc, cw["qw"], p["conv_b"], sc["conv_in"], cw["s_w"],
+        s_out=sc["x"], state=conv_state, apply_silu=True)
+
+    # selection parameters from the already-int8 SSM input
+    lin = qw["x_proj"]
+    bcdt = kops.int8_matmul(qu.reshape(-1, di), lin["qw"], sc["x"],
+                            lin["s_w"])
+    qdt, qb, qc = _kernel_selection(bcdt, p, cfg, sc, qw)
+    n = cfg.d_state
+    qdt = qdt.reshape(bsz, L, di)
+    qb, qc = qb.reshape(bsz, L, n), qc.reshape(bsz, L, n)
+    qa, svec, dres = _kernel_scan_operands(p, sc, qw)
+
+    h0 = state["h"] if state is not None else None
+    y, h_last = kops.selective_scan(qu, qdt, qa, qb, qc, svec, dres,
+                                    z=z, h0=h0)
+    out = _kernel_out_proj(y.reshape(-1, di), sc, qw, spec)
+    out = x + out.reshape(bsz, L, d).astype(x.dtype)
+    if state is None:
+        return out, None
+    new_conv = (new_conv_q.astype(jnp.float32)
+                * jnp.asarray(sc["conv_in"], jnp.float32)
+                ).astype(state["conv"].dtype)
+    return out, {"conv": new_conv, "h": h_last}
+
+
+def _mamba_kernels_step(p: Dict, cfg: ModelConfig, x: jax.Array,
+                        state: Dict, qctx) -> Tuple[jax.Array, Dict]:
+    """Kernel-backed single-token decode.  x (B, d)."""
+    spec, sc, qw = qctx["spec"], qctx["scales"], qctx["qw"]
+    di = cfg.d_inner
+    x2d = x.astype(jnp.float32)
+
+    q_in, _ = kops.rmsnorm_quant(x2d, jnp.zeros_like(x2d), p["norm"],
+                                 sc["in"], eps=cfg.norm_eps)
+    lin = qw["in_proj"]
+    xz = kops.int8_matmul(q_in, lin["qw"], sc["in"], lin["s_w"])
+    xc, z = jnp.split(xz, 2, axis=-1)
+
+    qxc = Q.quantize(xc, sc["conv_in"])[:, None, :]       # (B, 1, di)
+    conv_q = Q.quantize(state["conv"].astype(jnp.float32), sc["conv_in"])
+    cw = qw["conv_w"]
+    qu3, new_conv_q = kops.causal_conv1d(
+        qxc, cw["qw"], p["conv_b"], sc["conv_in"], cw["s_w"],
+        s_out=sc["x"], state=conv_q, apply_silu=True)
+    qu = qu3[:, 0]                                        # (B, di)
+
+    lin = qw["x_proj"]
+    bcdt = kops.int8_matmul(qu, lin["qw"], sc["x"], lin["s_w"])
+    qdt, qb, qc = _kernel_selection(bcdt, p, cfg, sc, qw)
+    qa, svec, dres = _kernel_scan_operands(p, sc, qw)
+
+    # fused single-token scan step: reads/writes the state in one pass
+    y, h_new = kops.selective_scan_step(qu, qdt, qa, qb, qc, svec, dres,
+                                        state["h"], z=z)
+    out = _kernel_out_proj(y, sc, qw, spec)
+    new_conv = (new_conv_q.astype(jnp.float32)
+                * jnp.asarray(sc["conv_in"], jnp.float32)
+                ).astype(state["conv"].dtype)
+    return x + out.astype(x.dtype), {"conv": new_conv, "h": h_new}
+
+
 def mamba_block(p: Dict, cfg: ModelConfig, x: jax.Array, qctx=None
                 ) -> Tuple[jax.Array, Dict]:
     """Full-sequence forward.  x: residual stream (B, L, d)."""
+    if use_kernel_backend(qctx):
+        out, _ = _mamba_kernels_seq(p, cfg, x, qctx)
+        return out, {}
     aux: Dict = {}
     h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
     if is_calib(qctx):
@@ -195,9 +356,62 @@ def init_mamba_state(cfg: ModelConfig, batch: int) -> Dict:
     }
 
 
+def mamba_block_prefill(p: Dict, cfg: ModelConfig, x: jax.Array,
+                        state: Dict, qctx=None) -> Tuple[jax.Array, Dict]:
+    """Sequence forward with recurrent-state carry (chunked prefill).
+
+    x: (B, L, d); state: {"conv", "h"} as produced by
+    ``init_mamba_state``.  One dispatch processes the whole chunk; the
+    conv tail and the scan's h0/h_last carry across chunks, and the
+    recurrence is evaluated strictly in time order, so chunked prefill
+    followed by ``mamba_block_step`` decode matches per-token stepping.
+    """
+    if use_kernel_backend(qctx):
+        return _mamba_kernels_seq(p, cfg, x, qctx, state=state)
+
+    aux: Dict = {}
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    # mirror mamba_block_step's site handling exactly (parity contract);
+    # note dynamic-method scales are recomputed per *call*, so a chunked
+    # prefill is only an approximation of per-token stepping there --
+    # the engine keeps the per-token path for dynamic specs
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        h = qrecipe.act_qdq(h, qctx["scales"]["in"], qctx["spec"])
+    xz = linear(p, "in_proj", h, qctx)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        xc = qrecipe.act_qdq(xc, qctx["scales"]["conv_in"], qctx["spec"])
+
+    xc, new_conv = _depthwise_conv_silu(xc, p["conv_w"], p["conv_b"],
+                                        state=state["conv"])
+    xc = _quant_ssm_input(xc, qctx, aux)
+    dt, bmat, cmat = _ssm_params(p, cfg, xc, qctx, aux)
+    a = _quant_A(p, qctx)
+    y, h_last = kref.selective_scan_seq_ref(
+        xc, dt, a, bmat, cmat, p["D"].astype(jnp.float32), z=z,
+        h0=state["h"])
+    y = y.astype(x.dtype)
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        if spec.method == "dynamic":
+            y = Q.dynamic_qdq(y)
+            out = linear(p, "out_proj", y, qctx)
+        elif spec.use_hadamard:
+            yh = had_transform(y)
+            out = linear(p, "out_proj", yh, qctx, site="out_proj_had")
+        else:
+            y = qrecipe.act_qdq(y, qctx["scales"]["y"], spec)
+            out = linear(p, "out_proj", y, qctx)
+    else:
+        out = linear(p, "out_proj", y, qctx)
+    return x + out, {"conv": new_conv, "h": h_last}
+
+
 def mamba_block_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
                      qctx=None) -> Tuple[jax.Array, Dict]:
     """Single-token decode.  x: (B, d); state: {"conv", "h"}."""
+    if use_kernel_backend(qctx):
+        return _mamba_kernels_step(p, cfg, x, state, qctx)
     h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
     if is_quant(qctx) and qctx["spec"].method != "dynamic":
         h = qrecipe.act_qdq(h, qctx["scales"]["in"], qctx["spec"])

@@ -26,7 +26,8 @@ from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import common
 from repro.models.attention import init_kv_cache
 from repro.models.mamba import (init_mamba_block, init_mamba_state,
-                                mamba_block, mamba_block_step)
+                                mamba_block, mamba_block_prefill,
+                                mamba_block_step)
 from repro.models.transformer import (decoder_layer, encoder_layer,
                                       init_decoder_layer,
                                       init_encoder_layer,
@@ -547,6 +548,41 @@ def decode_step(params: Dict, cfg: ModelConfig, state: Dict,
     return logits, new_state
 
 
+# families whose decode state can be advanced a whole sequence chunk at a
+# time (recurrent state + h0/h_last carry); attention families still
+# prefill through the per-token decode path for now
+SEQ_PREFILL_FAMILIES = ("mamba",)
+
+
+def supports_seq_prefill(cfg: ModelConfig) -> bool:
+    return cfg.family in SEQ_PREFILL_FAMILIES
+
+
+def prefill_step(params: Dict, cfg: ModelConfig, state: Dict,
+                 tokens: jax.Array, qctx=None) -> Tuple[jax.Array, Dict]:
+    """Advance the decode state by a whole chunk of prompt tokens.
+
+    tokens: (B, L) int32.  One dispatch replaces L ``decode_step``
+    dispatches: each layer runs its sequence forward with the recurrent
+    state carried in and out (chunked prefill).  Returns (last-position
+    logits (B, V), new state); chain calls for longer prompts.
+    """
+    if not supports_seq_prefill(cfg):
+        raise NotImplementedError(
+            f"sequence prefill not implemented for family {cfg.family!r}")
+    dt = _dtype(cfg)
+    L = tokens.shape[1]
+    x = _embed(params, cfg, tokens, dt)                 # (B, L, d)
+    new_state = dict(state)
+    x, new_layers = _scan_blocks_cache(
+        lambda lp, h, c, q: mamba_block_prefill(lp, cfg, h, c, q),
+        x, params["layers"], state["layers"], qctx, "layers")
+    new_state["layers"] = new_layers
+    new_state["pos"] = state["pos"] + L
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits[:, 0], new_state
+
+
 # ---------------------------------------------------------------------------
 # input specs (ShapeDtypeStruct stand-ins; no allocation)
 # ---------------------------------------------------------------------------
@@ -637,6 +673,42 @@ def _batch_axis_map(cfg: ModelConfig):
         axes["m_blocks"] = 2
         axes["s_blocks"] = 1
     return axes
+
+
+def slice_slot(cfg: ModelConfig, state: Dict, i: int) -> Dict:
+    """Extract slot ``i`` of the decode state as a batch-1 state tree
+    (the serving engine prefills one slot without paying full-batch
+    compute)."""
+    axes = _batch_axis_map(cfg)
+    out = {}
+    for key, axis in axes.items():
+        if key not in state:
+            continue
+
+        def one(a, axis=axis):
+            idx = (slice(None),) * axis + (slice(i, i + 1),)
+            return a[idx]
+
+        out[key] = jax.tree.map(one, state[key])
+    return out
+
+
+def write_slot(cfg: ModelConfig, state: Dict, slot_state: Dict,
+               i: int) -> Dict:
+    """Write a batch-1 state tree (from ``slice_slot``) back into slot
+    ``i`` of the full decode state."""
+    axes = _batch_axis_map(cfg)
+    out = dict(state)
+    for key, axis in axes.items():
+        if key not in state:
+            continue
+
+        def one(o, n, axis=axis):
+            idx = (slice(None),) * axis + (slice(i, i + 1),)
+            return o.at[idx].set(n.astype(o.dtype))
+
+        out[key] = jax.tree.map(one, state[key], slot_state[key])
+    return out
 
 
 def merge_slot(cfg: ModelConfig, old: Dict, new: Dict, i: int) -> Dict:

@@ -25,19 +25,28 @@ backward compatibility, but the supported entry point is ``repro.api``
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+import dataclasses
+from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.quant import recipe as qrecipe
 from repro.quant.sitemap import (
     PCT_NEVER, PCT_X, PCT_X_UNLESS_QUAROT, AliasScale, BlockSites,
-    ComputedScale, FakeQuantSite, Group, ScaleSite, Section, SiteMap,
-    SmoothFold, WeightSite, quantize_with_site_map, register_site_map,
+    ComputedScale, FakeQuantSite, Group, QuantizedTensor, ScaleSite,
+    Section, SiteMap, SmoothFold, WeightSite, quantize_with_site_map,
+    register_site_map,
 )
 
 
 def make_qctx(spec: qrecipe.QuantSpec, qdata: Dict,
-              int8_compute: bool = False) -> Dict:
+              int8_compute: bool = False,
+              backend: Optional[str] = None) -> Dict:
+    """Assemble a forward-pass quant context.  ``backend`` overrides
+    ``spec.backend`` ("qdq" oracle vs "kernels" int8 execution) without
+    re-quantizing -- the qdata is shared between the two."""
+    if backend is not None and backend != spec.backend:
+        spec = dataclasses.replace(spec, backend=backend)
+        spec.validate()
     out = {"mode": "quant", "spec": spec, **qdata}
     if int8_compute:
         out["int8_compute"] = True
@@ -81,7 +90,15 @@ MAMBA_BLOCK = BlockSites(
         WeightSite("dt_proj"),
         WeightSite("out_proj"),
         WeightSite("out_proj_had", param="out_proj", fold_hadamard=True),
+        # int8 taps + scale for the fused conv kernel (backend="kernels");
+        # the in-place fake-quant below keeps the qdq oracle identical
+        # (same symmetric scale, so qw * s_w == the fake-quantized taps).
+        WeightSite("conv_w"),
     ),
+    # A = -exp(A_log) quantized once with the ComputedScale "A" above, so
+    # the kernel backend's decode step never re-derives it per token
+    computed=(QuantizedTensor("A", fn="neg_exp", param="A_log",
+                              scale="A"),),
     fakequant=(FakeQuantSite("conv_w"),),
 )
 

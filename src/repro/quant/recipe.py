@@ -45,6 +45,12 @@ class QuantSpec:
     quantize_kv_cache: bool = False     # beyond-paper: int8 KV cache
     input_quant: str = "sym_percentile"  # Table 9 variants:
     # sym_percentile | sym_minmax | asym_percentile | log2 | dynamic
+    backend: str = "qdq"                # execution backend:
+    # qdq     -- fake-quant simulation over the fp reference ops (oracle)
+    # kernels -- activations quantized once to int8 and fed to the Pallas
+    #            kernels (int8 matmul / conv / scan / hadamard / rmsnorm);
+    #            the paper's deployed dataflow.  Falls back to qdq where
+    #            unsupported (dynamic scales, non-8-bit, quarot).
 
     @property
     def use_percentile(self) -> bool:
@@ -70,6 +76,9 @@ class QuantSpec:
             raise ValueError(f"w_bits must be 4 or 8, got {self.w_bits}")
         if self.a_bits not in (4, 8):
             raise ValueError(f"a_bits must be 4 or 8, got {self.a_bits}")
+        if self.backend not in ("qdq", "kernels"):
+            raise ValueError(
+                f"backend must be 'qdq' or 'kernels', got {self.backend!r}")
 
 
 PRESETS = {
@@ -84,7 +93,40 @@ PRESETS = {
     "quamba-w4a8": QuantSpec(method="quamba", w_bits=4),
     "quamba-pc": QuantSpec(method="quamba", per_channel_w=True),
     "quamba-kv8": QuantSpec(method="quamba", quantize_kv_cache=True),
+    "quamba-kernels": QuantSpec(method="quamba", backend="kernels"),
 }
+
+
+# static-scale methods the int8 kernel backend can execute directly;
+# everything else (dynamic scales, the rotate-back of quarot) keeps the
+# qdq oracle path even when backend="kernels" is requested.
+KERNEL_BACKEND_METHODS = ("quamba", "static", "in_per", "out_had",
+                          "smoothquant")
+
+
+def uses_kernel_backend(spec: Optional["QuantSpec"]) -> bool:
+    """True when ``spec`` selects the int8 Pallas-kernel execution path."""
+    return (spec is not None
+            and getattr(spec, "backend", "qdq") == "kernels"
+            and spec.method in KERNEL_BACKEND_METHODS
+            and spec.w_bits == 8 and spec.a_bits == 8
+            and not spec.per_channel_w
+            and spec.input_quant in ("sym_percentile", "sym_minmax"))
+
+
+def prefill_chunk_safe(spec: Optional["QuantSpec"]) -> bool:
+    """True when quantization scales are independent of the activation
+    batch, so a chunked sequence prefill reproduces per-token stepping.
+
+    The "dynamic" method and the per-call input_quant variants (dynamic
+    scale, log2's per-tensor amax, asym_percentile's mean-derived zero
+    point) compute statistics over whatever tensor they see -- one chunk
+    vs one token gives different scales, so those specs must prefill
+    token by token."""
+    if spec is None:
+        return True
+    return (spec.method != "dynamic"
+            and spec.input_quant in ("sym_percentile", "sym_minmax"))
 
 
 def get_spec(name: str) -> Optional[QuantSpec]:

@@ -75,6 +75,19 @@ class WeightSite:
 
 
 @dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """A derived tensor quantized once at quantize time with an
+    already-computed scale site (e.g. A = -exp(A_log) with the
+    ``ComputedScale`` "A") -- consumed by the int8 kernel backend so the
+    hot path never recomputes/requantizes static data."""
+
+    name: str                       # output key in the qw dict
+    fn: str                         # key into _COMPUTED_TENSOR_FNS
+    param: str
+    scale: str                      # scale site supplying the step size
+
+
+@dataclasses.dataclass(frozen=True)
 class FakeQuantSite:
     param: str
     per_expert: bool = False        # MoE: one scale per (layer, expert)
@@ -105,6 +118,7 @@ class BlockSites:
 
     scales: Tuple = ()
     weights: Tuple[WeightSite, ...] = ()
+    computed: Tuple[QuantizedTensor, ...] = ()
     fakequant: Tuple[FakeQuantSite, ...] = ()
     smooth: Optional[SmoothFold] = None
     groups: Tuple[Group, ...] = ()
@@ -163,6 +177,10 @@ def registered_families() -> Tuple[str, ...]:
 _COMPUTED_SCALE_FNS = {
     # scale of the dequantized A = -exp(A_log) used by the int8 scan
     "neg_exp_symmetric": lambda a: Q.symmetric_scale(-jnp.exp(a)),
+}
+
+_COMPUTED_TENSOR_FNS = {
+    "neg_exp": lambda a: -jnp.exp(a),
 }
 
 
@@ -269,6 +287,16 @@ def _weight_sites(sites, p_src, spec, stacked) -> Dict:
     return qw
 
 
+def _computed_sites(sites, p_src, scales, stacked) -> Dict:
+    qw: Dict = {}
+    for site in sites:
+        fn = _COMPUTED_TENSOR_FNS[site.fn]
+        one = lambda arr, s, fn=fn: {"qw": Q.quantize(fn(arr), s)}
+        run = jax.vmap(one) if stacked else one
+        qw[site.name] = run(p_src[site.param], scales[site.scale])
+    return qw
+
+
 def _fakequant_sites(sites, p_dst, spec, stacked) -> None:
     for site in sites:
         w = p_dst[site.param]
@@ -291,6 +319,7 @@ def quantize_block(block: BlockSites, params_l, stats_l,
 
     scales = _scale_sites(block.scales, stats_l, spec, p, stacked, pre)
     qw = _weight_sites(block.weights, p, spec, stacked)
+    qw.update(_computed_sites(block.computed, p, scales, stacked))
     _fakequant_sites(block.fakequant, p, spec, stacked)
 
     for grp in block.groups:

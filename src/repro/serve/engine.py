@@ -4,21 +4,36 @@ The engine owns a fixed-capacity decode state (the model's KV/SSM state
 for ``max_batch`` slots).  Requests join free slots; every ``step()``
 decodes one token for all live slots; finished sequences free their slot
 immediately so queued requests start without waiting for the batch to
-drain (continuous batching).  Prefill runs through the same decode path
-(a lax.scan over prompt tokens), so quantized execution (Quamba qctx) is
-identical between prefill and generation.
+drain (continuous batching).
+
+Prefill: for families with a sequence prefill path (recurrent state +
+h0/h_last carry -- see ``repro.models.prefill_step``) the prompt is fed
+in chunks of ``prefill_chunk`` tokens, one dispatch per chunk, against a
+batch-1 slice of the slot's state -- O(num_chunks) dispatches instead of
+O(prompt_len) full-batch decode steps.  Other families fall back to the
+per-token decode path, so quantized execution (Quamba qctx) stays
+identical between prefill and generation either way.
+
+Decode-loop host overhead: per-slot bookkeeping lives in host numpy
+mirrors; the device-side token/temperature tensors are refreshed only
+when slot membership changes, and each step issues exactly one
+device_get (the sampled tokens).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, init_decode_state
-from repro.models.model import merge_slot, reset_slot
+from repro.models import decode_step, init_decode_state, prefill_step, \
+    supports_seq_prefill
+from repro.models.model import merge_slot, reset_slot, slice_slot, \
+    write_slot
+from repro.quant.recipe import prefill_chunk_safe
 from repro.serve.sampler import sample
 
 
@@ -37,12 +52,18 @@ class Request:
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 2048, qctx=None, seed: int = 0,
-                 cache_dtype=None):
+                 cache_dtype=None, prefill_chunk: int = 128):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.params = params
         self.cfg = cfg
         self.qctx = qctx
         self.max_batch = max_batch
         self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
         if cache_dtype is None:
             # QuantSpec.quantize_kv_cache flows through the qctx: int8
             # attention caches with per-entry scales (see models.attention)
@@ -59,18 +80,90 @@ class Engine:
         # slot-local positions (the global state["pos"] advances for all
         # slots; per-slot bookkeeping is host-side)
         self._step_fn = jax.jit(self._one_step)
-        self._next_tokens = jnp.zeros((max_batch,), jnp.int32)
+        # chunked prefill requires a sequence path AND chunk-invariant
+        # quantization scales (see recipe.prefill_chunk_safe): per-call
+        # scales only match per-token stepping when fed token by token
+        spec_m = qctx.get("spec") if isinstance(qctx, dict) else None
+        self._prefill_fn = (jax.jit(self._one_prefill)
+                            if supports_seq_prefill(cfg)
+                            and prefill_chunk_safe(spec_m) else None)
+        # host mirrors of the per-slot decode inputs; the device copies
+        # are only rebuilt when a slot joins or leaves (``_dirty``)
+        self._next_host = np.zeros((max_batch,), np.int32)
+        self._temps_host = np.zeros((max_batch,), np.float32)
+        self._next_dev = jnp.zeros((max_batch,), jnp.int32)
+        self._temps_dev = jnp.zeros((max_batch,), jnp.float32)
+        self._dirty = False
+        # dispatch accounting (benchmarks / tests)
+        self.counters: Dict[str, int] = {"prefill_dispatches": 0,
+                                         "decode_steps": 0}
 
-    # -- jitted core ------------------------------------------------------
+    # -- jitted cores -----------------------------------------------------
     def _one_step(self, params, state, tokens, key, temps):
         logits, new_state = decode_step(params, self.cfg, state, tokens,
                                         qctx=self.qctx)
         toks = sample(key, logits, temps)
         return toks, logits, new_state
 
+    def _one_prefill(self, params, slot_state, tokens):
+        _, new_state = prefill_step(params, self.cfg, slot_state, tokens,
+                                    qctx=self.qctx)
+        return new_state
+
     # -- API --------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.uid} has an empty prompt; every request "
+                "needs at least one prompt token")
         self.queue.append(req)
+
+    def _set_next(self, i: int, tok: int) -> None:
+        self._next_host[i] = tok
+        self._dirty = True
+
+    @staticmethod
+    def _chunk_plan(n: int, chunk: int) -> List[int]:
+        """Split ``n`` prompt tokens into full ``chunk``-sized pieces plus
+        a power-of-two binary decomposition of the remainder, so the
+        jitted prefill compiles at most log2(chunk)+2 distinct shapes
+        regardless of the prompt-length mix (vs one compile per distinct
+        remainder length)."""
+        sizes = [chunk] * (n // chunk)
+        rem = n % chunk
+        while rem:
+            p = 1 << (rem.bit_length() - 1)
+            sizes.append(p)
+            rem -= p
+        return sizes
+
+    def _prefill(self, i: int, req: Request) -> None:
+        """Advance slot ``i``'s state over ``req.prompt[:-1]``."""
+        toks = req.prompt[:-1]
+        if toks and self._prefill_fn is not None:
+            # chunked sequence prefill on a batch-1 slice of the state:
+            # O(num_chunks) dispatches, none of them full-batch
+            slot_state = slice_slot(self.cfg, self.state, i)
+            c0 = 0
+            for size in self._chunk_plan(len(toks), self.prefill_chunk):
+                chunk = jnp.asarray([toks[c0:c0 + size]], jnp.int32)
+                c0 += size
+                slot_state = self._prefill_fn(self.params, slot_state,
+                                              chunk)
+                self.counters["prefill_dispatches"] += 1
+            self.state = write_slot(self.cfg, self.state, slot_state, i)
+        else:
+            # fallback: per-token decode dispatches (attention families)
+            for t in toks:
+                tok = self._next_dev.at[i].set(t)
+                self.key, k = jax.random.split(self.key)
+                _, _, new_state = self._step_fn(
+                    self.params, self.state, tok, k, self._temps_dev)
+                self.counters["prefill_dispatches"] += 1
+                # only slot i's state advances during its prefill
+                self.state = merge_slot(self.cfg, self.state, new_state,
+                                        i)
+        self._set_next(i, req.prompt[-1])
 
     def _admit(self) -> None:
         for i in range(self.max_batch):
@@ -78,20 +171,15 @@ class Engine:
                 req = self.queue.pop(0)
                 self.slots[i] = req
                 self.state = reset_slot(self.cfg, self.state, i)
-                # prefill: feed prompt tokens through the decode path for
-                # this slot (other slots get pad token but their state is
-                # masked by position bookkeeping at this scale of engine).
-                for t in req.prompt[:-1]:
-                    tok = self._next_tokens.at[i].set(t)
-                    self.key, k = jax.random.split(self.key)
-                    _, _, new_state = self._step_fn(
-                        self.params, self.state, tok, k,
-                        jnp.zeros((self.max_batch,)))
-                    # only slot i's state advances during its prefill
-                    self.state = merge_slot(self.cfg, self.state,
-                                            new_state, i)
-                self._next_tokens = self._next_tokens.at[i].set(
-                    req.prompt[-1])
+                self._temps_host[i] = req.temperature
+                self._dirty = True
+                self._prefill(i, req)
+
+    def _sync_device_inputs(self) -> None:
+        if self._dirty:
+            self._next_dev = jnp.asarray(self._next_host)
+            self._temps_dev = jnp.asarray(self._temps_host)
+            self._dirty = False
 
     def step(self) -> None:
         """Decode one token for all live slots."""
@@ -99,13 +187,17 @@ class Engine:
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return
+        self._sync_device_inputs()
         self.key, k = jax.random.split(self.key)
-        temps = jnp.asarray([
-            (self.slots[i].temperature if self.slots[i] else 0.0)
-            for i in range(self.max_batch)], jnp.float32)
         toks, _, self.state = self._step_fn(
-            self.params, self.state, self._next_tokens, k, temps)
-        toks_host = jax.device_get(toks)
+            self.params, self.state, self._next_dev, k, self._temps_dev)
+        self.counters["decode_steps"] += 1
+        toks_host = np.asarray(jax.device_get(toks))
+        # sampled tokens feed the next step directly (no per-slot device
+        # updates); freed slots keep a stale token, which is harmless --
+        # their state is reset at the next admit
+        self._next_dev = toks
+        self._next_host[:] = toks_host
         for i in live:
             req = self.slots[i]
             tok = int(toks_host[i])
@@ -114,8 +206,8 @@ class Engine:
                     (req.eos_id is not None and tok == req.eos_id)):
                 req.done = True
                 self.slots[i] = None       # free slot -> continuous batching
-            else:
-                self._next_tokens = self._next_tokens.at[i].set(tok)
+                self._temps_host[i] = 0.0
+                self._dirty = True
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
@@ -126,10 +218,18 @@ class Engine:
 
 def generate(params, cfg: ModelConfig, prompts: List[List[int]], *,
              max_new_tokens: int = 32, temperature: float = 0.0,
-             qctx=None, max_len: int = 2048) -> List[List[int]]:
+             qctx=None, max_len: int = 2048,
+             prefill_chunk: int = 128) -> List[List[int]]:
     """Convenience batch generation through the engine."""
+    if not prompts:
+        raise ValueError("prompts is empty: pass at least one prompt")
+    for i, p in enumerate(prompts):
+        if not p:
+            raise ValueError(
+                f"prompts[{i}] is empty; every prompt needs at least one "
+                "token")
     eng = Engine(params, cfg, max_batch=min(8, len(prompts)),
-                 max_len=max_len, qctx=qctx)
+                 max_len=max_len, qctx=qctx, prefill_chunk=prefill_chunk)
     reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new_tokens,
                     temperature=temperature)
             for i, p in enumerate(prompts)]

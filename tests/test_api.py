@@ -114,6 +114,13 @@ def _reference_mamba_quantize(params, stats, spec):
         "in_proj": _qw(p["in_proj"]), "x_proj": _qw(p["x_proj"]),
         "dt_proj": _qw(p["dt_proj"]), "out_proj": _qw(p["out_proj"]),
         "out_proj_had": _qw(p["out_proj"], fold=True),
+        # int8 taps for the fused conv kernel (backend="kernels"), taken
+        # from the *original* weights (the in-place fake-quant below uses
+        # the same symmetric scale, so qw * s_w == the fake-quant taps)
+        "conv_w": _qw(p["conv_w"]),
+        # A = -exp(A_log) quantized once for the int8 scan kernels
+        "A": {"qw": jax.vmap(lambda a, s: Q.quantize(-jnp.exp(a), s))(
+            p["A_log"], scales["A"])},
     }
     p["conv_w"] = jax.vmap(lambda w: Q.qdq(
         w, Q.symmetric_scale(w, bits=spec.w_bits), bits=spec.w_bits))(

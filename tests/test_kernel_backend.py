@@ -1,0 +1,277 @@
+"""Kernel-backed int8 execution (``QuantSpec.backend == "kernels"``):
+routing through the Pallas kernels, parity against the fake-quant
+oracle, prefill-then-decode equivalence, and the engine's chunked
+prefill dispatch count."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.configs import get_config, scale_down
+from repro.data import eval_batches
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, prefill_step)
+from repro.models.mamba import use_kernel_backend
+from repro.quant.recipe import get_spec, uses_kernel_backend
+from repro.serve import Engine, Request, generate
+
+jax.config.update("jax_platform_name", "cpu")
+
+KERNEL_OPS = ("rmsnorm_quant", "int8_matmul", "causal_conv1d",
+              "selective_scan", "selective_scan_step", "hadamard_quant")
+
+
+@pytest.fixture(scope="module")
+def qsetup():
+    cfg = scale_down(get_config("mamba-130m"), layers=2, width=64,
+                     vocab=128)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calib = list(eval_batches(cfg.vocab_size, 2, 32, 2, seed=7))
+    qm = api.Quantizer(cfg, "quamba-kernels").calibrate(calib) \
+        .quantize(params)
+    return cfg, qm
+
+
+def _count_ops(monkeypatch):
+    from repro.kernels import ops
+    counts = {name: 0 for name in KERNEL_OPS}
+    for name in KERNEL_OPS:
+        orig = getattr(ops, name)
+
+        def wrap(*a, __orig=orig, __name=name, **kw):
+            counts[__name] += 1
+            return __orig(*a, **kw)
+
+        monkeypatch.setattr(ops, name, wrap)
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# spec / preset plumbing
+# ---------------------------------------------------------------------------
+
+def test_backend_flag_validation_and_preset():
+    spec = get_spec("quamba-kernels")
+    assert spec.backend == "kernels" and uses_kernel_backend(spec)
+    assert not uses_kernel_backend(get_spec("quamba"))
+    assert not uses_kernel_backend(get_spec("dynamic"))   # dynamic scales
+    assert not uses_kernel_backend(get_spec("quarot"))    # rotate-back
+    assert not uses_kernel_backend(get_spec("quamba-w4a8"))
+    import dataclasses
+    bad = dataclasses.replace(spec, backend="nope")
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+def _layer_qctx(qctx, layer=0):
+    """The per-layer qctx the layer scan hands to each block."""
+    sl = lambda t: jax.tree.map(lambda a: a[layer], t)
+    return {"mode": "quant", "spec": qctx["spec"],
+            "scales": sl(qctx["scales"]["layers"]),
+            "qw": sl(qctx["qw"]["layers"])}
+
+
+def test_qctx_backend_override(qsetup):
+    _, qm = qsetup
+    assert use_kernel_backend(_layer_qctx(qm.qctx()))
+    assert not use_kernel_backend(_layer_qctx(qm.qctx(backend="qdq")))
+    assert qm.qctx(backend="kernels")["spec"].backend == "kernels"
+    # artifacts quantized before the kernel backend existed carry no
+    # int8 conv taps -> graceful fallback to the qdq oracle
+    legacy = _layer_qctx(qm.qctx())
+    legacy["qw"] = {k: v for k, v in legacy["qw"].items()
+                    if k != "conv_w"}
+    assert not use_kernel_backend(legacy)
+
+
+# ---------------------------------------------------------------------------
+# routing: the kernel backend actually calls the Pallas kernels
+# ---------------------------------------------------------------------------
+
+def test_forward_routes_through_kernels(qsetup, monkeypatch):
+    cfg, qm = qsetup
+    counts = _count_ops(monkeypatch)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+    forward(qm.params, cfg, batch, qctx=qm.qctx())
+    for name in ("rmsnorm_quant", "int8_matmul", "causal_conv1d",
+                 "selective_scan", "hadamard_quant"):
+        assert counts[name] > 0, (name, counts)
+    assert counts["selective_scan_step"] == 0
+
+
+def test_decode_routes_through_step_kernel(qsetup, monkeypatch):
+    cfg, qm = qsetup
+    counts = _count_ops(monkeypatch)
+    state = init_decode_state(cfg, 1, 32, cache_dtype=jnp.float32)
+    decode_step(qm.params, cfg, state, jnp.asarray([3], jnp.int32),
+                qctx=qm.qctx())
+    assert counts["selective_scan_step"] > 0
+    assert counts["selective_scan"] == 0
+    for name in ("rmsnorm_quant", "int8_matmul", "causal_conv1d",
+                 "hadamard_quant"):
+        assert counts[name] > 0, (name, counts)
+
+
+def test_qdq_backend_never_touches_kernels(qsetup, monkeypatch):
+    cfg, qm = qsetup
+    counts = _count_ops(monkeypatch)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+    forward(qm.params, cfg, batch, qctx=qm.qctx(backend="qdq"))
+    assert all(c == 0 for c in counts.values()), counts
+
+
+# ---------------------------------------------------------------------------
+# parity: kernel backend vs the fake-quant numerics oracle
+# ---------------------------------------------------------------------------
+
+def test_kernel_backend_matches_qdq_oracle(qsetup):
+    cfg, qm = qsetup
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 32),
+                                          0, cfg.vocab_size)}
+    lg_qdq, _ = forward(qm.params, cfg, batch, qctx=qm.qctx(backend="qdq"))
+    lg_k, _ = forward(qm.params, cfg, batch, qctx=qm.qctx())
+    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_qdq),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("preset", ["static", "out_had", "in_per"])
+def test_kernel_backend_parity_other_static_presets(preset):
+    import dataclasses
+    cfg = scale_down(get_config("mamba-130m"), layers=2, width=64,
+                     vocab=128)
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    calib = list(eval_batches(cfg.vocab_size, 2, 32, 2, seed=11))
+    spec = dataclasses.replace(get_spec(preset), backend="kernels")
+    qm = api.Quantizer(cfg, spec).calibrate(calib).quantize(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (2, 16),
+                                          0, cfg.vocab_size)}
+    lg_qdq, _ = forward(qm.params, cfg, batch, qctx=qm.qctx(backend="qdq"))
+    lg_k, _ = forward(qm.params, cfg, batch, qctx=qm.qctx())
+    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_qdq),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# prefill-then-decode equivalence (sequence forward with h_last carry
+# must match per-token mamba_block_step stepping)
+# ---------------------------------------------------------------------------
+
+PROMPT = [3, 1, 4, 1, 5, 9, 2, 6]
+
+
+def _step_all(params, cfg, prompt, qctx):
+    state = init_decode_state(cfg, 1, 32, cache_dtype=jnp.float32)
+    lg = None
+    for t in prompt:
+        lg, state = decode_step(params, cfg, state,
+                                jnp.asarray([t], jnp.int32), qctx=qctx)
+    return lg
+
+
+def _prefill_then_step(params, cfg, prompt, qctx, chunk):
+    state = init_decode_state(cfg, 1, 32, cache_dtype=jnp.float32)
+    head = prompt[:-1]
+    for c0 in range(0, len(head), chunk):
+        toks = jnp.asarray([head[c0:c0 + chunk]], jnp.int32)
+        _, state = prefill_step(params, cfg, state, toks, qctx=qctx)
+    lg, _ = decode_step(params, cfg, state,
+                        jnp.asarray([prompt[-1]], jnp.int32), qctx=qctx)
+    return lg
+
+
+@pytest.mark.parametrize("chunk", [3, 16])
+def test_prefill_matches_stepping_fp(qsetup, chunk):
+    cfg, qm = qsetup
+    params = init_params(jax.random.PRNGKey(5), cfg)
+    lg1 = _step_all(params, cfg, PROMPT, None)
+    lg2 = _prefill_then_step(params, cfg, PROMPT, None, chunk)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(lg1),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["qdq", "kernels"])
+def test_prefill_matches_stepping_quant(qsetup, backend):
+    cfg, qm = qsetup
+    qctx = qm.qctx(backend=backend)
+    lg1 = _step_all(qm.params, cfg, PROMPT, qctx)
+    lg2 = _prefill_then_step(qm.params, cfg, PROMPT, qctx, chunk=4)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(lg1),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine: chunked prefill dispatch count + correctness, input guards
+# ---------------------------------------------------------------------------
+
+def test_engine_prefill_is_chunked_not_per_token(qsetup):
+    cfg, qm = qsetup
+    eng = Engine(qm.params, cfg, max_batch=2, max_len=32,
+                 qctx=qm.qctx(), prefill_chunk=4)
+    req = Request(uid=0, prompt=PROMPT, max_new_tokens=4)
+    eng.submit(req)
+    eng.run()
+    # 7 prompt-head tokens, chunk=4 -> [4, 2, 1]: 3 dispatches, not 7
+    assert eng.counters["prefill_dispatches"] == 3
+    # and the result matches standalone per-token greedy decoding
+    state = init_decode_state(cfg, 1, 32, cache_dtype=jnp.float32)
+    lg = None
+    for t in PROMPT:
+        lg, state = decode_step(qm.params, cfg, state,
+                                jnp.asarray([t], jnp.int32),
+                                qctx=qm.qctx())
+    ref = []
+    for _ in range(4):
+        nt = int(jnp.argmax(lg[0]))
+        ref.append(nt)
+        lg, state = decode_step(qm.params, cfg, state,
+                                jnp.asarray([nt], jnp.int32),
+                                qctx=qm.qctx())
+    assert req.output == ref
+
+
+def test_chunk_plan_bounds_compiles_and_covers():
+    for chunk in (1, 3, 4, 128):
+        for n in (0, 1, 2, 5, 7, 127, 128, 255, 300):
+            plan = Engine._chunk_plan(n, chunk)
+            assert sum(plan) == n
+            # full chunks plus powers of two below chunk -> bounded
+            # distinct shapes no matter the prompt-length mix
+            assert all(s == chunk or (s < chunk and s & (s - 1) == 0)
+                       for s in plan)
+
+
+@pytest.mark.parametrize("spec_kw", [
+    {"method": "dynamic"},
+    {"input_quant": "dynamic"},
+    {"input_quant": "log2"},
+    {"input_quant": "asym_percentile"},
+])
+def test_engine_per_call_scales_keep_per_token_prefill(qsetup, spec_kw):
+    cfg, qm = qsetup
+    import dataclasses
+    spec = dataclasses.replace(get_spec("quamba"), **spec_kw)
+    qctx = {"mode": "quant", "spec": spec, **qm.qdata}
+    eng = Engine(qm.params, cfg, max_batch=1, max_len=32, qctx=qctx,
+                 prefill_chunk=4)
+    # per-call scales (dynamic method / per-tensor input_quant stats):
+    # chunked prefill would see chunk-wide statistics, so the engine
+    # must keep the per-token path
+    assert eng._prefill_fn is None
+    # the chunk-invariant default does use the sequence path
+    eng2 = Engine(qm.params, cfg, max_batch=1, max_len=32,
+                  qctx=qm.qctx(), prefill_chunk=4)
+    assert eng2._prefill_fn is not None
+
+
+def test_generate_rejects_empty_inputs(qsetup):
+    cfg, qm = qsetup
+    with pytest.raises(ValueError, match="prompts is empty"):
+        generate(qm.params, cfg, [])
+    with pytest.raises(ValueError, match="prompts\\[1\\] is empty"):
+        generate(qm.params, cfg, [[1], []])
+    eng = Engine(qm.params, cfg, max_batch=1, max_len=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(uid=0, prompt=[]))

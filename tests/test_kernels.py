@@ -195,6 +195,61 @@ def test_selective_scan_property(b, l, d, n):
 
 
 # ---------------------------------------------------------------------------
+# fused single-token scan step (decode TPOT kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,d,n,bd", [(1, 32, 8, 32), (3, 192, 16, 64),
+                                      (2, 96, 4, 256)])
+def test_selective_scan_step_kernel(b, d, n, bd):
+    from repro.kernels.scan_step import selective_scan_step
+    rng = np.random.default_rng(b * d)
+    arrs = {
+        "u": rng.normal(size=(b, d)).astype(np.float32) * 0.5,
+        "dt": np.abs(rng.normal(size=(b, d))).astype(np.float32) * 0.1,
+        "A": -np.abs(rng.normal(size=(d, n))).astype(np.float32),
+        "B": rng.normal(size=(b, n)).astype(np.float32),
+        "C": rng.normal(size=(b, n)).astype(np.float32),
+    }
+    qs, sc = {}, {}
+    for k, a in arrs.items():
+        s = float(Q.symmetric_scale(jnp.asarray(a)))
+        sc[k] = s
+        qs[k] = Q.quantize(jnp.asarray(a), s)
+    svec = jnp.asarray([sc[k] for k in ("u", "dt", "A", "B", "C")],
+                       jnp.float32)
+    dres = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    h = jnp.asarray(rng.normal(size=(b, d, n)).astype(np.float32))
+    y1, h1 = selective_scan_step(qs["u"], qs["dt"], qs["A"], qs["B"],
+                                 qs["C"], svec, dres, h, z=z, block_d=bd)
+    dq = {k: qs[k].astype(jnp.float32) * sc[k] for k in qs}
+    y2, h2 = ref.selective_scan_step_ref(h, dq["u"], dq["dt"], dq["A"],
+                                         dq["B"], dq["C"], dres, z=z)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_scan_step_matches_sequence_kernel_l1():
+    """The fused step kernel == the sequence kernel at L=1."""
+    from repro.kernels.scan_step import selective_scan_step
+    qs, scales, svec, dr, z = _scan_inputs(2, 1, 64, 8, seed=21)
+    h0 = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 64, 8)).astype(np.float32))
+    y_seq, h_seq = selective_scan(qs["u"], qs["dt"], qs["A"], qs["B"],
+                                  qs["C"], svec, dr, z=z, h0=h0,
+                                  chunk=1, block_d=64)
+    y_st, h_st = selective_scan_step(
+        qs["u"][:, 0], qs["dt"][:, 0], qs["A"], qs["B"][:, 0],
+        qs["C"][:, 0], svec, dr, h0, z=z[:, 0], block_d=64)
+    np.testing.assert_allclose(np.asarray(y_st), np.asarray(y_seq[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_st), np.asarray(h_seq),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # quantized SSD scan (Mamba-2 kernel, MXU-matmul formulation)
 # ---------------------------------------------------------------------------
 
