@@ -1,7 +1,25 @@
 #!/usr/bin/env bash
 # One-command verification: runs the tier-1 test suite exactly as CI does.
-#   ./scripts/check.sh            # full suite
-#   ./scripts/check.sh tests/test_api.py   # any extra pytest args pass through
+#   ./scripts/check.sh                     # full suite
+#   ./scripts/check.sh tests/test_api.py   # extra pytest args pass through
+#   ./scripts/check.sh --lint              # ruff lint (the CI lint job)
+#   ./scripts/check.sh --tripwire          # skipped-test budget check
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--lint" ]]; then
+    shift
+    if python -m ruff --version >/dev/null 2>&1; then
+        exec python -m ruff check src tests benchmarks "$@"
+    fi
+    echo "check.sh --lint: ruff not installed; skipping locally" \
+         "(CI installs it from requirements-dev.txt)" >&2
+    exit 0
+fi
+
+if [[ "${1:-}" == "--tripwire" ]]; then
+    shift
+    exec python scripts/skip_tripwire.py "$@"
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Perf regression gate: compare BENCH_PR.json against the base branch.
+
+CI downloads the ``bench-pr`` artifact from the most recent successful
+run on the base branch and calls::
+
+    python scripts/compare_bench.py --prev prev/BENCH_PR.json \
+        --cur BENCH_PR.json --max-regression 0.25
+
+Gated metrics (the kernels-backend serving hot paths):
+
+  * ``tpot_quamba_kernels_us``        -- lower is better
+  * ``prefill_chunked_tokens_per_s``  -- higher is better
+  * ``engine_prefill.prefill_dispatches`` -- lower is better, and being
+    a dispatch COUNT it is deterministic: unlike the wall-clock metrics
+    (which shared CI runners can wobble), any increase is a real
+    regression, so it gets a zero-tolerance threshold.
+
+A timing metric regressing by more than ``--max-regression`` (fraction,
+default 0.25) fails the job.  Missing previous artifact (first run on a
+branch, expired artifact) or missing metrics skip gracefully with exit
+0 -- the gate only ever compares like with like.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# (dotted key, higher_is_better, max_regression_override_or_None)
+GATED = (
+    ("tpot_quamba_kernels_us", False, None),
+    ("prefill_chunked_tokens_per_s", True, None),
+    ("engine_prefill.prefill_dispatches", False, 0.0),
+)
+
+
+def _lookup(d, dotted):
+    for part in dotted.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", required=True)
+    ap.add_argument("--cur", required=True)
+    ap.add_argument("--max-regression", type=float, default=0.25)
+    args = ap.parse_args()
+
+    if not os.path.exists(args.prev):
+        print(f"perf gate: no previous benchmark at {args.prev}; "
+              "skipping (first run on this base?)")
+        return 0
+    try:
+        with open(args.prev) as f:
+            prev = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"perf gate: unreadable previous benchmark ({e}); skipping")
+        return 0
+    with open(args.cur) as f:
+        cur = json.load(f)
+
+    failures = []
+    for key, higher_better, override in GATED:
+        pv, cv = _lookup(prev, key), _lookup(cur, key)
+        if pv is None or cv is None:
+            print(f"perf gate: {key}: absent in prev or cur; skipping")
+            continue
+        p, c = float(pv), float(cv)
+        if p <= 0:
+            continue
+        allowed = args.max_regression if override is None else override
+        # regression fraction, positive = worse
+        reg = (c - p) / p if not higher_better else (p - c) / p
+        arrow = "worse" if reg > 0 else "better"
+        print(f"perf gate: {key}: prev={p:.1f} cur={c:.1f} "
+              f"({abs(reg) * 100:.1f}% {arrow})")
+        if reg > allowed:
+            failures.append(
+                f"{key} regressed {reg * 100:.1f}% "
+                f"(> {allowed * 100:.0f}% allowed)")
+
+    if failures:
+        print("perf gate FAILED: " + "; ".join(failures))
+        return 1
+    print("perf gate ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

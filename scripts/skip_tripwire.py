@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Skipped-test tripwire: fail CI if the suite silently starts skipping.
+
+``tests/test_sharding.py`` and ``tests/test_roofline.py`` guard their
+imports with ``pytest.importorskip("repro.dist...")`` so stripped-down
+checkouts collect cleanly -- which also means a typo that breaks the
+``repro.dist`` import would turn both files back into silent skips and
+CI would stay green.  This script runs collection (``pytest --co -q``),
+parses the summary, and asserts:
+
+  * no collection errors,
+  * collection-level skips stay within MAX_COLLECTION_SKIPS (0 on CPU;
+    every known conditional skip in this suite happens at runtime, not
+    collection),
+  * at least MIN_COLLECTED tests exist (the suite cannot quietly
+    shrink).
+
+Run via ``./scripts/check.sh --tripwire`` (local and CI are the same
+command).
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+# Budget: collection-level skips allowed on a CPU runner.  The repo's
+# only conditional skips (TPU-only kernel paths, the vlm prefill case in
+# test_models_smoke.py) trigger at *runtime*; at collection the count
+# must be exactly 0 -- any increase means an import regression.
+MAX_COLLECTION_SKIPS = 0
+# Collected-test floor (202 at the time of writing); catches the suite
+# silently losing whole files without tracking every addition.
+MIN_COLLECTED = 200
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "--co", "-q"],
+        capture_output=True, text=True, env=env)
+    tail = "\n".join(r.stdout.strip().splitlines()[-5:])
+
+    m = re.search(r"(\d+)\s+tests? collected", r.stdout)
+    collected = int(m.group(1)) if m else 0
+    skipped = 0
+    sm = re.search(r"(\d+)\s+skipped", r.stdout)
+    if sm:
+        skipped = int(sm.group(1))
+    errors = 0
+    em = re.search(r"(\d+)\s+errors?", r.stdout)
+    if em:
+        errors = int(em.group(1))
+
+    problems = []
+    if r.returncode not in (0,):
+        problems.append(f"pytest --co exited {r.returncode}")
+    if errors:
+        problems.append(f"{errors} collection error(s)")
+    if skipped > MAX_COLLECTION_SKIPS:
+        problems.append(
+            f"{skipped} collection-level skip(s) > budget "
+            f"{MAX_COLLECTION_SKIPS} -- did a repro.* import break? "
+            "(that is how repro.dist tests would silently re-skip)")
+    if collected < MIN_COLLECTED:
+        problems.append(
+            f"only {collected} tests collected (< floor {MIN_COLLECTED})")
+
+    if problems:
+        print("skip tripwire FAILED:", "; ".join(problems))
+        print("--- pytest --co tail ---")
+        print(tail)
+        if r.stderr.strip():
+            print(r.stderr.strip()[-2000:])
+        return 1
+    print(f"skip tripwire ok: {collected} collected, {skipped} "
+          f"collection skips (budget {MAX_COLLECTION_SKIPS})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -143,7 +143,17 @@ DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
 LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
 
 SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
-SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+# Smoke shapes: the same cells at CI scale (host devices, scaled-down
+# configs).  Deliberately NOT in SHAPES -- the production dry-run matrix
+# stays 4 columns; these are addressable by name only.
+TRAIN_SMALL = ShapeSpec("train_small", 256, 8, "train")
+PREFILL_SMALL = ShapeSpec("prefill_small", 512, 8, "prefill")
+DECODE_SMALL = ShapeSpec("decode_small", 512, 8, "decode")
+SMOKE_SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_SMALL, PREFILL_SMALL,
+                                       DECODE_SMALL)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES + SMOKE_SHAPES}
 
 
 def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:

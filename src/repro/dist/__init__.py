@@ -1,0 +1,64 @@
+"""repro.dist -- sharding rules + trip-count-aware roofline analysis.
+
+This package is how the repo reasons about *placement* (how a model's
+params, optimizer state, activations and decode state are laid out on a
+device mesh) and *cost* (what a compiled step actually moves and
+computes, including the scan bodies XLA's ``cost_analysis()`` counts
+only once).
+
+Quick usage
+-----------
+
+Sharding a train state onto a mesh::
+
+    import jax
+    from repro.configs import get_config
+    from repro.dist.sharding import (batch_shardings,
+                                     train_state_shardings)
+    from repro.launch.mesh import make_host_mesh, use_mesh
+    from repro.train.step import init_train_state
+
+    cfg = get_config("mamba-130m")
+    mesh = make_host_mesh()                  # (data, model) over devices
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    st_sh = train_state_shardings(jax.eval_shape(lambda: state), mesh,
+                                  cfg, fsdp=True)
+    state = jax.device_put(state, st_sh)
+
+Costing a compiled step (trip-count aware)::
+
+    from repro.dist import hlo_cost, roofline
+
+    compiled = jax.jit(step).lower(state, batch).compile()
+    parsed = hlo_cost.analyze(compiled.as_text())
+    # parsed["flops"] / parsed["bytes accessed"] multiply while-loop
+    # bodies by their known_trip_count; parsed["collective_bytes"] /
+    # ["collective_count"] cover all-reduce/all-gather/... including
+    # collectives fired once per scanned layer.
+    terms = roofline.roofline_terms(
+        {"flops": parsed["flops"],
+         "bytes accessed": parsed["bytes accessed"]},
+        {"total": parsed["collective_bytes"],
+         "count": parsed["collective_count"]},
+        model_flops=2 * roofline.count_params(params) * tokens)
+    # terms: compute_s / memory_s / collective_s, bottleneck,
+    # useful_flops_ratio, mfu_bound
+
+End-to-end evidence for every (arch, shape) cell comes from the dry-run
+launcher (``python -m repro.launch.dryrun --arch mamba-130m --shape
+decode_small --scale-down --mesh 2x4 --variants fp,bf16,quamba,kv8``),
+which lowers + compiles on the chosen mesh and emits one JSON line per
+cell with memory, cost and roofline terms.  See ROADMAP.md
+"Distributed execution" for how to read the output.
+"""
+from repro.dist import hlo_cost, roofline
+from repro.dist.sharding import (
+    batch_shardings, decode_state_shardings, param_shardings, param_spec,
+    qdata_shardings, train_state_shardings,
+)
+
+__all__ = [
+    "hlo_cost", "roofline",
+    "param_spec", "param_shardings", "train_state_shardings",
+    "batch_shardings", "decode_state_shardings", "qdata_shardings",
+]

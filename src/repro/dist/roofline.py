@@ -1,0 +1,95 @@
+"""Roofline terms for a compiled step on one chip of a mesh.
+
+The model is the standard three-ceiling roofline: a step cannot finish
+faster than its compute time (flops / peak), its memory time (bytes /
+HBM bandwidth), or its collective time (collective bytes / interconnect
+bandwidth).  Quamba's whole pitch lives in the memory term: int8 halves
+the bytes a chip must move per decoded token, so for the memory-bound
+SSM scan the roofline -- not peak flops -- decides throughput.
+
+Default chip constants are TPU v5e: 197 TFLOP/s bf16 peak, 819 GB/s
+HBM, and a conservative 50 GB/s per-link ICI budget for collectives.
+Pass overrides for other parts (e.g. ``peak_flops=394e12`` for int8).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+# TPU v5e chip constants (per chip)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s (int8 is 2x)
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s collective budget per chip
+
+INT8_PEAK_FLOPS = 394e12
+
+
+def count_params(tree) -> int:
+    """Total element count of a param pytree (arrays or
+    ShapeDtypeStructs)."""
+    import jax
+
+    return int(sum(int(np.prod(leaf.shape)) if leaf.shape else 1
+                   for leaf in jax.tree.leaves(tree)))
+
+
+def count_bytes(tree) -> int:
+    """Total byte size of a pytree (arrays or ShapeDtypeStructs)."""
+    import jax
+
+    return int(sum(
+        int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        if leaf.shape else np.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(tree)))
+
+
+def roofline_terms(cost: Dict[str, float], coll: Dict[str, float], *,
+                   model_flops: Optional[float] = None,
+                   peak_flops: float = PEAK_FLOPS,
+                   hbm_bw: float = HBM_BW,
+                   coll_bw: float = ICI_BW) -> Dict[str, object]:
+    """Derive roofline terms from parsed per-chip cost.
+
+    cost: {"flops", "bytes accessed"} (trip-count-aware totals,
+          e.g. from ``repro.dist.hlo_cost.analyze``)
+    coll: {"total": collective bytes, "count": collective fires}
+    model_flops: the *useful* model flops per chip (6ND train /
+          2ND inference); sets useful_flops_ratio and mfu_bound.
+
+    Returns compute_s / memory_s / collective_s (the three ceilings),
+    step_s (their max), bottleneck ("compute"|"memory"|"collective"),
+    arithmetic intensity, and -- when model_flops is given --
+    useful_flops_ratio (model flops / executed flops, <1 under remat)
+    and mfu_bound (the MFU the bottleneck ceiling allows).
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll_bytes = float(coll.get("total", 0.0))
+    coll_count = int(coll.get("count", 0))
+
+    compute_s = flops / peak_flops
+    memory_s = bytes_acc / hbm_bw
+    collective_s = coll_bytes / coll_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = terms[bottleneck]
+
+    out: Dict[str, object] = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "step_s": step_s,
+        # alias consumed by benchmarks/roofline_report.py: the step time
+        # the three ceilings jointly allow is a LOWER bound
+        "step_lower_bound_s": step_s,
+        "bottleneck": bottleneck,
+        "arithmetic_intensity": flops / bytes_acc if bytes_acc else 0.0,
+        "collective_count": coll_count,
+    }
+    if model_flops is not None and flops > 0:
+        out["useful_flops_ratio"] = model_flops / flops
+        out["mfu_bound"] = ((model_flops / peak_flops) / step_s
+                            if step_s > 0 else 0.0)
+    return out

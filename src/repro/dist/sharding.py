@@ -1,0 +1,283 @@
+"""Sharding rules: pytree path + shape -> PartitionSpec on the mesh.
+
+One function, ``param_spec``, maps every parameter (and quantized-weight)
+leaf of every ``ASSIGNED_ARCHS`` family onto the production mesh axes:
+
+  model   -- tensor parallelism.  Column-parallel weights (in/up/qkv
+             projections, routers, conv channels, expert dim of MoE
+             stacks) shard their output dim; row-parallel weights
+             (out/down projections) shard their contraction dim; the
+             embedding shards its vocab rows (falling back to the
+             feature dim for the odd vocab sizes -- 49155, 51865 --
+             that 16 does not divide).
+  data    -- with ``fsdp=True``, one additional dim of every leaf is
+             sharded over the data axis (ZeRO-style); optimizer moments
+             and fp32 masters follow their parameter's spec.
+  pod     -- a second, slower data axis; only batch/gradient traffic
+             crosses it, so params never take the 'pod' axis.
+
+Every assignment is divisibility-guarded: a dim only gets a mesh axis
+when the axis size divides it, so the rules are total over arbitrary
+(including scaled-down) shapes.  Leading stacked-layer axes (the
+``lax.scan`` dims of ``layers`` / ``enc_layers`` / ``m_blocks`` /
+``s_blocks``) are never sharded -- they are loop dims, not data dims.
+
+The mesh argument only needs ``.shape`` (axis -> size mapping) and
+``.axis_names``; the pytree helpers below additionally need a real
+``jax.sharding.Mesh`` to build ``NamedSharding`` leaves.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.launch.mesh import dp_axes  # single source for the dp rule
+
+# column-parallel: shard the LAST dim (projection output) on 'model'
+_COL_PARALLEL = frozenset((
+    "in_proj", "x_proj", "dt_proj", "wq", "wk", "wv", "wi", "mlp_wi",
+    "up_proj", "up", "w_in", "w_gates", "router", "qkv", "lm_head",
+))
+# row-parallel: shard the FIRST kernel dim (contraction) on 'model'
+_ROW_PARALLEL = frozenset((
+    "out_proj", "out_proj_had", "wo", "mlp_wo", "down_proj",
+    "down_proj_had", "down",
+))
+# depthwise conv taps (width, channels): channels ride 'model'
+_CONV = frozenset(("conv_w",))
+
+# sections whose params carry leading stacked-layer axes (scan dims)
+_STACKED_1 = frozenset(("layers", "enc_layers", "s_blocks"))
+_STACKED_2 = frozenset(("m_blocks",))
+
+# smallest dim worth FSDP-sharding (below this the all-gather latency
+# dwarfs the memory saving)
+_FSDP_MIN_DIM = 128
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if isinstance(p, str):
+            names.append(p)
+        elif hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([_axis_size(mesh, a) for a in axis]))
+    return int(dict(mesh.shape)[axis])
+
+
+def _has_axis(mesh, axis: str) -> bool:
+    return axis in tuple(mesh.axis_names)
+
+
+def _divides(mesh, axis, dim: int) -> bool:
+    size = _axis_size(mesh, axis)
+    return size > 1 and dim % size == 0
+
+
+def _n_stacked(names: Tuple[str, ...]) -> int:
+    if any(n in _STACKED_2 for n in names):
+        return 2
+    if any(n in _STACKED_1 for n in names):
+        return 1
+    return 0
+
+
+def _dp_axis_for(mesh, dim: int):
+    """Largest data-parallel axis combination that divides ``dim``."""
+    dp = dp_axes(mesh)
+    candidates = [dp] if len(dp) > 1 else []
+    candidates += [(a,) for a in dp]
+    for axes in candidates:
+        size = _axis_size(mesh, axes)
+        if size > 1 and dim % size == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def param_spec(path, shape, mesh, cfg, fsdp: bool = False):
+    """PartitionSpec for one parameter leaf.
+
+    path: pytree path (jax key entries or plain strings) from the params
+    root; shape: the leaf shape; mesh: mesh (or any object with
+    ``.shape``/``.axis_names``); cfg: the ModelConfig (reserved for
+    family-specific refinements); fsdp: additionally shard one dim over
+    the 'data' axis.
+    """
+    from jax.sharding import PartitionSpec
+
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    ndim = len(shape)
+    spec = [None] * ndim
+    if ndim == 0:
+        return PartitionSpec()
+
+    lead = min(_n_stacked(names), ndim - 1)
+    kernel = list(range(lead, ndim))  # dims that belong to the weight
+
+    model = "model" if _has_axis(mesh, "model") else None
+
+    def assign(dim_idx, axis) -> bool:
+        if axis is None or spec[dim_idx] is not None:
+            return False
+        if not _divides(mesh, axis, shape[dim_idx]):
+            return False
+        spec[dim_idx] = axis
+        return True
+
+    # ---- model (tensor-parallel) axis --------------------------------
+    if model is not None and len(kernel) >= 1:
+        if name == "embed":
+            # vocab rows first; odd vocabs fall back to the feature dim
+            assign(kernel[0], model) or (
+                len(kernel) > 1 and assign(kernel[-1], model))
+        elif name in _CONV and len(kernel) >= 2:
+            assign(kernel[-1], model)
+        elif "moe" in names and name in ("wi", "wo") and len(kernel) >= 3:
+            # expert parallelism: experts ride the model axis
+            assign(kernel[0], model)
+        elif name in _COL_PARALLEL and len(kernel) >= 2:
+            assign(kernel[-1], model)
+        elif name in _ROW_PARALLEL and len(kernel) >= 2:
+            assign(kernel[0], model)
+
+    # ---- fsdp (ZeRO) data axis ---------------------------------------
+    if fsdp and _has_axis(mesh, "data"):
+        # first unassigned kernel dim that the data axis divides
+        for i in sorted(kernel, key=lambda i: -shape[i]):
+            if shape[i] < _FSDP_MIN_DIM:
+                continue
+            if assign(i, "data"):
+                break
+
+    return PartitionSpec(*spec)
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def _named(mesh, spec):
+    from jax.sharding import NamedSharding
+
+    return NamedSharding(mesh, spec)
+
+
+def replicate_shardings(tree, mesh):
+    """Fully-replicated NamedSharding for every leaf."""
+    import jax
+    from jax.sharding import PartitionSpec
+
+    return jax.tree.map(lambda _: _named(mesh, PartitionSpec()), tree)
+
+
+def param_shardings(tree, mesh, cfg, fsdp: bool = False):
+    """NamedSharding pytree for a params (or qw) tree via
+    ``param_spec``."""
+    import jax
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _named(
+            mesh, param_spec(path, leaf.shape, mesh, cfg, fsdp=fsdp)),
+        tree)
+
+
+def train_state_shardings(state, mesh, cfg, fsdp: bool = False):
+    """Shardings for ``init_train_state`` trees: params by rule;
+    optimizer moments / fp32 master / error-feedback state mirror their
+    parameter's spec (sharded at least as much -- ZeRO); the step
+    counter is replicated."""
+    import jax
+    from jax.sharding import PartitionSpec
+
+    out: Dict = {}
+    for key, sub in state.items():
+        if key == "opt":
+            opt: Dict = {}
+            for k, v in sub.items():
+                if k == "step":
+                    opt[k] = _named(mesh, PartitionSpec())
+                else:  # m / v / master mirror the params tree
+                    opt[k] = param_shardings(v, mesh, cfg, fsdp=fsdp)
+            out[key] = opt
+        elif key in ("params", "err"):
+            out[key] = param_shardings(sub, mesh, cfg, fsdp=fsdp)
+        else:
+            out[key] = replicate_shardings(sub, mesh)
+    return out
+
+
+def batch_shardings(batch, mesh):
+    """Data-parallel batch sharding: dim 0 of every leaf over the
+    data (+pod) axes when divisible, replicated otherwise."""
+    import jax
+    from jax.sharding import PartitionSpec
+
+    def one(leaf):
+        if not leaf.shape:
+            return _named(mesh, PartitionSpec())
+        axis = _dp_axis_for(mesh, leaf.shape[0])
+        return _named(
+            mesh, PartitionSpec(axis, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree.map(one, batch)
+
+
+def decode_state_shardings(state, mesh, cfg):
+    """Shard the decode state's batch (slot) dim over the data axes.
+
+    The batch axis of each top-level entry comes from the model zoo
+    (``repro.models.decode_state_batch_axes``); KV caches, SSM/conv
+    states and per-slot positions all shard the same way, so a serving
+    engine's slots spread across data-parallel devices.  Entries (or
+    batch sizes) the data axes do not divide stay replicated.
+    """
+    import jax
+    from jax.sharding import PartitionSpec
+    from repro.models import decode_state_batch_axes
+
+    axes_map = decode_state_batch_axes(cfg)
+    out = {}
+    for key, sub in state.items():
+        axis = axes_map.get(key)
+        if axis is None:
+            out[key] = replicate_shardings(sub, mesh)
+            continue
+
+        def one(leaf, axis=axis):
+            if len(leaf.shape) <= axis:
+                return _named(mesh, PartitionSpec())
+            dp = _dp_axis_for(mesh, leaf.shape[axis])
+            spec = [None] * len(leaf.shape)
+            spec[axis] = dp
+            return _named(mesh, PartitionSpec(*spec))
+
+        out[key] = jax.tree.map(one, sub)
+    return out
+
+
+def qdata_shardings(qdata, mesh, cfg):
+    """Shardings for quantized artifacts ({"scales", "qw"} trees): int8
+    weights follow the same tensor-parallel rules as their fp parents
+    (the qw tree mirrors the param tree's section names); scales are
+    scalars / per-channel vectors and stay replicated."""
+    out = {}
+    for key, sub in qdata.items():
+        if key == "qw":
+            out[key] = param_shardings(sub, mesh, cfg)
+        else:
+            out[key] = replicate_shardings(sub, mesh)
+    return out

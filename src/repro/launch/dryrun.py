@@ -1,7 +1,9 @@
 import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
 
 """Multi-pod dry run: lower + compile every (arch x shape) cell on the
 production mesh and emit memory/cost/roofline evidence.
@@ -10,10 +12,17 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
       --shape train_4k [--multi-pod] [--fsdp] [--out results.jsonl]
   PYTHONPATH=src python -m repro.launch.dryrun --all
+  # CI smoke (8 host devices, scaled-down config, all serve variants):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.dryrun --arch mamba-130m \
+      --shape decode_small --scale-down --mesh 2x4 \
+      --variants fp,bf16,quamba,kv8
 
-The FIRST lines above set XLA_FLAGS before any jax import -- jax locks the
-device count at first init.  Do not set this flag globally; only the
-dry-run wants 512 placeholder host devices.
+The FIRST lines above set XLA_FLAGS before any jax import -- jax locks
+the device count at first init.  An existing
+``xla_force_host_platform_device_count`` in the environment wins (the
+CI smoke job asks for 8 devices, not 512); the 512-device default only
+applies when nothing is set.
 """
 import argparse
 import functools
@@ -25,12 +34,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import (ASSIGNED_ARCHS, SHAPE_BY_NAME, cell_supported,
-                           get_config)
+                           get_config, scale_down)
 from repro.dist import hlo_cost
 from repro.dist import roofline as RL
 from repro.dist.sharding import (batch_shardings, decode_state_shardings,
-                                 train_state_shardings)
-from repro.launch.mesh import make_production_mesh
+                                 qdata_shardings, train_state_shardings)
+from repro.launch.mesh import (make_production_mesh, parse_mesh_arg,
+                               use_mesh)
 from repro.models import (decode_input_specs, decode_step, forward,
                           input_specs, loss_fn)
 from repro.optim.adamw import OptimConfig
@@ -47,15 +57,20 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              fsdp: bool = False, microbatches: int = 1,
              serve_dtype: str = None, quant: str = None,
              kv_dtype: str = None, cfg_overrides: dict = None,
-             bf16_params: bool = False, verbose: bool = True) -> dict:
+             bf16_params: bool = False, verbose: bool = True,
+             mesh=None, scale: bool = False) -> dict:
     """Variants (the §Perf hillclimb levers):
       serve_dtype='bfloat16'  -- decode/prefill params stored bf16
       quant='quamba'          -- decode with int8 weights + static scales
       kv_dtype='int8'         -- int8 KV cache (beyond-paper)
       cfg_overrides           -- dataclasses.replace fields (e.g. chunking)
+      mesh                    -- explicit mesh (default: production mesh)
+      scale                   -- scale_down(cfg) for smoke runs
     """
     import dataclasses as _dc
     cfg = get_config(arch)
+    if scale:
+        cfg = scale_down(cfg)
     if cfg_overrides:
         cfg = _dc.replace(cfg, **cfg_overrides)
     shape = SHAPE_BY_NAME[shape_name]
@@ -64,9 +79,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         return {"arch": arch, "shape": shape_name, "status": "skipped",
                 "reason": reason}
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             state_shapes = jax.eval_shape(
                 functools.partial(
@@ -102,10 +118,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 params_shapes = _cast_float_leaves(params_shapes,
                                                    serve_dtype)
             from repro.dist.sharding import param_shardings
-            state, token = decode_input_specs(cfg, shape)
-            if kv_dtype:
-                state = _cast_float_leaves(state, kv_dtype,
-                                           only_names=("k", "v"))
+            # kv_dtype=int8 builds the real quantized cache layout (int8
+            # entries + per-entry scales) so attention families compile
+            # the path they would actually serve
+            state, token = decode_input_specs(
+                cfg, shape,
+                cache_dtype=jnp.dtype(kv_dtype) if kv_dtype else None)
             state_sh = decode_state_shardings(state, mesh, cfg)
             token_sh = batch_shardings(token, mesh)
             n_params = RL.count_params(params_shapes)
@@ -125,7 +143,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                     params_shapes, stats_shapes)
                 p_sh = param_shardings(qparams_shapes, mesh, cfg,
                                        fsdp=fsdp)
-                qd_sh = _generic_shardings(qdata_shapes, mesh)
+                qd_sh = qdata_shardings(qdata_shapes, mesh, cfg)
                 serve_step = lambda p, qd, s, t: decode_step(
                     p, cfg, s, t,
                     qctx=make_qctx(spec, qd, int8_compute=True))
@@ -148,8 +166,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    mem = compiled.memory_analysis()
-    xla_cost = compiled.cost_analysis()
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:       # not every backend implements it (CPU)
+        mem = None
+    xla_cost = hlo_cost.xla_cost_dict(compiled)
     hlo = compiled.as_text()
     # trip-count-aware totals (XLA's cost_analysis counts while bodies
     # once; see repro.dist.hlo_cost): flops/bytes/collectives per chip.
@@ -164,13 +185,14 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
     n_active = _active_params(cfg, n_params)
     factor = 6.0 if shape.kind == "train" else 2.0
-    chips = 512 if multi_pod else 256
+    chips = mesh.size
     model_flops = factor * n_active * tokens / chips  # per-chip share
+    mesh_desc = "x".join(str(d) for d in tuple(dict(mesh.shape).values()))
 
     terms = RL.roofline_terms(cost, coll, model_flops=model_flops)
     result = {
         "arch": arch, "shape": shape_name, "status": "ok",
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": mesh_desc,
         "fsdp": fsdp,
         "microbatches": microbatches,
         "kind": shape.kind,
@@ -232,23 +254,6 @@ def dataclasses_replace_shape(shape):
     return _dc.replace(shape, seq_len=256, global_batch=2, kind="prefill")
 
 
-def _generic_shardings(tree, mesh):
-    """Fallback shardings for quantized-weight trees: shard the largest
-    divisible dim on 'model', replicate the rest."""
-    import numpy as _np
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    def one(leaf):
-        spec = [None] * len(leaf.shape)
-        if leaf.shape:
-            i = int(_np.argmax(leaf.shape))
-            if leaf.shape[i] % mesh.shape["model"] == 0 and                     leaf.shape[i] >= mesh.shape["model"]:
-                spec[i] = "model"
-        return NamedSharding(mesh, P(*spec))
-
-    return jax.tree.map(one, tree)
-
-
 def _active_params(cfg, n_params: int) -> int:
     """active params for MoE (top_k of n_experts in every MoE FFN)."""
     if cfg.family != "moe":
@@ -256,6 +261,16 @@ def _active_params(cfg, n_params: int) -> int:
     expert_p = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff
     active_expert_p = expert_p * cfg.top_k / cfg.n_experts
     return int(n_params - expert_p + active_expert_p)
+
+
+# serve-precision variants for decode cells (--variants): the §Perf
+# hillclimb ladder fp -> bf16 weights -> Quamba int8 -> +int8 KV
+VARIANTS = {
+    "fp": {},
+    "bf16": {"serve_dtype": "bfloat16"},
+    "quamba": {"quant": "quamba"},
+    "kv8": {"quant": "quamba", "kv_dtype": "int8"},
+}
 
 
 # Baseline production settings per arch for train_4k: gradient-accumulation
@@ -289,6 +304,14 @@ def main():
     ap.add_argument("--bf16-params", action="store_true")
     ap.add_argument("--quant", default=None)
     ap.add_argument("--kv-dtype", default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="mesh shape 'DxM' / 'PxDxM' / 'auto' "
+                         "(default: the 16x16 production mesh)")
+    ap.add_argument("--scale-down", action="store_true",
+                    help="scale_down(cfg) -- CI smoke on host devices")
+    ap.add_argument("--variants", default=None,
+                    help="comma list of " + ",".join(VARIANTS)
+                         + " -- run each as its own cell")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -302,6 +325,15 @@ def main():
         assert args.arch and args.shape, "--arch/--shape or --all"
         cells = [(args.arch, args.shape)]
 
+    mesh = parse_mesh_arg(args.mesh) if args.mesh else None
+    variants = [None]
+    if args.variants:
+        unknown = [v for v in args.variants.split(",")
+                   if v not in VARIANTS]
+        assert not unknown, f"unknown variants {unknown}; " \
+                            f"choose from {sorted(VARIANTS)}"
+        variants = args.variants.split(",")
+
     results = []
     for arch, shape in cells:
         mb = args.microbatches
@@ -309,20 +341,38 @@ def main():
         if args.all and shape == "train_4k":
             mb = TRAIN_MICROBATCHES.get(arch, mb)
             fsdp = fsdp or arch in FSDP_ARCHS
-        try:
-            r = run_cell(arch, shape, multi_pod=args.multi_pod,
-                         fsdp=fsdp, microbatches=mb,
-                         serve_dtype=args.serve_dtype, quant=args.quant,
-                         kv_dtype=args.kv_dtype,
-                         bf16_params=args.bf16_params)
-        except Exception as e:  # a failing cell is a bug: surface loudly
-            r = {"arch": arch, "shape": shape, "status": "error",
-                 "error": f"{type(e).__name__}: {e}"}
+        shape_kind = SHAPE_BY_NAME[shape].kind
+        for variant in variants:
+            # serve variants only alter decode cells; run other kinds once
+            if (variant not in (None, "fp")
+                    and shape_kind != "decode"):
+                continue
+            if variant is not None:
+                # --variants supersedes the individual serve flags: each
+                # row must compile exactly what its name says (an
+                # inherited --quant would silently turn the "fp" row
+                # into a quantized compile)
+                kw = dict(VARIANTS[variant])
+            else:
+                kw = dict(serve_dtype=args.serve_dtype, quant=args.quant,
+                          kv_dtype=args.kv_dtype)
+            try:
+                r = run_cell(arch, shape, multi_pod=args.multi_pod,
+                             fsdp=fsdp, microbatches=mb,
+                             bf16_params=args.bf16_params,
+                             mesh=mesh, scale=args.scale_down,
+                             verbose=False, **kw)
+            except Exception as e:  # a failing cell is a bug: be loud
+                r = {"arch": arch, "shape": shape, "status": "error",
+                     "error": f"{type(e).__name__}: {e}"}
+            # uniform row schema: every row names its variant
+            r["variant_name"] = variant or "fp"
             print(json.dumps(r))
-        results.append(r)
-        if args.out:
-            with open(args.out, "a") as f:
-                f.write(json.dumps(r) + "\n")
+            sys.stdout.flush()
+            results.append(r)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(r) + "\n")
     n_err = sum(1 for r in results if r["status"] == "error")
     print(f"# dryrun finished: {len(results)} cells, {n_err} errors",
           file=sys.stderr)

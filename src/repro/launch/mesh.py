@@ -7,28 +7,58 @@ gradient reduction over 'pod' is the only traffic that leaves a pod.
 
 Defined as functions so importing this module never touches jax device
 state (the dry-run sets XLA_FLAGS before any jax import).
+
+All constructors go through ``_mk`` / ``use_mesh`` so the same code runs
+on jax versions with and without ``jax.sharding.AxisType`` /
+``jax.set_mesh`` (0.4.x lacks both; ``Mesh`` itself is the context
+manager there).
 """
 from __future__ import annotations
 
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mk(shape, axes):
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(at.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` (``jax.set_mesh`` when the
+    installed jax has it, the ``Mesh`` context manager otherwise)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _mk(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests on CPU)."""
     n = len(jax.devices())
     assert n % model == 0, (n, model)
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return _mk((n // model, model), ("data", "model"))
+
+
+def parse_mesh_arg(spec: str):
+    """Mesh from a CLI string: '16x16' -> (data, model);
+    '2x16x16' -> (pod, data, model); 'auto' -> host mesh over all
+    devices (data only)."""
+    if spec == "auto":
+        return make_host_mesh()
+    dims = tuple(int(d) for d in spec.lower().split("x"))
+    if len(dims) == 2:
+        return _mk(dims, ("data", "model"))
+    if len(dims) == 3:
+        return _mk(dims, ("pod", "data", "model"))
+    raise ValueError(f"mesh spec {spec!r}: want DxM or PxDxM or 'auto'")
 
 
 def dp_axes(mesh) -> tuple:

@@ -19,7 +19,7 @@ import jax
 from repro.configs import get_config, scale_down
 from repro.data import batches
 from repro.dist.sharding import batch_shardings, train_state_shardings
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.optim import OptimConfig
 from repro.train import LoopConfig, Trainer, init_train_state, \
     make_train_step
@@ -55,7 +55,7 @@ def main() -> None:
         remat=True, microbatches=args.microbatches,
         compress_grads=args.compress_grads)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         state = jax.device_put(state, st_sh)
         data = lambda s0: (
             jax.device_put(b, batch_shardings(jax.eval_shape(lambda: b),

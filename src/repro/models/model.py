@@ -614,12 +614,15 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
     return batch
 
 
-def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple:
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                       cache_dtype=None) -> Tuple:
     """(state_specs, token_spec) for decode shapes: one new token against
-    a cache of shape.seq_len."""
+    a cache of shape.seq_len.  cache_dtype=int8 yields the quantized KV
+    cache layout (int8 entries + per-entry fp32 scales)."""
     b = shape.global_batch
+    kw = {} if cache_dtype is None else {"cache_dtype": cache_dtype}
     state = jax.eval_shape(
-        lambda: init_decode_state(cfg, b, shape.seq_len))
+        lambda: init_decode_state(cfg, b, shape.seq_len, **kw))
     if cfg.family == "audio":
         le = (3 * shape.seq_len // 4 // 128) * 128
         state = dict(state)
@@ -655,6 +658,12 @@ def reset_slot(cfg: ModelConfig, state: Dict, i: int) -> Dict:
         new["m_blocks"] = mb
         new["s_blocks"] = zero_axis(state["s_blocks"], 1)
     return new
+
+
+def decode_state_batch_axes(cfg: ModelConfig) -> Dict[str, int]:
+    """Batch-dim axis of each top-level decode-state entry (public: the
+    serving engine and ``repro.dist.sharding`` shard slots along it)."""
+    return _batch_axis_map(cfg)
 
 
 def _batch_axis_map(cfg: ModelConfig):

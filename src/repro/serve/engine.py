@@ -52,7 +52,8 @@ class Request:
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 2048, qctx=None, seed: int = 0,
-                 cache_dtype=None, prefill_chunk: int = 128):
+                 cache_dtype=None, prefill_chunk: int = 128,
+                 shard: Optional[bool] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if prefill_chunk < 1:
@@ -74,6 +75,30 @@ class Engine:
         self.cache_dtype = jnp.dtype(cache_dtype)
         self.state = init_decode_state(cfg, max_batch, max_len,
                                        cache_dtype=cache_dtype)
+        # data-parallel slot sharding: with >1 device the decode slots
+        # spread over a host mesh's data axis (repro.dist.sharding rules)
+        # and the weights replicate -- each device decodes its share of
+        # the batch.  shard=None auto-enables when divisible; shard=True
+        # insists; shard=False keeps everything single-device.
+        self.mesh = None
+        n_dev = len(jax.devices())
+        if shard is None:
+            shard = n_dev > 1 and max_batch % n_dev == 0
+        if shard:
+            from repro.dist.sharding import (decode_state_shardings,
+                                             replicate_shardings)
+            from repro.launch.mesh import make_host_mesh
+            if max_batch % n_dev != 0:
+                raise ValueError(
+                    f"shard=True needs max_batch ({max_batch}) divisible "
+                    f"by the device count ({n_dev})")
+            self.mesh = make_host_mesh()
+            st_sh = decode_state_shardings(
+                jax.eval_shape(lambda: self.state), self.mesh, cfg)
+            self.state = jax.device_put(self.state, st_sh)
+            self.params = jax.device_put(
+                params, replicate_shardings(
+                    jax.eval_shape(lambda: params), self.mesh))
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
         self.key = jax.random.PRNGKey(seed)

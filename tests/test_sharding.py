@@ -2,11 +2,20 @@
 subprocess, since device count locks at first jax init)."""
 import functools
 import json
+import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+# without an explicit platform, jax probes for accelerator plugins in
+# the subprocess and the tiny test models spend minutes not running
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SUBPROC_ENV = {"PYTHONPATH": "src",
+                "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+                "HOME": os.environ.get("HOME", "/root"),
+                "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
 
 # both tests exercise the repro.dist sharding rules, which are not
 # present in every checkout yet; skip cleanly instead of failing
@@ -56,15 +65,15 @@ _SPMD_SCRIPT = textwrap.dedent("""
     from repro.data import batches
 
     cfg = scale_down(get_config("llama3-8b"), width=256)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _mk, use_mesh
+    mesh = _mk((2, 4), ("data", "model"))
     state = init_train_state(jax.random.PRNGKey(0), cfg)
     shapes = jax.eval_shape(lambda: state)
     st_sh = train_state_shardings(shapes, mesh, cfg)
     (b,) = list(batches(cfg.vocab_size, 8, 32, seed=0, num_steps=1))
     b_sh = batch_shardings(jax.eval_shape(lambda: b), mesh)
     step = make_train_step(cfg, OptimConfig(total_steps=10))
-    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+    with use_mesh(mesh):
         jitted = jax.jit(step, in_shardings=(st_sh, b_sh))
         state = jax.device_put(state, st_sh)
         b = jax.device_put(b, b_sh)
@@ -86,10 +95,47 @@ def test_spmd_train_step_matches_single_device():
     """The sharded train step is numerically the single-device step."""
     r = subprocess.run([sys.executable, "-c", _SPMD_SCRIPT],
                        capture_output=True, text=True,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
-                       cwd="/root/repo", timeout=600)
+                       env=dict(_SUBPROC_ENV),
+                       cwd=_REPO_ROOT, timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
     assert abs(out["loss"] - out["ref_loss"]) < 1e-3
     assert out["param_delta"] < 1e-3
+
+
+_ENGINE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+    import json
+    import jax
+    from repro.configs import get_config, scale_down
+    from repro.models import init_params
+    from repro.serve.engine import Engine, Request
+
+    cfg = scale_down(get_config("mamba-130m"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, max_batch=4, max_len=64)
+    reqs = [Request(uid=i, prompt=[2 + i, 5, 7], max_new_tokens=8)
+            for i in range(6)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    print(json.dumps({"sharded": eng.mesh is not None,
+                      "outputs": [r.output for r in reqs]}))
+""")
+
+
+def test_engine_dp_slot_sharding_matches_single_device():
+    """With >1 device the Engine spreads decode slots over the data
+    axis (repro.dist.sharding rules) and greedy outputs are unchanged."""
+    outs = []
+    for ndev in (1, 2):
+        r = subprocess.run([sys.executable, "-c", _ENGINE_SCRIPT % ndev],
+                           capture_output=True, text=True,
+                           env=dict(_SUBPROC_ENV),
+                           cwd=_REPO_ROOT, timeout=600)
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.append(json.loads(r.stdout.strip().splitlines()[-1]))
+    assert outs[0]["sharded"] is False          # one device: inert
+    assert outs[1]["sharded"] is True           # two devices: slots DP
+    assert outs[0]["outputs"] == outs[1]["outputs"]
