@@ -1,5 +1,7 @@
 """PR perf trajectory: decode TPOT (fp vs quamba-qdq vs quamba+kernels),
-chunked-prefill throughput/dispatch counts, and bytes moved.
+chunked-prefill throughput/dispatch counts, bytes moved, and the
+request-lifecycle serving metrics (per-request TTFT/TPOT/queue-time,
+queue-depth and occupancy series through the scheduler).
 
 ``python -m benchmarks.run pr_speed`` writes the results to
 ``BENCH_PR.json`` at the repo root so future PRs have a baseline to
@@ -22,7 +24,7 @@ from benchmarks import common
 from repro.kernels._backend import default_interpret
 from repro.models import (decode_step, init_decode_state, param_count,
                           prefill_step)
-from repro.serve import Engine, Request
+from repro.serve import LLMEngine, SamplingParams
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR.json")
 DECODE_BATCH = 8
@@ -58,17 +60,47 @@ def _prefill_rate(cfg, params, qctx, iters: int = 5):
 
 
 def _engine_dispatches(cfg, params, qctx) -> dict:
-    eng = Engine(params, cfg, max_batch=2, max_len=PREFILL_LEN + 8,
-                 qctx=qctx, prefill_chunk=PREFILL_CHUNK)
-    prompt = list(np.arange(PREFILL_LEN) % cfg.vocab_size)
-    eng.submit(Request(uid=0, prompt=[int(t) for t in prompt],
-                       max_new_tokens=2))
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=PREFILL_LEN + 8,
+                    qctx=qctx, prefill_chunk=PREFILL_CHUNK)
+    prompt = [int(t) for t in np.arange(PREFILL_LEN) % cfg.vocab_size]
+    eng.add_request(prompt, SamplingParams(max_tokens=2))
     eng.run()
     return {
         "prompt_len": PREFILL_LEN,
         "prefill_chunk": PREFILL_CHUNK,
         "prefill_dispatches": eng.counters["prefill_dispatches"],
         "per_token_dispatches_would_be": PREFILL_LEN - 1,
+    }
+
+
+def _serve_lifecycle(cfg, params, qctx, n_requests: int) -> dict:
+    """Request-lifecycle metrics through the scheduler: a burst of
+    heterogeneous requests (greedy + sampled) deeper than the slot
+    count, so the queue-depth/occupancy series actually move.  The
+    TTFT/queue numbers feed the CI perf gate's scheduling coverage."""
+    eng = LLMEngine(params, cfg, max_batch=4, max_len=96, qctx=qctx,
+                    prefill_chunk=32)
+    for i in range(n_requests):
+        sp = (SamplingParams(max_tokens=8) if i % 2 == 0 else
+              SamplingParams(temperature=0.8, top_k=20, top_p=0.95,
+                             seed=i, max_tokens=8))
+        eng.add_request([(3 * i + j) % cfg.vocab_size
+                         for j in range(2 + i % 6)], sp)
+    eng.run()
+    mj = eng.metrics_json()
+    e = mj["engine"]
+    return {
+        "requests": n_requests,
+        "max_batch": 4,
+        "ttft_ms": mj["summary"]["ttft_ms"],
+        "tpot_ms": mj["summary"]["tpot_ms"],
+        "queue_time_ms": mj["summary"]["queue_time_ms"],
+        "queue_depth_series": e["queue_depth_series"],
+        "queue_depth_max": max(e["queue_depth_series"], default=0),
+        "occupancy_mean": e["occupancy_mean"],
+        "tokens_per_s": e["tokens_per_s"],
+        "decode_steps": e["decode_steps"],
+        "prefill_dispatches": e["prefill_dispatches"],
     }
 
 
@@ -106,6 +138,13 @@ def run() -> dict:
     common.emit("pr_speed/prefill_per_token", 1e6 / max(tok_tps, 1e-9),
                 f"{tok_tps:.0f} tok/s (1 dispatch/token)")
     out["engine_prefill"] = _engine_dispatches(cfg, qm.params, qm.qctx())
+
+    out["serve"] = _serve_lifecycle(cfg, qm.params, qm.qctx(),
+                                    n_requests=6 if smoke else 12)
+    common.emit("pr_speed/serve_ttft", out["serve"]["ttft_ms"]["mean"]
+                * 1e3,  # stats are ms; emit expects us
+                f"mean TTFT over {out['serve']['requests']} requests "
+                f"(queue depth max {out['serve']['queue_depth_max']})")
 
     # bytes moved per decode step: weights read once per token (the
     # memory-bound regime the paper's 1.7x rides on) + recurrent state

@@ -7,7 +7,8 @@ run on the base branch and calls::
     python scripts/compare_bench.py --prev prev/BENCH_PR.json \
         --cur BENCH_PR.json --max-regression 0.25
 
-Gated metrics (the kernels-backend serving hot paths):
+Gated metrics (the kernels-backend serving hot paths plus the
+scheduler's request-latency behavior):
 
   * ``tpot_quamba_kernels_us``        -- lower is better
   * ``prefill_chunked_tokens_per_s``  -- higher is better
@@ -15,11 +16,19 @@ Gated metrics (the kernels-backend serving hot paths):
     a dispatch COUNT it is deterministic: unlike the wall-clock metrics
     (which shared CI runners can wobble), any increase is a real
     regression, so it gets a zero-tolerance threshold.
+  * ``serve.ttft_ms.mean``            -- lower is better (per-request
+    time-to-first-token through the scheduler; covers admission +
+    prefill latency, not just the decode inner loop)
 
-A timing metric regressing by more than ``--max-regression`` (fraction,
-default 0.25) fails the job.  Missing previous artifact (first run on a
-branch, expired artifact) or missing metrics skip gracefully with exit
-0 -- the gate only ever compares like with like.
+Forward compatibility is deliberate: the gate reads ONLY the dotted
+keys above and ignores everything else in either file, so a newer
+BENCH_PR.json with keys this script has never heard of (or a metric
+whose value is a dict/string/None) can never crash the gate -- unknown
+structure skips with a note.  A timing metric regressing by more than
+``--max-regression`` (fraction, default 0.25) fails the job.  Missing
+previous artifact (first run on a branch, expired artifact) or missing
+metrics skip gracefully with exit 0 -- the gate only ever compares like
+with like.
 """
 from __future__ import annotations
 
@@ -27,12 +36,14 @@ import argparse
 import json
 import os
 import sys
+from typing import List
 
 # (dotted key, higher_is_better, max_regression_override_or_None)
 GATED = (
     ("tpot_quamba_kernels_us", False, None),
     ("prefill_chunked_tokens_per_s", True, None),
     ("engine_prefill.prefill_dispatches", False, 0.0),
+    ("serve.ttft_ms.mean", False, None),
 )
 
 
@@ -42,6 +53,40 @@ def _lookup(d, dotted):
             return None
         d = d[part]
     return d
+
+
+def gate(prev: dict, cur: dict, max_regression: float,
+         gated=GATED) -> List[str]:
+    """Compare the gated metrics; returns failure strings (empty = ok).
+
+    Tolerant by construction: keys absent from either side, non-numeric
+    values, and non-positive baselines all skip instead of raising.
+    """
+    failures: List[str] = []
+    for key, higher_better, override in gated:
+        pv, cv = _lookup(prev, key), _lookup(cur, key)
+        if pv is None or cv is None:
+            print(f"perf gate: {key}: absent in prev or cur; skipping")
+            continue
+        try:
+            p, c = float(pv), float(cv)
+        except (TypeError, ValueError):
+            print(f"perf gate: {key}: non-numeric value "
+                  f"(prev={pv!r}, cur={cv!r}); skipping")
+            continue
+        if p <= 0:
+            continue
+        allowed = max_regression if override is None else override
+        # regression fraction, positive = worse
+        reg = (c - p) / p if not higher_better else (p - c) / p
+        arrow = "worse" if reg > 0 else "better"
+        print(f"perf gate: {key}: prev={p:.1f} cur={c:.1f} "
+              f"({abs(reg) * 100:.1f}% {arrow})")
+        if reg > allowed:
+            failures.append(
+                f"{key} regressed {reg * 100:.1f}% "
+                f"(> {allowed * 100:.0f}% allowed)")
+    return failures
 
 
 def main() -> int:
@@ -64,26 +109,7 @@ def main() -> int:
     with open(args.cur) as f:
         cur = json.load(f)
 
-    failures = []
-    for key, higher_better, override in GATED:
-        pv, cv = _lookup(prev, key), _lookup(cur, key)
-        if pv is None or cv is None:
-            print(f"perf gate: {key}: absent in prev or cur; skipping")
-            continue
-        p, c = float(pv), float(cv)
-        if p <= 0:
-            continue
-        allowed = args.max_regression if override is None else override
-        # regression fraction, positive = worse
-        reg = (c - p) / p if not higher_better else (p - c) / p
-        arrow = "worse" if reg > 0 else "better"
-        print(f"perf gate: {key}: prev={p:.1f} cur={c:.1f} "
-              f"({abs(reg) * 100:.1f}% {arrow})")
-        if reg > allowed:
-            failures.append(
-                f"{key} regressed {reg * 100:.1f}% "
-                f"(> {allowed * 100:.0f}% allowed)")
-
+    failures = gate(prev, cur, args.max_regression)
     if failures:
         print("perf gate FAILED: " + "; ".join(failures))
         return 1

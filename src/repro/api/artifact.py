@@ -61,13 +61,17 @@ class QuantizedModel:
                        qctx=self.qctx(), **kw)
 
     def engine(self, **kw):
-        """A continuous-batching ``repro.serve.Engine`` over this model.
+        """A request-centric ``repro.serve.LLMEngine`` over this model
+        (continuous batching; ``add_request`` + SamplingParams + streams
+        + per-request TTFT/TPOT metrics).
 
         The spec's ``quantize_kv_cache`` flag flows through: attention KV
         caches are stored int8 with per-entry scales when it is set.
+        The pre-PR-4 ``submit(Request)`` surface remains available via
+        ``repro.serve.Engine`` (deprecated shim).
         """
-        from repro.serve.engine import Engine  # local: avoid import cycle
-        return Engine(self.params, self.cfg, qctx=self.qctx(), **kw)
+        from repro.serve.engine import LLMEngine  # local: avoid cycle
+        return LLMEngine(self.params, self.cfg, qctx=self.qctx(), **kw)
 
     def generate(self, prompts: List[List[int]], *,
                  max_new_tokens: int = 32, temperature: float = 0.0,

@@ -1,7 +1,11 @@
-"""Serving launcher: calibrate + quantize + serve batched requests.
+"""Serving launcher: calibrate + quantize + serve a request stream.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba-130m --small \
-      --quant quamba --requests 8
+      --quant quamba --requests 8 --policy fcfs --metrics-out metrics.json
+
+Requests go through the request-centric API (``LLMEngine.add_request``
+with per-request ``SamplingParams``); per-request TTFT/TPOT/queue-time
+and engine occupancy land in the metrics JSON.
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ from repro import api
 from repro.configs import get_config, scale_down
 from repro.data import eval_batches
 from repro.models import init_params
-from repro.serve import Engine, Request
+from repro.serve import SamplingParams
 
 
 def main() -> None:
@@ -24,6 +28,13 @@ def main() -> None:
     ap.add_argument("--quant", default="quamba")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--policy", default="fcfs",
+                    choices=["fcfs", "priority"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the per-request metrics JSON here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -34,14 +45,25 @@ def main() -> None:
     calib = eval_batches(cfg.vocab_size, 4, 64, 4, seed=777)
     model = api.Quantizer(cfg, args.quant).calibrate(calib) \
         .quantize(params)
-    eng = model.engine(max_batch=4, max_len=128)
+    eng = model.engine(max_batch=4, max_len=128, scheduler=args.policy)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, max_tokens=args.max_new)
     for i in range(args.requests):
-        eng.submit(Request(uid=i, prompt=[1 + i, 2, 3],
-                           max_new_tokens=args.max_new))
+        # odd requests get a priority bump so --policy priority is visible
+        eng.add_request([1 + i, 2, 3], sp, priority=i % 2)
     t0 = time.time()
     eng.run()
+    mj = eng.metrics_json()
+    ttft = mj["summary"]["ttft_ms"]
     print(f"{args.requests} requests served in {time.time()-t0:.2f}s "
-          f"({args.quant})")
+          f"({args.quant}, {args.policy})")
+    if ttft:
+        print(f"TTFT mean {ttft['mean']:.1f} ms, p95 {ttft['p95']:.1f} ms;"
+              f" {mj['engine']['tokens_per_s']:.1f} tok/s, occupancy "
+              f"{mj['engine']['occupancy_mean']:.2f}")
+    if args.metrics_out:
+        eng.metrics.dump(args.metrics_out, eng.counters)
+        print(f"metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

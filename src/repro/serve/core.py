@@ -1,0 +1,245 @@
+"""EngineCore: prefill/decode execution over the slotted decode state.
+
+No request lifecycle lives here.  The core knows slots, device state,
+and per-slot sampling arrays; WHO occupies a slot is the Scheduler's
+business (``repro.serve.scheduler``) and streams/metrics live in the
+``LLMEngine`` (``repro.serve.engine``).
+
+Execution details carried over from the pre-PR-4 engine:
+
+Prefill: for families with a sequence prefill path (recurrent state +
+h0/h_last carry -- see ``repro.models.prefill_step``) the prompt is fed
+in chunks of ``prefill_chunk`` tokens, one dispatch per chunk, against a
+batch-1 slice of the slot's state -- O(num_chunks) dispatches instead of
+O(prompt_len) full-batch decode steps.  Other families fall back to the
+per-token decode path, so quantized execution (Quamba qctx) stays
+identical between prefill and generation either way.
+
+Decode-loop host overhead: per-slot bookkeeping lives in host numpy
+mirrors; the device-side token/sampling tensors are refreshed only when
+slot membership changes, and each step issues exactly one device_get
+(the sampled tokens).  Per-slot PRNG keys evolve functionally on device
+inside the jitted step, so heterogeneous per-request seeds cost no
+extra host syncs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_decode_state, prefill_step, \
+    supports_seq_prefill
+from repro.models.model import merge_slot, reset_slot, slice_slot, \
+    write_slot
+from repro.quant.recipe import prefill_chunk_safe
+from repro.serve.params import SamplingParams
+from repro.serve.sampler import sample_batched
+
+
+class EngineCore:
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
+                 max_len: int = 2048, qctx=None, seed: int = 0,
+                 cache_dtype=None, prefill_chunk: int = 128,
+                 shard: Optional[bool] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.params = params
+        self.cfg = cfg
+        self.qctx = qctx
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        if cache_dtype is None:
+            # QuantSpec.quantize_kv_cache flows through the qctx: int8
+            # attention caches with per-entry scales (see models.attention)
+            spec = qctx.get("spec") if isinstance(qctx, dict) else None
+            kv8 = spec is not None and getattr(spec, "quantize_kv_cache",
+                                               False)
+            cache_dtype = jnp.int8 if kv8 else jnp.float32
+        self.cache_dtype = jnp.dtype(cache_dtype)
+        self.state = init_decode_state(cfg, max_batch, max_len,
+                                       cache_dtype=cache_dtype)
+        # data-parallel slot sharding: with >1 device the decode slots
+        # spread over a host mesh's data axis (repro.dist.sharding rules)
+        # and the weights replicate -- each device decodes its share of
+        # the batch.  shard=None auto-enables when divisible; shard=True
+        # insists; shard=False keeps everything single-device.
+        self.mesh = None
+        n_dev = len(jax.devices())
+        if shard is None:
+            shard = n_dev > 1 and max_batch % n_dev == 0
+        if shard:
+            from repro.dist.sharding import (decode_state_shardings,
+                                             replicate_shardings)
+            from repro.launch.mesh import make_host_mesh
+            if max_batch % n_dev != 0:
+                raise ValueError(
+                    f"shard=True needs max_batch ({max_batch}) divisible "
+                    f"by the device count ({n_dev})")
+            self.mesh = make_host_mesh()
+            st_sh = decode_state_shardings(
+                jax.eval_shape(lambda: self.state), self.mesh, cfg)
+            self.state = jax.device_put(self.state, st_sh)
+            self.params = jax.device_put(
+                params, replicate_shardings(
+                    jax.eval_shape(lambda: params), self.mesh))
+        # `truncate` is static: the all-greedy/plain-temperature batch
+        # (the common case) compiles a variant with no top-k/top-p
+        # masking in the hot loop -- at most two compiled versions
+        self._step_fn = jax.jit(self._one_step,
+                                static_argnames="truncate")
+        # chunked prefill requires a sequence path AND chunk-invariant
+        # quantization scales (see recipe.prefill_chunk_safe): per-call
+        # scales only match per-token stepping when fed token by token
+        spec_m = qctx.get("spec") if isinstance(qctx, dict) else None
+        self._prefill_fn = (jax.jit(self._one_prefill)
+                            if supports_seq_prefill(cfg)
+                            and prefill_chunk_safe(spec_m) else None)
+        # host mirrors of the per-slot decode inputs; the device copies
+        # are only rebuilt when a slot joins or leaves (``_dirty``)
+        self._next_host = np.zeros((max_batch,), np.int32)
+        self._temps_host = np.zeros((max_batch,), np.float32)
+        self._topk_host = np.zeros((max_batch,), np.int32)
+        self._topp_host = np.ones((max_batch,), np.float32)
+        self._next_dev = jnp.zeros((max_batch,), jnp.int32)
+        self._temps_dev = jnp.zeros((max_batch,), jnp.float32)
+        self._topk_dev = jnp.zeros((max_batch,), jnp.int32)
+        self._topp_dev = jnp.ones((max_batch,), jnp.float32)
+        self._dirty = False
+        self._truncate = False       # any live slot using top-k/top-p?
+        # per-slot PRNG keys live on device and evolve inside the jitted
+        # step; a slot's key row is replaced at seat() time only
+        self._base_key = jax.random.PRNGKey(seed)
+        self._keys_dev = jax.random.split(self._base_key, max_batch)
+        # dispatch accounting (benchmarks / tests)
+        self.counters: Dict[str, int] = {"prefill_dispatches": 0,
+                                         "decode_steps": 0}
+
+    # -- jitted cores -----------------------------------------------------
+    def _one_step(self, params, state, tokens, keys, temps, top_k, top_p,
+                  truncate):
+        logits, new_state = decode_step(params, self.cfg, state, tokens,
+                                        qctx=self.qctx)
+        ks = jax.vmap(jax.random.split)(keys)          # (B, 2, 2)
+        toks = sample_batched(ks[:, 1], logits, temps, top_k, top_p,
+                              truncate=truncate)
+        return toks, ks[:, 0], new_state
+
+    def _one_prefill(self, params, slot_state, tokens):
+        _, new_state = prefill_step(params, self.cfg, slot_state, tokens,
+                                    qctx=self.qctx)
+        return new_state
+
+    # -- slot management --------------------------------------------------
+    @staticmethod
+    def _chunk_plan(n: int, chunk: int) -> List[int]:
+        """Split ``n`` prompt tokens into full ``chunk``-sized pieces plus
+        a power-of-two binary decomposition of the remainder, so the
+        jitted prefill compiles at most log2(chunk)+2 distinct shapes
+        regardless of the prompt-length mix (vs one compile per distinct
+        remainder length)."""
+        sizes = [chunk] * (n // chunk)
+        rem = n % chunk
+        while rem:
+            p = 1 << (rem.bit_length() - 1)
+            sizes.append(p)
+            rem -= p
+        return sizes
+
+    def seat(self, i: int, prompt: Sequence[int], sp: SamplingParams,
+             salt: int) -> None:
+        """Reset slot ``i``, install ``sp``'s sampling arrays and PRNG
+        key, and prefill the prompt (leaving the last prompt token as
+        the slot's next decode input).  ``salt`` derives the slot key
+        when ``sp.seed`` is None (the engine passes a monotonically
+        increasing admission index, so streams stay deterministic)."""
+        self.state = reset_slot(self.cfg, self.state, i)
+        self._temps_host[i] = sp.effective_temperature
+        # greedy rows take argmax whatever the masks say -- store the
+        # disabled values so a greedy request never flips the batch
+        # onto the truncating (two-argsort) step variant
+        self._topk_host[i] = 0 if sp.is_greedy else sp.top_k
+        self._topp_host[i] = 1.0 if sp.is_greedy else sp.top_p
+        key = (jax.random.PRNGKey(sp.seed) if sp.seed is not None
+               else jax.random.fold_in(self._base_key, salt))
+        self._keys_dev = self._keys_dev.at[i].set(key)
+        self._dirty = True
+        self._prefill(i, prompt)
+
+    def clear_slot(self, i: int) -> None:
+        """Reset slot ``i``'s sampling arrays after eviction (its state
+        is re-initialised at the next seat)."""
+        self._temps_host[i] = 0.0
+        self._topk_host[i] = 0
+        self._topp_host[i] = 1.0
+        self._dirty = True
+
+    def _set_next(self, i: int, tok: int) -> None:
+        self._next_host[i] = tok
+        self._dirty = True
+
+    def _prefill(self, i: int, prompt: Sequence[int]) -> None:
+        """Advance slot ``i``'s state over ``prompt[:-1]``."""
+        toks = list(prompt[:-1])
+        if toks and self._prefill_fn is not None:
+            # chunked sequence prefill on a batch-1 slice of the state:
+            # O(num_chunks) dispatches, none of them full-batch
+            slot_state = slice_slot(self.cfg, self.state, i)
+            c0 = 0
+            for size in self._chunk_plan(len(toks), self.prefill_chunk):
+                chunk = jnp.asarray([toks[c0:c0 + size]], jnp.int32)
+                c0 += size
+                slot_state = self._prefill_fn(self.params, slot_state,
+                                              chunk)
+                self.counters["prefill_dispatches"] += 1
+            self.state = write_slot(self.cfg, self.state, slot_state, i)
+        else:
+            # fallback: per-token decode dispatches (attention families);
+            # the sampled token is discarded -- only slot i's state moves
+            for t in toks:
+                tok = self._next_dev.at[i].set(t)
+                # truncate=False: the sampled token is discarded here,
+                # so never pay the top-k/top-p masking during prefill
+                _, _, new_state = self._step_fn(
+                    self.params, self.state, tok, self._keys_dev,
+                    self._temps_dev, self._topk_dev, self._topp_dev,
+                    truncate=False)
+                self.counters["prefill_dispatches"] += 1
+                self.state = merge_slot(self.cfg, self.state, new_state,
+                                        i)
+        self._set_next(i, prompt[-1])
+
+    # -- decode -----------------------------------------------------------
+    def _sync_device_inputs(self) -> None:
+        if self._dirty:
+            self._next_dev = jnp.asarray(self._next_host)
+            self._temps_dev = jnp.asarray(self._temps_host)
+            self._topk_dev = jnp.asarray(self._topk_host)
+            self._topp_dev = jnp.asarray(self._topp_host)
+            self._truncate = bool((self._topk_host > 0).any()
+                                  or (self._topp_host < 1.0).any())
+            self._dirty = False
+
+    def decode(self) -> np.ndarray:
+        """One batched decode dispatch; returns the sampled tokens for
+        ALL slots as a host array (stale values in free slots are
+        harmless -- their state is reset at the next seat)."""
+        self._sync_device_inputs()
+        toks, self._keys_dev, self.state = self._step_fn(
+            self.params, self.state, self._next_dev, self._keys_dev,
+            self._temps_dev, self._topk_dev, self._topp_dev,
+            truncate=self._truncate)
+        self.counters["decode_steps"] += 1
+        toks_host = np.asarray(jax.device_get(toks))
+        # sampled tokens feed the next step directly (no per-slot device
+        # updates)
+        self._next_dev = toks
+        self._next_host[:] = toks_host
+        return toks_host

@@ -1,248 +1,249 @@
-"""Batched serving engine with continuous batching over decode slots.
+"""Request-centric serving engine (continuous batching over decode slots).
 
-The engine owns a fixed-capacity decode state (the model's KV/SSM state
-for ``max_batch`` slots).  Requests join free slots; every ``step()``
-decodes one token for all live slots; finished sequences free their slot
+Layering::
+
+    LLMEngine  -- request lifecycle, streams, metrics
+      Scheduler   (repro.serve.scheduler)  WHO runs WHERE: queue, slots,
+                                           admission/eviction/cancel
+      EngineCore  (repro.serve.core)       WHAT runs: device state,
+                                           prefill/decode dispatches
+      Metrics     (repro.serve.metrics)    TTFT/TPOT/queue/occupancy
+
+Requests enter via ``add_request(prompt, SamplingParams(...))`` and move
+QUEUED -> PREFILLING -> DECODING -> FINISHED(stop | length | cancelled).
+Every ``step()`` decodes one token for all live slots and returns
+``RequestOutput`` snapshots; finished sequences free their slot
 immediately so queued requests start without waiting for the batch to
-drain (continuous batching).
+drain.  Tokens stream incrementally through each request's
+``RequestStream`` (iterating a stream pumps the engine).
 
-Prefill: for families with a sequence prefill path (recurrent state +
-h0/h_last carry -- see ``repro.models.prefill_step``) the prompt is fed
-in chunks of ``prefill_chunk`` tokens, one dispatch per chunk, against a
-batch-1 slice of the slot's state -- O(num_chunks) dispatches instead of
-O(prompt_len) full-batch decode steps.  Other families fall back to the
-per-token decode path, so quantized execution (Quamba qctx) stays
-identical between prefill and generation either way.
-
-Decode-loop host overhead: per-slot bookkeeping lives in host numpy
-mirrors; the device-side token/temperature tensors are refreshed only
-when slot membership changes, and each step issues exactly one
-device_get (the sampled tokens).
+``Engine`` is the deprecated pre-PR-4 surface (``submit(Request)`` +
+engine-wide temperature), kept as a thin shim over ``LLMEngine`` so
+existing call sites -- including the dist DP-slot sharding path -- work
+unchanged.  Intent: remove it once nothing in-repo imports it.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
-
-import numpy as np
-import jax
-import jax.numpy as jnp
+import time
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, init_decode_state, prefill_step, \
-    supports_seq_prefill
-from repro.models.model import merge_slot, reset_slot, slice_slot, \
-    write_slot
-from repro.quant.recipe import prefill_chunk_safe
-from repro.serve.sampler import sample
+from repro.serve.core import EngineCore
+from repro.serve.metrics import Metrics, REQUEST_CAP, evict_finished
+from repro.serve.params import SamplingParams
+from repro.serve.request import (FinishReason, Request, RequestOutput,
+                                 RequestState, RequestStatus,
+                                 RequestStream)
+from repro.serve.scheduler import Scheduler, make_scheduler
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    eos_id: Optional[int] = None
-    # filled by the engine
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class Engine:
+class LLMEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 2048, qctx=None, seed: int = 0,
                  cache_dtype=None, prefill_chunk: int = 128,
-                 shard: Optional[bool] = None):
-        if max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        if prefill_chunk < 1:
-            raise ValueError(
-                f"prefill_chunk must be >= 1, got {prefill_chunk}")
-        self.params = params
-        self.cfg = cfg
-        self.qctx = qctx
-        self.max_batch = max_batch
-        self.max_len = max_len
-        self.prefill_chunk = prefill_chunk
-        if cache_dtype is None:
-            # QuantSpec.quantize_kv_cache flows through the qctx: int8
-            # attention caches with per-entry scales (see models.attention)
-            spec = qctx.get("spec") if isinstance(qctx, dict) else None
-            kv8 = spec is not None and getattr(spec, "quantize_kv_cache",
-                                               False)
-            cache_dtype = jnp.int8 if kv8 else jnp.float32
-        self.cache_dtype = jnp.dtype(cache_dtype)
-        self.state = init_decode_state(cfg, max_batch, max_len,
-                                       cache_dtype=cache_dtype)
-        # data-parallel slot sharding: with >1 device the decode slots
-        # spread over a host mesh's data axis (repro.dist.sharding rules)
-        # and the weights replicate -- each device decodes its share of
-        # the batch.  shard=None auto-enables when divisible; shard=True
-        # insists; shard=False keeps everything single-device.
-        self.mesh = None
-        n_dev = len(jax.devices())
-        if shard is None:
-            shard = n_dev > 1 and max_batch % n_dev == 0
-        if shard:
-            from repro.dist.sharding import (decode_state_shardings,
-                                             replicate_shardings)
-            from repro.launch.mesh import make_host_mesh
-            if max_batch % n_dev != 0:
+                 shard: Optional[bool] = None,
+                 scheduler: Union[str, Scheduler, None] = "fcfs",
+                 clock=time.monotonic):
+        self.core = EngineCore(params, cfg, max_batch=max_batch,
+                               max_len=max_len, qctx=qctx, seed=seed,
+                               cache_dtype=cache_dtype,
+                               prefill_chunk=prefill_chunk, shard=shard)
+        self.scheduler = make_scheduler(scheduler, max_batch)
+        self.metrics = Metrics(clock=clock)
+        self._states: Dict[str, RequestState] = {}
+        self._admitted = 0          # PRNG salt for seedless requests
+
+    # -- convenience views (also the QuantizedModel.engine() surface) -----
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.core.cfg
+
+    @property
+    def max_batch(self) -> int:
+        return self.core.max_batch
+
+    @property
+    def state(self):
+        return self.core.state
+
+    @property
+    def cache_dtype(self):
+        return self.core.cache_dtype
+
+    @property
+    def mesh(self):
+        return self.core.mesh
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        return self.core.counters
+
+    @property
+    def _prefill_fn(self):
+        return self.core._prefill_fn
+
+    _chunk_plan = staticmethod(EngineCore._chunk_plan)
+
+    # -- request lifecycle -------------------------------------------------
+    def add_request(self, prompt, params: Optional[SamplingParams] = None,
+                    *, request_id: Optional[str] = None, priority: int = 0,
+                    on_token=None) -> RequestState:
+        """Queue a request; returns its live ``RequestState`` (whose
+        ``.stream`` delivers tokens incrementally and whose
+        ``.token_ids`` accumulate).  ``prompt`` is a token-id sequence
+        or a ready ``Request``."""
+        if isinstance(prompt, Request):
+            if (params is not None or request_id is not None
+                    or priority != 0):
                 raise ValueError(
-                    f"shard=True needs max_batch ({max_batch}) divisible "
-                    f"by the device count ({n_dev})")
-            self.mesh = make_host_mesh()
-            st_sh = decode_state_shardings(
-                jax.eval_shape(lambda: self.state), self.mesh, cfg)
-            self.state = jax.device_put(self.state, st_sh)
-            self.params = jax.device_put(
-                params, replicate_shardings(
-                    jax.eval_shape(lambda: params), self.mesh))
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.queue: List[Request] = []
-        self.key = jax.random.PRNGKey(seed)
-        # slot-local positions (the global state["pos"] advances for all
-        # slots; per-slot bookkeeping is host-side)
-        self._step_fn = jax.jit(self._one_step)
-        # chunked prefill requires a sequence path AND chunk-invariant
-        # quantization scales (see recipe.prefill_chunk_safe): per-call
-        # scales only match per-token stepping when fed token by token
-        spec_m = qctx.get("spec") if isinstance(qctx, dict) else None
-        self._prefill_fn = (jax.jit(self._one_prefill)
-                            if supports_seq_prefill(cfg)
-                            and prefill_chunk_safe(spec_m) else None)
-        # host mirrors of the per-slot decode inputs; the device copies
-        # are only rebuilt when a slot joins or leaves (``_dirty``)
-        self._next_host = np.zeros((max_batch,), np.int32)
-        self._temps_host = np.zeros((max_batch,), np.float32)
-        self._next_dev = jnp.zeros((max_batch,), jnp.int32)
-        self._temps_dev = jnp.zeros((max_batch,), jnp.float32)
-        self._dirty = False
-        # dispatch accounting (benchmarks / tests)
-        self.counters: Dict[str, int] = {"prefill_dispatches": 0,
-                                         "decode_steps": 0}
-
-    # -- jitted cores -----------------------------------------------------
-    def _one_step(self, params, state, tokens, key, temps):
-        logits, new_state = decode_step(params, self.cfg, state, tokens,
-                                        qctx=self.qctx)
-        toks = sample(key, logits, temps)
-        return toks, logits, new_state
-
-    def _one_prefill(self, params, slot_state, tokens):
-        _, new_state = prefill_step(params, self.cfg, slot_state, tokens,
-                                    qctx=self.qctx)
-        return new_state
-
-    # -- API --------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        if not req.prompt:
-            raise ValueError(
-                f"request {req.uid} has an empty prompt; every request "
-                "needs at least one prompt token")
-        self.queue.append(req)
-
-    def _set_next(self, i: int, tok: int) -> None:
-        self._next_host[i] = tok
-        self._dirty = True
-
-    @staticmethod
-    def _chunk_plan(n: int, chunk: int) -> List[int]:
-        """Split ``n`` prompt tokens into full ``chunk``-sized pieces plus
-        a power-of-two binary decomposition of the remainder, so the
-        jitted prefill compiles at most log2(chunk)+2 distinct shapes
-        regardless of the prompt-length mix (vs one compile per distinct
-        remainder length)."""
-        sizes = [chunk] * (n // chunk)
-        rem = n % chunk
-        while rem:
-            p = 1 << (rem.bit_length() - 1)
-            sizes.append(p)
-            rem -= p
-        return sizes
-
-    def _prefill(self, i: int, req: Request) -> None:
-        """Advance slot ``i``'s state over ``req.prompt[:-1]``."""
-        toks = req.prompt[:-1]
-        if toks and self._prefill_fn is not None:
-            # chunked sequence prefill on a batch-1 slice of the state:
-            # O(num_chunks) dispatches, none of them full-batch
-            slot_state = slice_slot(self.cfg, self.state, i)
-            c0 = 0
-            for size in self._chunk_plan(len(toks), self.prefill_chunk):
-                chunk = jnp.asarray([toks[c0:c0 + size]], jnp.int32)
-                c0 += size
-                slot_state = self._prefill_fn(self.params, slot_state,
-                                              chunk)
-                self.counters["prefill_dispatches"] += 1
-            self.state = write_slot(self.cfg, self.state, slot_state, i)
+                    "pass sampling params / request_id / priority on "
+                    "the Request itself when submitting a ready "
+                    "Request object")
+            req = prompt
         else:
-            # fallback: per-token decode dispatches (attention families)
-            for t in toks:
-                tok = self._next_dev.at[i].set(t)
-                self.key, k = jax.random.split(self.key)
-                _, _, new_state = self._step_fn(
-                    self.params, self.state, tok, k, self._temps_dev)
-                self.counters["prefill_dispatches"] += 1
-                # only slot i's state advances during its prefill
-                self.state = merge_slot(self.cfg, self.state, new_state,
-                                        i)
-        self._set_next(i, req.prompt[-1])
+            req = Request(list(prompt), params, request_id=request_id,
+                          priority=priority)
+        if req.request_id in self._states:
+            raise ValueError(
+                f"duplicate request_id {req.request_id!r}")
+        state = RequestState(request=req)
+        state.stream = RequestStream(req.request_id, pump=self._pump,
+                                     on_token=on_token)
+        self._states[req.request_id] = state
+        self.scheduler.add(state)
+        state.arrival_time = self.metrics.on_submit(
+            req.request_id, len(req.prompt), req.priority)
+        return state
 
-    def _admit(self) -> None:
-        for i in range(self.max_batch):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                self.state = reset_slot(self.cfg, self.state, i)
-                self._temps_host[i] = req.temperature
-                self._dirty = True
-                self._prefill(i, req)
+    def request_state(self, request_id: str) -> RequestState:
+        return self._states[request_id]
 
-    def _sync_device_inputs(self) -> None:
-        if self._dirty:
-            self._next_dev = jnp.asarray(self._next_host)
-            self._temps_dev = jnp.asarray(self._temps_host)
-            self._dirty = False
+    def stream(self, request_id: str) -> RequestStream:
+        return self._states[request_id].stream
 
-    def step(self) -> None:
-        """Decode one token for all live slots."""
-        self._admit()
-        live = [i for i, r in enumerate(self.slots) if r is not None]
+    def cancel(self, request_id: str) -> bool:
+        """Cancel a queued or in-flight request; returns False for
+        unknown/already-finished ids.  A queued request never touches a
+        slot; an in-flight one is evicted at this step boundary and
+        keeps the tokens produced so far."""
+        state = self.scheduler.cancel(request_id)
+        if state is None:
+            return False
+        if state.slot is not None:
+            slot = self.scheduler.release(state)
+            self.core.clear_slot(slot)
+        self._finish(state, FinishReason.CANCELLED)
+        return True
+
+    def _finish(self, state: RequestState, reason: FinishReason) -> None:
+        state.status = RequestStatus.FINISHED
+        state.finish_reason = reason
+        state.request.done = True
+        state.finish_time = self.metrics.on_finish(state.request_id,
+                                                   reason.value)
+        state.stream.close()
+        evict_finished(self._states, REQUEST_CAP,
+                       lambda st: st.finished)
+
+    # -- stepping ----------------------------------------------------------
+    def step(self) -> List[RequestOutput]:
+        """Admit queued requests into free slots (scheduler policy),
+        prefill them, then decode one token for every live slot.  With
+        nothing queued and nothing live this is a strict no-op: no
+        dispatch, no counters, no metrics samples."""
+        for slot, state in self.scheduler.schedule():
+            state.status = RequestStatus.PREFILLING
+            state.scheduled_time = self.metrics.on_schedule(
+                state.request_id)
+            self.core.seat(slot, state.request.prompt,
+                           state.request.params, self._admitted)
+            self._admitted += 1
+            state.status = RequestStatus.DECODING
+        live = self.scheduler.live()
         if not live:
-            return
-        self._sync_device_inputs()
-        self.key, k = jax.random.split(self.key)
-        toks, _, self.state = self._step_fn(
-            self.params, self.state, self._next_dev, k, self._temps_dev)
-        self.counters["decode_steps"] += 1
-        toks_host = np.asarray(jax.device_get(toks))
-        # sampled tokens feed the next step directly (no per-slot device
-        # updates); freed slots keep a stale token, which is harmless --
-        # their state is reset at the next admit
-        self._next_dev = toks
-        self._next_host[:] = toks_host
-        for i in live:
-            req = self.slots[i]
-            tok = int(toks_host[i])
-            req.output.append(tok)
-            if (len(req.output) >= req.max_new_tokens or
-                    (req.eos_id is not None and tok == req.eos_id)):
-                req.done = True
-                self.slots[i] = None       # free slot -> continuous batching
-                self._temps_host[i] = 0.0
-                self._dirty = True
+            return []
+        toks = self.core.decode()
+        self.metrics.on_step(self.scheduler.queue_depth, len(live),
+                             self.core.max_batch)
+        outputs: List[RequestOutput] = []
+        for slot, state in live:
+            if state.finished:
+                # cancelled reentrantly by an earlier slot's on_token
+                # callback this very step: its token is dropped
+                continue
+            tok = int(toks[slot])
+            state.request.output.append(tok)
+            t = self.metrics.on_token(state.request_id)
+            if state.first_token_time is None:
+                state.first_token_time = t
+            state.stream.put(tok)          # may reenter cancel()
+            if state.finished:
+                outputs.append(state.snapshot((tok,)))
+                continue
+            sp = state.request.params
+            reason = None
+            if tok in sp.stop_token_ids:
+                reason = FinishReason.STOP
+            elif len(state.request.output) >= sp.max_tokens:
+                reason = FinishReason.LENGTH
+            if reason is not None:
+                freed = self.scheduler.release(state)
+                self.core.clear_slot(freed)
+                self._finish(state, reason)
+            outputs.append(state.snapshot((tok,)))
+        return outputs
+
+    def has_unfinished(self) -> bool:
+        return self.scheduler.has_work
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
+            if not self.has_unfinished():
                 return
             self.step()
 
+    def _pump(self) -> bool:
+        """Stream-iteration driver: advance the engine once if it still
+        has work; False tells the stream it can never be fed again."""
+        if not self.has_unfinished():
+            return False
+        self.step()
+        return True
 
-def generate(params, cfg: ModelConfig, prompts: List[List[int]], *,
-             max_new_tokens: int = 32, temperature: float = 0.0,
+    # -- metrics -----------------------------------------------------------
+    def metrics_json(self) -> Dict:
+        """Per-request TTFT/TPOT/queue-time + engine tokens/s,
+        occupancy, queue-depth series, and dispatch counts as one
+        JSON-safe dict."""
+        return self.metrics.to_json(extra_counters=self.core.counters)
+
+
+class Engine(LLMEngine):
+    """Deprecated pre-PR-4 surface: ``submit(Request)`` + ``run()``.
+
+    Thin shim over ``LLMEngine`` -- legacy ``Request`` fields
+    (``max_new_tokens``/``temperature``/``eos_id``) become a
+    ``SamplingParams`` in ``Request.__post_init__``, and the mutable
+    ``Request.output``/``.done`` mirrors are the same objects the new
+    lifecycle writes, so nothing needs syncing.  New code should use
+    ``add_request`` / ``SamplingParams`` / streams directly.
+    """
+
+    def submit(self, req: Request) -> RequestState:
+        return self.add_request(req)
+
+    @property
+    def queue(self) -> List[Request]:
+        return [s.request for s in self.scheduler.waiting]
+
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        return [None if s is None else s.request
+                for s in self.scheduler.slots]
+
+
+def generate(params, cfg: ModelConfig, prompts: Sequence[Sequence[int]],
+             *, max_new_tokens: int = 32, temperature: float = 0.0,
              qctx=None, max_len: int = 2048,
              prefill_chunk: int = 128) -> List[List[int]]:
     """Convenience batch generation through the engine."""
@@ -253,12 +254,11 @@ def generate(params, cfg: ModelConfig, prompts: List[List[int]], *,
             raise ValueError(
                 f"prompts[{i}] is empty; every prompt needs at least one "
                 "token")
-    eng = Engine(params, cfg, max_batch=min(8, len(prompts)),
-                 max_len=max_len, qctx=qctx, prefill_chunk=prefill_chunk)
-    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new_tokens,
-                    temperature=temperature)
-            for i, p in enumerate(prompts)]
-    for r in reqs:
-        eng.submit(r)
+    eng = LLMEngine(params, cfg, max_batch=min(8, len(prompts)),
+                    max_len=max_len, qctx=qctx,
+                    prefill_chunk=prefill_chunk)
+    sp = SamplingParams(temperature=temperature,
+                        max_tokens=max_new_tokens)
+    states = [eng.add_request(list(p), sp) for p in prompts]
     eng.run()
-    return [r.output for r in reqs]
+    return [list(s.token_ids) for s in states]

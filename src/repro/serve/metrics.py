@@ -1,0 +1,233 @@
+"""Per-request and engine-level serving metrics.
+
+Definitions (all from the engine's injectable clock, seconds):
+
+  queue_time = first scheduled - arrival (time spent QUEUED)
+  TTFT       = first decoded token - arrival (queue + prefill + 1 step)
+  TPOT       = mean inter-token time after the first token
+
+Engine-level: decode steps, tokens/s (counted from the FIRST submission
+to the last decoded token, so queue + prefill wall time is included --
+it is a serving-throughput number, not a decode-loop number), mean slot
+occupancy, queue-depth and occupancy series (one sample per non-idle
+step, bounded), request counts, and the core's dispatch counters.  ``to_json`` emits plain
+finite floats so the result can go straight into ``BENCH_PR.json`` and
+the CI perf gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+# everything here is bounded so a long-lived engine cannot grow without
+# limit: the step series keep the most recent _SERIES_CAP samples, and
+# per-request records evict the OLDEST FINISHED entries beyond
+# _REQUEST_CAP (live requests are never evicted).  Both are far beyond
+# any benchmark/test horizon in this repo.
+_SERIES_CAP = 4096
+REQUEST_CAP = 4096
+
+
+def evict_finished(records: Dict, cap: int, is_finished) -> None:
+    """Drop the oldest FINISHED entries of an insertion-ordered dict
+    until it fits ``cap`` (live entries are never dropped).  Shared by
+    the metrics recorder and the engine's request-state table so the
+    two retention policies cannot drift apart."""
+    excess = len(records) - cap
+    if excess <= 0:
+        return
+    stale = [k for k, v in records.items() if is_finished(v)][:excess]
+    for k in stale:
+        del records[k]
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Raw timestamps/counts for one request; derived values lazily."""
+
+    prompt_len: int = 0
+    priority: int = 0
+    arrival_time: float = 0.0
+    scheduled_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    last_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    generated: int = 0
+    finish_reason: Optional[str] = None
+
+    @property
+    def queue_time_s(self) -> Optional[float]:
+        if self.scheduled_time is None:
+            return None
+        return self.scheduled_time - self.arrival_time
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        if (self.first_token_time is None
+                or self.last_token_time is None or self.generated < 2):
+            return None
+        return ((self.last_token_time - self.first_token_time)
+                / (self.generated - 1))
+
+    def to_dict(self) -> Dict:
+        def ms(v):
+            return None if v is None else v * 1e3
+        return {
+            "prompt_len": self.prompt_len,
+            "priority": self.priority,
+            "generated": self.generated,
+            "finish_reason": self.finish_reason,
+            "queue_time_ms": ms(self.queue_time_s),
+            "ttft_ms": ms(self.ttft_s),
+            "tpot_ms": ms(self.tpot_s),
+        }
+
+
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    """Linear-interpolation percentile over pre-sorted values."""
+    if not sorted_vals:
+        return float("nan")
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    pos = q * (len(sorted_vals) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+
+
+def _stats_ms(vals_s: List[float]) -> Optional[Dict[str, float]]:
+    vals = sorted(v * 1e3 for v in vals_s)
+    if not vals:
+        return None
+    return {
+        "mean": sum(vals) / len(vals),
+        "p50": _percentile(vals, 0.50),
+        "p95": _percentile(vals, 0.95),
+        "max": vals[-1],
+        "n": len(vals),
+    }
+
+
+class Metrics:
+    """Event recorder the ``LLMEngine`` drives; query any time."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self.requests: Dict[str, RequestMetrics] = {}
+        self.decode_steps = 0
+        self.tokens_generated = 0
+        self.requests_submitted = 0
+        self.requests_finished = 0
+        self.requests_cancelled = 0
+        self.queue_depth_series: Deque[int] = deque(maxlen=_SERIES_CAP)
+        self.occupancy_series: Deque[float] = deque(maxlen=_SERIES_CAP)
+        self._start_time: Optional[float] = None
+        self._last_token_time: Optional[float] = None
+
+    def now(self) -> float:
+        return self._clock()
+
+    # -- request events ---------------------------------------------------
+    def on_submit(self, request_id: str, prompt_len: int,
+                  priority: int = 0) -> float:
+        t = self.now()
+        if self._start_time is None:
+            self._start_time = t
+        self.requests[request_id] = RequestMetrics(
+            prompt_len=prompt_len, priority=priority, arrival_time=t)
+        self.requests_submitted += 1
+        return t
+
+    def on_schedule(self, request_id: str) -> float:
+        t = self.now()
+        self.requests[request_id].scheduled_time = t
+        return t
+
+    def on_token(self, request_id: str) -> float:
+        t = self.now()
+        m = self.requests[request_id]
+        if m.first_token_time is None:
+            m.first_token_time = t
+        m.last_token_time = t
+        m.generated += 1
+        self.tokens_generated += 1
+        self._last_token_time = t
+        return t
+
+    def on_finish(self, request_id: str, reason: str) -> float:
+        t = self.now()
+        m = self.requests[request_id]
+        m.finish_time = t
+        m.finish_reason = reason
+        self.requests_finished += 1
+        if reason == "cancelled":
+            self.requests_cancelled += 1
+        evict_finished(self.requests, REQUEST_CAP,
+                       lambda rm: rm.finish_time is not None)
+        return t
+
+    # -- engine events ----------------------------------------------------
+    def on_step(self, queue_depth: int, live: int, max_batch: int) -> None:
+        self.decode_steps += 1
+        self.queue_depth_series.append(queue_depth)
+        self.occupancy_series.append(live / max_batch)
+
+    # -- queries ----------------------------------------------------------
+    def request(self, request_id: str) -> Dict:
+        return self.requests[request_id].to_dict()
+
+    def to_json(self, extra_counters: Optional[Dict[str, int]] = None
+                ) -> Dict:
+        """One JSON-safe dict: per-request, summary, engine sections."""
+        elapsed = None
+        if (self._start_time is not None
+                and self._last_token_time is not None):
+            elapsed = self._last_token_time - self._start_time
+        occ = list(self.occupancy_series)
+        engine = {
+            "decode_steps": self.decode_steps,
+            "tokens_generated": self.tokens_generated,
+            "requests_submitted": self.requests_submitted,
+            "requests_finished": self.requests_finished,
+            "requests_cancelled": self.requests_cancelled,
+            "tokens_per_s": (self.tokens_generated / elapsed
+                             if elapsed and elapsed > 0 else None),
+            "occupancy_mean": (sum(occ) / len(occ) if occ else None),
+            "queue_depth_series": list(self.queue_depth_series),
+            "occupancy_series": occ,
+        }
+        if extra_counters:
+            engine.update({k: int(v) for k, v in extra_counters.items()})
+        ms = self.requests.values()
+        summary = {
+            "ttft_ms": _stats_ms([m.ttft_s for m in ms
+                                  if m.ttft_s is not None]),
+            "tpot_ms": _stats_ms([m.tpot_s for m in ms
+                                  if m.tpot_s is not None]),
+            "queue_time_ms": _stats_ms([m.queue_time_s for m in ms
+                                        if m.queue_time_s is not None]),
+        }
+        return {
+            "requests": {rid: m.to_dict()
+                         for rid, m in self.requests.items()},
+            "summary": summary,
+            "engine": engine,
+        }
+
+    def dump(self, path: str,
+             extra_counters: Optional[Dict[str, int]] = None) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(extra_counters), f, indent=1,
+                      sort_keys=True)
+        return path

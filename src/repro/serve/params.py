@@ -1,0 +1,72 @@
+"""Frozen per-request sampling parameters (the request-centric API).
+
+``SamplingParams`` travels WITH a request instead of living on the
+engine: every slot in a continuous decode batch can run its own
+temperature / top-k / top-p / seed, and the batched sampler
+(``repro.serve.sampler.sample_batched``) consumes the per-slot arrays
+the engine core builds from these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Immutable sampling configuration for one request.
+
+    ``temperature <= 0`` (or ``greedy=True``) selects greedy argmax.
+    ``top_k=0`` and ``top_p=1.0`` disable the respective truncation;
+    both act on the temperature-scaled distribution.  ``seed`` pins the
+    request's sample stream independently of engine state (two requests
+    with the same seed and prompt draw identical tokens, whatever else
+    the batch is doing).  ``stop_token_ids`` finish the request
+    INCLUSIVE of the stop token, matching the legacy ``eos_id``
+    semantics.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    greedy: Optional[bool] = None      # None -> derived from temperature
+    seed: Optional[int] = None
+    max_tokens: int = 32
+    stop_token_ids: Tuple[int, ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_tokens < 1:
+            raise ValueError(
+                f"max_tokens must be >= 1, got {self.max_tokens}")
+        if self.greedy is False and self.temperature <= 0.0:
+            raise ValueError(
+                "greedy=False needs temperature > 0 to sample from")
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+    @property
+    def is_greedy(self) -> bool:
+        if self.greedy is not None:
+            return self.greedy
+        return self.temperature <= 0.0
+
+    @property
+    def effective_temperature(self) -> float:
+        """What the sampler sees: 0.0 encodes greedy per-row."""
+        return 0.0 if self.is_greedy else self.temperature
+
+    def describe(self) -> str:  # pragma: no cover - cosmetic
+        mode = "greedy" if self.is_greedy else f"T={self.temperature:g}"
+        return (f"SamplingParams({mode}, top_k={self.top_k}, "
+                f"top_p={self.top_p:g}, max_tokens={self.max_tokens})")
+
+
+GREEDY = SamplingParams()

@@ -1,0 +1,203 @@
+"""Request lifecycle: ``Request`` -> ``RequestState`` -> ``RequestOutput``.
+
+A ``Request`` is what a caller submits (prompt + ``SamplingParams`` +
+identity/priority).  The engine wraps it in a ``RequestState`` that
+tracks the QUEUED -> PREFILLING -> DECODING -> FINISHED(stop | length |
+cancelled) lifecycle plus the timestamps the metrics recorder turns
+into TTFT/TPOT/queue-time.  Each ``step()`` yields ``RequestOutput``
+snapshots, and every request owns a ``RequestStream`` for incremental
+token delivery (pull iteration or an ``on_token`` callback).
+
+``Request`` also accepts the pre-PR-4 constructor surface
+(``uid``/``max_new_tokens``/``temperature``/``eos_id``) and keeps the
+mutable ``output``/``done`` mirrors those call sites read, so legacy
+code keeps working through the ``Engine`` shim unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from collections import deque
+from typing import Callable, List, Optional, Tuple
+
+from repro.serve.params import SamplingParams
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+class FinishReason(enum.Enum):
+    STOP = "stop"            # hit a stop token (included in the output)
+    LENGTH = "length"        # produced max_tokens
+    CANCELLED = "cancelled"  # cancelled while queued or in flight
+
+
+_REQUEST_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """A unit of work for the engine.
+
+    New-style: ``Request(prompt, SamplingParams(...), request_id=...,
+    priority=...)``.  Legacy keywords (``uid``, ``max_new_tokens``,
+    ``temperature``, ``eos_id``) are translated into an equivalent
+    ``SamplingParams`` -- passing both styles at once is an error.
+    ``priority``: higher values are served first under the priority
+    scheduling policy (FCFS breaks ties).
+    """
+
+    prompt: List[int]
+    params: Optional[SamplingParams] = None
+    request_id: Optional[str] = None
+    priority: int = 0
+    # legacy (pre-PR-4) construction surface -- deprecated
+    uid: Optional[int] = None
+    max_new_tokens: Optional[int] = None
+    temperature: Optional[float] = None
+    eos_id: Optional[int] = None
+    # engine-written mirrors (legacy readers; the canonical token list)
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    def __post_init__(self) -> None:
+        self.prompt = [int(t) for t in self.prompt]
+        legacy = (self.max_new_tokens is not None
+                  or self.temperature is not None
+                  or self.eos_id is not None)
+        if self.params is None:
+            self.params = SamplingParams(
+                temperature=(self.temperature
+                             if self.temperature is not None else 0.0),
+                max_tokens=(self.max_new_tokens
+                            if self.max_new_tokens is not None else 32),
+                stop_token_ids=((self.eos_id,)
+                                if self.eos_id is not None else ()))
+        elif legacy:
+            raise ValueError(
+                "pass SamplingParams OR the legacy max_new_tokens/"
+                "temperature/eos_id fields, not both")
+        if self.request_id is None:
+            self.request_id = f"req-{next(_REQUEST_IDS)}"
+        if not self.prompt:
+            raise ValueError(
+                f"request {self.request_id} has an empty prompt; every "
+                "request needs at least one prompt token")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutput:
+    """Per-step snapshot of one request's progress."""
+
+    request_id: str
+    new_token_ids: Tuple[int, ...]
+    token_ids: Tuple[int, ...]
+    status: RequestStatus
+    finish_reason: Optional[FinishReason] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.status is RequestStatus.FINISHED
+
+
+class RequestStream:
+    """Incremental token delivery for one request.
+
+    The engine is synchronous, so PULL iteration drives it: each
+    ``__next__`` pumps ``engine.step()`` until this request yields a
+    token or finishes.  ``drain()`` is the non-blocking variant
+    (everything buffered so far), and ``on_token`` is the push-style
+    callback, invoked as each token is decoded.
+    """
+
+    def __init__(self, request_id: str,
+                 pump: Optional[Callable[[], bool]] = None,
+                 on_token: Optional[Callable[[int], None]] = None):
+        self.request_id = request_id
+        self._buf: deque = deque()
+        self._closed = False
+        self._pump = pump
+        self._on_token = on_token
+
+    # -- engine side ------------------------------------------------------
+    def put(self, token: int) -> None:
+        if self._closed:                   # late token after a cancel
+            return
+        self._buf.append(token)
+        if self._on_token is not None:
+            self._on_token(token)
+
+    def close(self) -> None:
+        self._closed = True
+
+    # -- consumer side ----------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def drain(self) -> List[int]:
+        out = list(self._buf)
+        self._buf.clear()
+        return out
+
+    def __iter__(self) -> "RequestStream":
+        return self
+
+    def __next__(self) -> int:
+        while True:
+            if self._buf:
+                return self._buf.popleft()
+            if self._closed:
+                raise StopIteration
+            if self._pump is None or not self._pump():
+                raise RuntimeError(
+                    f"stream for {self.request_id} stalled: the engine "
+                    "has no work left but the request never finished")
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Engine-side lifecycle record for one request."""
+
+    request: Request
+    status: RequestStatus = RequestStatus.QUEUED
+    slot: Optional[int] = None
+    finish_reason: Optional[FinishReason] = None
+    stream: Optional[RequestStream] = None
+    # timestamps from the engine clock (metrics derives TTFT/TPOT)
+    arrival_time: float = 0.0
+    scheduled_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def request_id(self) -> str:
+        return self.request.request_id
+
+    @property
+    def params(self) -> SamplingParams:
+        return self.request.params
+
+    @property
+    def prompt(self) -> List[int]:
+        return self.request.prompt
+
+    @property
+    def token_ids(self) -> List[int]:
+        return self.request.output
+
+    @property
+    def finished(self) -> bool:
+        return self.status is RequestStatus.FINISHED
+
+    def snapshot(self, new_tokens: Tuple[int, ...] = ()) -> RequestOutput:
+        return RequestOutput(request_id=self.request_id,
+                             new_token_ids=tuple(new_tokens),
+                             token_ids=tuple(self.request.output),
+                             status=self.status,
+                             finish_reason=self.finish_reason)

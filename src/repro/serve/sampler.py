@@ -1,18 +1,78 @@
-"""Token samplers for the serving engine."""
+"""Batched token samplers: greedy / temperature / top-k / top-p.
+
+``sample_batched`` takes PER-ROW parameter arrays so a single jitted
+dispatch serves a continuous batch of heterogeneous requests -- each
+decode slot carries its own ``SamplingParams`` and its own PRNG key.
+All truncation happens on the temperature-scaled logits; ``top_k=0``
+and ``top_p=1.0`` disable the respective mask.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
+def apply_top_k_top_p(logits: jax.Array, top_k: jax.Array,
+                      top_p: jax.Array) -> jax.Array:
+    """Mask logits outside the per-row top-k / nucleus-p set to -inf.
+
+    logits (B, V); ``top_k`` int (B,), 0 or >= V disables; ``top_p``
+    float (B,) in (0, 1], 1.0 disables.  The nucleus keeps the smallest
+    prefix of the probability-sorted vocabulary whose mass reaches
+    ``top_p`` (a token stays while the mass BEFORE it is < p).  The
+    highest-probability token always survives, so no row is ever
+    all -inf.
+    """
+    v = logits.shape[-1]
+    top_k = jnp.asarray(top_k, jnp.int32)
+    top_p = jnp.asarray(top_p, jnp.float32)
+    k_eff = jnp.where((top_k <= 0) | (top_k > v), v, top_k)
+    order = jnp.argsort(-logits, axis=-1)               # descending
+    ranked = jnp.take_along_axis(logits, order, axis=-1)
+    ranks = jnp.arange(v)[None, :]
+    keep = ranks < k_eff[:, None]
+    probs = jax.nn.softmax(ranked, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep &= (cum - probs) < top_p[:, None]
+    keep |= ranks == 0
+    ranked = jnp.where(keep, ranked, -jnp.inf)
+    inv = jnp.argsort(order, axis=-1)                   # undo the sort
+    return jnp.take_along_axis(ranked, inv, axis=-1)
+
+
+def sample_batched(keys: jax.Array, logits: jax.Array, temps: jax.Array,
+                   top_k: jax.Array, top_p: jax.Array,
+                   truncate: bool = True) -> jax.Array:
+    """One token per row from per-row sampling configs.
+
+    ``keys`` (B, 2) uint32 -- one PRNG key per slot, so request sample
+    streams are independent of batch composition.  Rows with
+    ``temps <= 0`` take the argmax; the rest sample from the
+    temperature-scaled, top-k/top-p-truncated distribution.
+
+    ``truncate`` must be a PYTHON bool (jit-static): False skips the
+    top-k/top-p masking work entirely -- callers that know every row
+    has truncation disabled (the all-greedy/plain-temperature hot path)
+    avoid two (B, V) argsorts per decoded token.
+    """
+    temps = jnp.asarray(temps, jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1)
+    scaled = logits / jnp.maximum(temps, 1e-4)[:, None]
+    masked = apply_top_k_top_p(scaled, top_k, top_p) if truncate \
+        else scaled
+    sampled = jax.vmap(jax.random.categorical)(keys, masked)
+    return jnp.where(temps <= 0.0, greedy_tok, sampled).astype(jnp.int32)
+
+
 def sample(key: jax.Array, logits: jax.Array, temperature) -> jax.Array:
-    """Greedy when temperature <= 0 (per-row), else temperature sampling.
+    """Pre-PR-4 shim: greedy when temperature <= 0 (per-row), else
+    plain temperature sampling.  New callers use ``sample_batched``.
 
     logits (B, V); temperature scalar or (B,).
     """
-    temps = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32),
-                             logits.shape[:1])
-    greedy = jnp.argmax(logits, axis=-1)
-    scaled = logits / jnp.maximum(temps, 1e-4)[:, None]
-    sampled = jax.random.categorical(key, scaled, axis=-1)
-    return jnp.where(temps <= 0.0, greedy, sampled).astype(jnp.int32)
+    b = logits.shape[0]
+    temps = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,))
+    keys = jax.random.split(key, b)
+    return sample_batched(keys, logits, temps,
+                          jnp.zeros((b,), jnp.int32),
+                          jnp.ones((b,), jnp.float32), truncate=False)

@@ -1,0 +1,131 @@
+"""Pluggable request scheduling over decode slots.
+
+The Scheduler owns WHO runs WHERE: the waiting queue, the slot table,
+admission of queued requests into free slots, eviction of finished
+ones, and cancellation.  The ``EngineCore`` owns WHAT runs (device
+state and dispatches) and never sees a queue; the ``LLMEngine`` wires
+the two together and keeps metrics/streams.
+
+Policies override ``_pick`` (which waiting request takes the next free
+slot).  ``FCFSScheduler`` is the default; ``PriorityScheduler`` serves
+higher ``Request.priority`` first with FCFS tie-breaking.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional, Tuple, Type, Union
+
+from repro.serve.request import RequestState, RequestStatus
+
+
+class Scheduler:
+    """Base admission/eviction/cancellation bookkeeping (policy-free)."""
+
+    def __init__(self, max_batch: int):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = max_batch
+        self.slots: List[Optional[RequestState]] = [None] * max_batch
+        self.waiting: Deque[RequestState] = deque()
+
+    # -- policy hook ------------------------------------------------------
+    def _pick(self) -> RequestState:
+        raise NotImplementedError
+
+    # -- queue ------------------------------------------------------------
+    def add(self, state: RequestState) -> None:
+        state.status = RequestStatus.QUEUED
+        self.waiting.append(state)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    def live(self) -> List[Tuple[int, RequestState]]:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    # -- admission / eviction --------------------------------------------
+    def schedule(self) -> List[Tuple[int, RequestState]]:
+        """Fill free slots from the queue (policy order); returns the
+        admissions made this call as ``(slot, state)`` pairs."""
+        admitted: List[Tuple[int, RequestState]] = []
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.waiting:
+                state = self._pick()
+                state.slot = i
+                self.slots[i] = state
+                admitted.append((i, state))
+        return admitted
+
+    def release(self, state: RequestState) -> int:
+        """Evict ``state`` from its slot (finish, length, or cancel);
+        returns the freed slot index so the engine can clear the core."""
+        i = state.slot
+        if i is None or self.slots[i] is not state:
+            raise ValueError(
+                f"request {state.request_id} does not hold a slot")
+        self.slots[i] = None
+        state.slot = None
+        return i
+
+    # -- cancellation -----------------------------------------------------
+    def cancel(self, request_id: str) -> Optional[RequestState]:
+        """Locate a request by id.  Queued requests are dequeued here;
+        in-flight ones are returned still holding their slot (the
+        caller releases + clears the core).  Unknown/finished -> None.
+        """
+        for idx, state in enumerate(self.waiting):
+            if state.request_id == request_id:
+                del self.waiting[idx]
+                return state
+        for state in self.slots:
+            if state is not None and state.request_id == request_id:
+                return state
+        return None
+
+
+class FCFSScheduler(Scheduler):
+    """First come, first served (the default policy)."""
+
+    def _pick(self) -> RequestState:
+        return self.waiting.popleft()
+
+
+class PriorityScheduler(Scheduler):
+    """Highest ``Request.priority`` first; FCFS within a priority."""
+
+    def _pick(self) -> RequestState:
+        best = max(range(len(self.waiting)),
+                   key=lambda i: self.waiting[i].request.priority)
+        state = self.waiting[best]
+        del self.waiting[best]
+        return state
+
+
+SCHEDULERS = {"fcfs": FCFSScheduler, "priority": PriorityScheduler}
+
+
+def make_scheduler(policy: Union[str, Scheduler, Type[Scheduler], None],
+                   max_batch: int) -> Scheduler:
+    """Resolve a policy name / class / ready instance to a Scheduler."""
+    if policy is None:
+        policy = "fcfs"
+    if isinstance(policy, Scheduler):
+        if policy.max_batch != max_batch:
+            raise ValueError(
+                f"scheduler was built for max_batch={policy.max_batch}, "
+                f"engine has max_batch={max_batch}")
+        return policy
+    if isinstance(policy, type) and issubclass(policy, Scheduler):
+        return policy(max_batch)
+    if isinstance(policy, str):
+        if policy not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler policy {policy!r}; "
+                f"available: {sorted(SCHEDULERS)}")
+        return SCHEDULERS[policy](max_batch)
+    raise TypeError(f"cannot build a scheduler from {policy!r}")

@@ -83,3 +83,10 @@ def _install_hypothesis_fallback() -> None:
 
 
 _install_hypothesis_fallback()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "serve: serving-layer tests (scheduler, request lifecycle, "
+        "sampler, metrics) -- the CI `serve` job runs `-m serve`")

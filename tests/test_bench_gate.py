@@ -1,0 +1,86 @@
+"""scripts/compare_bench.py forward compatibility: unknown keys, missing
+metrics, and non-numeric values must skip, never crash the gate."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "scripts"))
+from compare_bench import GATED, gate  # noqa: E402
+
+pytestmark = pytest.mark.serve
+
+BASE = {
+    "tpot_quamba_kernels_us": 100.0,
+    "prefill_chunked_tokens_per_s": 5000.0,
+    "engine_prefill": {"prefill_dispatches": 8},
+    "serve": {"ttft_ms": {"mean": 40.0}},
+}
+
+
+def test_identical_passes():
+    assert gate(BASE, dict(BASE), 0.25) == []
+
+
+def test_unknown_and_extra_keys_ignored():
+    cur = dict(BASE)
+    cur["brand_new_metric"] = {"deeply": {"nested": [1, 2, 3]}}
+    cur["serve"] = dict(BASE["serve"], queue_depth_series=[3, 2, 1],
+                        occupancy_mean=0.9)
+    prev = dict(BASE)
+    prev["only_in_prev"] = "whatever"
+    assert gate(prev, cur, 0.25) == []
+
+
+def test_missing_metric_skips_not_raises():
+    prev = {"tpot_quamba_kernels_us": 100.0}   # pre-PR-4 artifact: no
+    cur = dict(BASE)                           # serve section at all
+    assert gate(prev, cur, 0.25) == []
+    assert gate({}, cur, 0.25) == []
+    assert gate(cur, {}, 0.25) == []
+
+
+def test_non_numeric_values_skip():
+    prev = dict(BASE, tpot_quamba_kernels_us="fast")
+    cur = dict(BASE, serve={"ttft_ms": {"mean": None}})
+    assert gate(prev, cur, 0.25) == []
+    # a dict where a float is expected (schema drift) also skips
+    cur2 = dict(BASE, tpot_quamba_kernels_us={"mean": 100.0})
+    assert gate(BASE, cur2, 0.25) == []
+
+
+def test_regression_detected_and_improvement_passes():
+    worse = {
+        "tpot_quamba_kernels_us": 140.0,             # +40% (lower better)
+        "prefill_chunked_tokens_per_s": 3000.0,      # -40% (higher better)
+        "engine_prefill": {"prefill_dispatches": 9},  # any increase fails
+        "serve": {"ttft_ms": {"mean": 60.0}},         # +50%
+    }
+    failures = gate(BASE, worse, 0.25)
+    assert len(failures) == 4
+    assert any("serve.ttft_ms.mean" in f for f in failures)
+    better = {
+        "tpot_quamba_kernels_us": 50.0,
+        "prefill_chunked_tokens_per_s": 9000.0,
+        "engine_prefill": {"prefill_dispatches": 3},
+        "serve": {"ttft_ms": {"mean": 10.0}},
+    }
+    assert gate(BASE, better, 0.25) == []
+
+
+def test_small_wobble_within_tolerance_passes():
+    cur = dict(BASE, tpot_quamba_kernels_us=120.0,
+               serve={"ttft_ms": {"mean": 48.0}})    # 20% < 25%
+    assert gate(BASE, cur, 0.25) == []
+
+
+def test_dispatch_count_zero_tolerance():
+    cur = {"engine_prefill": {"prefill_dispatches": 9}}
+    prev = {"engine_prefill": {"prefill_dispatches": 8}}
+    failures = gate(prev, cur, 0.25)
+    assert len(failures) == 1 and "prefill_dispatches" in failures[0]
+
+
+def test_gated_covers_serve_ttft():
+    assert any(k == "serve.ttft_ms.mean" for k, _, _ in GATED)

@@ -1,0 +1,185 @@
+"""Batched top-k/top-p sampler: mask semantics against a numpy
+reference, support membership, and golden-distribution checks."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serve.sampler import apply_top_k_top_p, sample, sample_batched
+
+pytestmark = pytest.mark.serve
+
+
+# ---------------------------------------------------------------------------
+# numpy reference (independent implementation of the same semantics)
+# ---------------------------------------------------------------------------
+
+def _np_softmax(x):
+    e = np.exp(x - np.max(x))
+    return e / e.sum()
+
+
+def _np_top_k_top_p(logits, k, p):
+    """Reference mask: keep the top-k logits AND the nucleus (smallest
+    prefix of the sorted distribution with mass >= p; a token stays
+    while the mass before it is < p); rank 0 always survives."""
+    v = len(logits)
+    order = np.argsort(-logits, kind="stable")
+    ranked = logits[order]
+    k_eff = v if (k <= 0 or k > v) else k
+    keep = np.arange(v) < k_eff
+    probs = _np_softmax(ranked)
+    cum = np.cumsum(probs)
+    keep &= (cum - probs) < p
+    keep[0] = True
+    out = np.full(v, -np.inf, dtype=logits.dtype)
+    out[order[keep]] = logits[order[keep]]
+    return out
+
+
+def _np_expected_dist(logits, temp, k, p):
+    """Token distribution the sampler should draw from."""
+    scaled = logits / max(temp, 1e-4)
+    masked = _np_top_k_top_p(scaled, k, p)
+    finite = np.isfinite(masked)
+    probs = np.zeros_like(scaled)
+    probs[finite] = _np_softmax(masked[finite])
+    return probs
+
+
+# ---------------------------------------------------------------------------
+# mask semantics
+# ---------------------------------------------------------------------------
+
+def test_mask_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(6, 37)).astype(np.float32)
+    top_k = np.array([0, 1, 3, 37, 100, 10], np.int32)
+    top_p = np.array([1.0, 1.0, 0.5, 0.9, 0.3, 0.75], np.float32)
+    got = np.asarray(apply_top_k_top_p(jnp.asarray(logits),
+                                       jnp.asarray(top_k),
+                                       jnp.asarray(top_p)))
+    for b in range(6):
+        ref = _np_top_k_top_p(logits[b], int(top_k[b]), float(top_p[b]))
+        np.testing.assert_array_equal(np.isfinite(got[b]),
+                                      np.isfinite(ref), err_msg=f"row {b}")
+        fin = np.isfinite(ref)
+        np.testing.assert_allclose(got[b][fin], ref[fin], rtol=1e-6,
+                                   err_msg=f"row {b}")
+
+
+def test_disabled_mask_is_identity():
+    rng = np.random.default_rng(1)
+    logits = rng.normal(size=(3, 16)).astype(np.float32)
+    got = np.asarray(apply_top_k_top_p(
+        jnp.asarray(logits), jnp.zeros((3,), jnp.int32),
+        jnp.ones((3,), jnp.float32)))
+    np.testing.assert_allclose(got, logits, rtol=1e-6)
+
+
+def test_tiny_top_p_keeps_exactly_the_argmax():
+    rng = np.random.default_rng(2)
+    logits = rng.normal(size=(4, 12)).astype(np.float32)
+    got = np.asarray(apply_top_k_top_p(
+        jnp.asarray(logits), jnp.zeros((4,), jnp.int32),
+        jnp.full((4,), 1e-6, jnp.float32)))
+    for b in range(4):
+        fin = np.isfinite(got[b])
+        assert fin.sum() == 1 and fin[np.argmax(logits[b])]
+
+
+# ---------------------------------------------------------------------------
+# sampling support + golden distribution
+# ---------------------------------------------------------------------------
+
+def _draws(logits_row, temp, k, p, n=4000, seed=0):
+    """n independent draws via the batch dimension (one jitted call)."""
+    logits = jnp.tile(jnp.asarray(logits_row)[None, :], (n, 1))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    toks = sample_batched(keys, logits,
+                          jnp.full((n,), temp, jnp.float32),
+                          jnp.full((n,), k, jnp.int32),
+                          jnp.full((n,), p, jnp.float32))
+    return np.asarray(toks)
+
+
+def test_top_k_support():
+    rng = np.random.default_rng(3)
+    row = rng.normal(size=17).astype(np.float32)
+    allowed = set(np.argsort(-row)[:3].tolist())
+    toks = _draws(row, temp=1.0, k=3, p=1.0, n=500)
+    assert set(toks.tolist()) <= allowed
+
+
+def test_top_p_support():
+    rng = np.random.default_rng(4)
+    row = rng.normal(size=17).astype(np.float32)
+    probs = _np_expected_dist(row, 1.0, 0, 0.7)
+    allowed = set(np.flatnonzero(probs > 0).tolist())
+    toks = _draws(row, temp=1.0, k=0, p=0.7, n=500)
+    assert set(toks.tolist()) <= allowed
+
+
+@pytest.mark.parametrize("temp,k,p", [
+    (1.0, 4, 1.0),        # pure top-k
+    (1.0, 0, 0.85),       # pure nucleus
+    (0.7, 5, 0.9),        # combined, sharpened
+    (1.5, 0, 1.0),        # plain temperature
+])
+def test_golden_distribution(temp, k, p):
+    """Empirical frequencies match the numpy-reference truncated
+    distribution within ~4 sigma of the binomial sampling noise."""
+    rng = np.random.default_rng(5)
+    row = rng.normal(size=8).astype(np.float32)
+    expect = _np_expected_dist(row, temp, k, p)
+    n = 4000
+    toks = _draws(row, temp, k, p, n=n, seed=42)
+    freq = np.bincount(toks, minlength=len(row)) / n
+    assert freq[expect == 0].sum() == 0.0       # support is exact
+    tol = 4 * np.sqrt(np.maximum(expect * (1 - expect), 1e-12) / n)
+    np.testing.assert_array_less(np.abs(freq - expect), tol + 1e-9)
+
+
+def test_greedy_rows_ignore_sampling_config():
+    rng = np.random.default_rng(6)
+    logits = rng.normal(size=(5, 11)).astype(np.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    toks = sample_batched(keys, jnp.asarray(logits),
+                          jnp.zeros((5,), jnp.float32),
+                          jnp.full((5,), 2, jnp.int32),
+                          jnp.full((5,), 0.5, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.argmax(logits, axis=-1))
+
+
+def test_mixed_greedy_and_sampled_rows():
+    rng = np.random.default_rng(7)
+    logits = rng.normal(size=(4, 9)).astype(np.float32)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    temps = jnp.asarray([0.0, 1.0, 0.0, 1.0], jnp.float32)
+    toks = np.asarray(sample_batched(
+        keys, jnp.asarray(logits), temps,
+        jnp.zeros((4,), jnp.int32), jnp.ones((4,), jnp.float32)))
+    assert toks[0] == np.argmax(logits[0])
+    assert toks[2] == np.argmax(logits[2])
+    assert all(0 <= t < 9 for t in toks)
+
+
+def test_same_key_same_draw():
+    rng = np.random.default_rng(8)
+    row = rng.normal(size=13).astype(np.float32)
+    a = _draws(row, 1.0, 5, 0.9, n=16, seed=3)
+    b = _draws(row, 1.0, 5, 0.9, n=16, seed=3)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_legacy_sample_shim_greedy():
+    rng = np.random.default_rng(9)
+    logits = rng.normal(size=(3, 21)).astype(np.float32)
+    toks = np.asarray(sample(jax.random.PRNGKey(0),
+                             jnp.asarray(logits), 0.0))
+    np.testing.assert_array_equal(toks, np.argmax(logits, axis=-1))
+    # temperature path still yields valid in-range tokens
+    toks = np.asarray(sample(jax.random.PRNGKey(0),
+                             jnp.asarray(logits), 0.8))
+    assert toks.shape == (3,) and all(0 <= t < 21 for t in toks)

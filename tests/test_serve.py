@@ -1,8 +1,11 @@
-"""Serving engine: correctness vs standalone decode, continuous batching,
-slot reuse, quantized serving."""
+"""Serving engine (legacy ``Engine`` shim surface): correctness vs
+standalone decode, continuous batching, slot reuse, quantized serving.
+The request-centric API is covered in test_serve_lifecycle.py."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytestmark = pytest.mark.serve
 
 from repro.configs import get_config, scale_down
 from repro.models import decode_step, init_decode_state, init_params, forward

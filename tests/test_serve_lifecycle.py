@@ -1,0 +1,386 @@
+"""Request-centric serving API: lifecycle (QUEUED -> PREFILLING ->
+DECODING -> FINISHED), scheduler policies, cancellation, streaming, and
+per-request metrics."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, scale_down
+from repro.models import decode_step, init_decode_state, init_params
+from repro.serve import (Engine, FinishReason, LLMEngine, Metrics,
+                         Request, RequestStatus, SamplingParams)
+from repro.serve.scheduler import (FCFSScheduler, PriorityScheduler,
+                                   make_scheduler)
+
+pytestmark = pytest.mark.serve
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scale_down(get_config("mamba-130m"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _greedy_ref(params, cfg, prompt, n):
+    state = init_decode_state(cfg, 1, 64, cache_dtype=jnp.float32)
+    lg = None
+    for t in prompt:
+        lg, state = decode_step(params, cfg, state,
+                                jnp.asarray([t], jnp.int32))
+    out = []
+    for _ in range(n):
+        nt = int(jnp.argmax(lg[0]))
+        out.append(nt)
+        lg, state = decode_step(params, cfg, state,
+                                jnp.asarray([nt], jnp.int32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# acceptance: >= 3 concurrent requests, different SamplingParams, one
+# cancelled / one stop-token / one max_tokens, metrics JSON complete
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_three_concurrent_requests_with_metrics(setup):
+    cfg, params = setup
+    ref = _greedy_ref(params, cfg, [3, 1, 4], 8)
+    stop_tok = ref[2]                      # hits mid-decode at token 3
+
+    eng = LLMEngine(params, cfg, max_batch=3, max_len=64)
+    a = eng.add_request([3, 1, 4],
+                        SamplingParams(max_tokens=8,
+                                       stop_token_ids=(stop_tok,)),
+                        request_id="stopper")
+    b = eng.add_request([9], SamplingParams(temperature=0.9, top_k=6,
+                                            top_p=0.9, seed=5,
+                                            max_tokens=4),
+                        request_id="lengther")
+    c = eng.add_request([5, 5], SamplingParams(max_tokens=50),
+                        request_id="victim")
+    assert all(s.status is RequestStatus.QUEUED for s in (a, b, c))
+
+    eng.step()                             # all three admitted + 1 token
+    assert all(s.status is RequestStatus.DECODING for s in (a, b, c))
+    eng.step()
+    assert eng.cancel("victim")
+    assert c.status is RequestStatus.FINISHED
+    assert c.finish_reason is FinishReason.CANCELLED
+    assert len(c.token_ids) == 2           # kept what it produced
+    eng.run()
+
+    assert a.finish_reason is FinishReason.STOP
+    # stops at the FIRST occurrence of the stop token, inclusive
+    assert a.token_ids == ref[:ref.index(stop_tok) + 1]
+    assert b.finish_reason is FinishReason.LENGTH
+    assert len(b.token_ids) == 4
+    assert not eng.has_unfinished()
+
+    mj = eng.metrics_json()
+    for rid in ("stopper", "lengther", "victim"):
+        m = mj["requests"][rid]
+        assert m["ttft_ms"] is not None and m["ttft_ms"] >= 0
+        assert m["tpot_ms"] is not None and m["tpot_ms"] >= 0
+    assert mj["requests"]["stopper"]["finish_reason"] == "stop"
+    assert mj["requests"]["lengther"]["finish_reason"] == "length"
+    assert mj["requests"]["victim"]["finish_reason"] == "cancelled"
+    assert mj["engine"]["requests_finished"] == 3
+    assert mj["engine"]["requests_cancelled"] == 1
+    assert mj["engine"]["tokens_generated"] == len(a.token_ids) + 4 + 2
+    assert mj["engine"]["decode_steps"] == eng.counters["decode_steps"]
+    json.dumps(mj)                         # JSON-serializable throughout
+
+
+# ---------------------------------------------------------------------------
+# engine edge cases
+# ---------------------------------------------------------------------------
+
+def test_stop_token_hit_mid_decode(setup):
+    cfg, params = setup
+    ref = _greedy_ref(params, cfg, [5], 8)
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=32)
+    st = eng.add_request([5], SamplingParams(max_tokens=8,
+                                             stop_token_ids=(ref[3],)))
+    eng.run()
+    assert st.finish_reason is FinishReason.STOP
+    # first occurrence of the stop token, inclusive
+    assert st.token_ids == ref[:ref.index(ref[3]) + 1]
+
+
+def test_max_tokens_eviction_and_readmission(setup):
+    """One slot, two requests: the first finishes by length, frees the
+    slot, and the queued request is admitted and completes."""
+    cfg, params = setup
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=32)
+    first = eng.add_request([3, 1], SamplingParams(max_tokens=3))
+    second = eng.add_request([7], SamplingParams(max_tokens=2))
+    eng.step()
+    assert second.status is RequestStatus.QUEUED     # no free slot yet
+    assert eng.scheduler.queue_depth == 1
+    eng.run()
+    assert first.finish_reason is FinishReason.LENGTH
+    assert len(first.token_ids) == 3
+    assert second.finish_reason is FinishReason.LENGTH
+    assert len(second.token_ids) == 2
+    # queue time of the second request spans the first one's decode
+    mj = eng.metrics_json()
+    q2 = mj["requests"][second.request_id]["queue_time_ms"]
+    assert q2 is not None and q2 > 0
+
+
+def test_cancel_queued_vs_inflight_vs_unknown(setup):
+    cfg, params = setup
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=32)
+    flying = eng.add_request([2], SamplingParams(max_tokens=20),
+                             request_id="flying")
+    queued = eng.add_request([4], SamplingParams(max_tokens=20),
+                             request_id="queued")
+    eng.step()
+    # queued: dequeued without ever touching a slot
+    assert eng.cancel("queued")
+    assert queued.status is RequestStatus.FINISHED
+    assert queued.finish_reason is FinishReason.CANCELLED
+    assert queued.token_ids == [] and queued.scheduled_time is None
+    # in-flight: evicted at the step boundary, slot reusable
+    assert eng.cancel("flying")
+    assert flying.finish_reason is FinishReason.CANCELLED
+    assert len(flying.token_ids) == 1
+    assert eng.scheduler.live() == []
+    # unknown / already finished -> False, engine is idle
+    assert not eng.cancel("nope")
+    assert not eng.cancel("flying")
+    assert not eng.has_unfinished()
+    # the freed slot admits new work
+    fresh = eng.add_request([6], SamplingParams(max_tokens=2))
+    eng.run()
+    assert fresh.finish_reason is FinishReason.LENGTH
+
+
+def test_empty_queue_step_is_noop(setup):
+    cfg, params = setup
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=32)
+    assert eng.step() == []
+    assert eng.counters["decode_steps"] == 0
+    assert eng.metrics.decode_steps == 0
+    st = eng.add_request([3], SamplingParams(max_tokens=2))
+    eng.run()
+    steps_after = eng.counters["decode_steps"]
+    assert st.finished and steps_after == 2
+    assert eng.step() == []                # drained engine: still a no-op
+    assert eng.counters["decode_steps"] == steps_after
+
+
+def test_streaming_iterator_drives_engine(setup):
+    cfg, params = setup
+    ref = _greedy_ref(params, cfg, [3, 1, 4], 5)
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=32)
+    got_cb = []
+    st = eng.add_request([3, 1, 4], SamplingParams(max_tokens=5),
+                         on_token=got_cb.append)
+    pulled = list(st.stream)               # no explicit run(): pull pumps
+    assert pulled == ref == list(st.token_ids) == got_cb
+    assert st.finished and not eng.has_unfinished()
+    # drain() on a finished stream is empty, iteration stays exhausted
+    assert st.stream.drain() == []
+    assert list(st.stream) == []
+
+
+def test_reentrant_cancel_from_on_token_callback(setup):
+    """An on_token callback that cancels its own request mid-step must
+    not corrupt the slot table or double-release (the 'stop when you
+    see token X' pattern)."""
+    cfg, params = setup
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=32)
+    seen = []
+
+    def stop_after_two(tok):
+        seen.append(tok)
+        if len(seen) == 2:
+            eng.cancel("self-stop")
+
+    st = eng.add_request([3, 1], SamplingParams(max_tokens=20),
+                         request_id="self-stop",
+                         on_token=stop_after_two)
+    other = eng.add_request([5], SamplingParams(max_tokens=4))
+    eng.run()
+    assert st.finish_reason is FinishReason.CANCELLED
+    assert len(st.token_ids) == 2 == len(seen)
+    assert other.finish_reason is FinishReason.LENGTH
+    assert len(other.token_ids) == 4
+    assert not eng.has_unfinished()
+
+
+def test_greedy_request_with_topk_stays_on_fast_path(setup):
+    """Greedy rows ignore top-k/top-p, so they must not flip the core
+    onto the truncating sampler variant for the whole batch."""
+    cfg, params = setup
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=32)
+    st = eng.add_request([3], SamplingParams(temperature=0.0, top_k=50,
+                                             top_p=0.5, max_tokens=2))
+    eng.run()
+    assert st.finished and not eng.core._truncate
+
+
+def test_per_request_seed_reproducible_across_batch_mix(setup):
+    """A seeded request draws the same tokens whatever else the batch
+    is doing (per-slot keys, not a shared engine key)."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=1.0, top_k=12, seed=99, max_tokens=5)
+
+    def run_with(extra):
+        eng = LLMEngine(params, cfg, max_batch=2, max_len=32)
+        st = eng.add_request([2, 7], sp)
+        if extra:
+            eng.add_request([4], SamplingParams(temperature=0.5,
+                                                max_tokens=7))
+        eng.run()
+        return list(st.token_ids)
+
+    alone, mixed = run_with(False), run_with(True)
+    assert alone == mixed and len(alone) == 5
+
+
+# ---------------------------------------------------------------------------
+# scheduler policies
+# ---------------------------------------------------------------------------
+
+def test_fcfs_vs_priority_admission_order(setup):
+    cfg, params = setup
+
+    def finish_order(policy):
+        eng = LLMEngine(params, cfg, max_batch=1, max_len=32,
+                        scheduler=policy)
+        for name, prio in (("lo", 0), ("hi", 5), ("mid", 1)):
+            eng.add_request([3], SamplingParams(max_tokens=2),
+                            request_id=name, priority=prio)
+        order = []
+        while eng.has_unfinished():
+            order += [o.request_id for o in eng.step() if o.finished]
+        return order
+
+    assert finish_order("fcfs") == ["lo", "hi", "mid"]
+    # all three are queued before the first step, so the single slot
+    # is handed out purely by policy: hi (5) > mid (1) > lo (0)
+    assert finish_order("priority") == ["hi", "mid", "lo"]
+
+
+def test_make_scheduler_resolution():
+    assert isinstance(make_scheduler("fcfs", 2), FCFSScheduler)
+    assert isinstance(make_scheduler("priority", 2), PriorityScheduler)
+    assert isinstance(make_scheduler(None, 2), FCFSScheduler)
+    assert isinstance(make_scheduler(PriorityScheduler, 3),
+                      PriorityScheduler)
+    ready = FCFSScheduler(4)
+    assert make_scheduler(ready, 4) is ready
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler("sjf", 2)
+    with pytest.raises(ValueError, match="max_batch"):
+        make_scheduler(FCFSScheduler(2), 4)
+
+
+def test_priority_ties_break_fcfs():
+    sched = PriorityScheduler(1)
+    from repro.serve.request import RequestState
+    a = RequestState(Request([1], SamplingParams(), request_id="a",
+                             priority=2))
+    b = RequestState(Request([1], SamplingParams(), request_id="b",
+                             priority=2))
+    c = RequestState(Request([1], SamplingParams(), request_id="c",
+                             priority=7))
+    for s in (a, b, c):
+        sched.add(s)
+    assert sched._pick() is c
+    assert sched._pick() is a              # FCFS among equal priorities
+    assert sched._pick() is b
+
+
+# ---------------------------------------------------------------------------
+# metrics math (fake clock) + validation + legacy shim views
+# ---------------------------------------------------------------------------
+
+def test_metrics_math_with_fake_clock():
+    t = [0.0]
+    m = Metrics(clock=lambda: t[0])
+    m.on_submit("r", prompt_len=4)         # t=0: arrival
+    t[0] = 1.0
+    m.on_schedule("r")                     # queue_time = 1s
+    t[0] = 2.0
+    m.on_token("r")                        # ttft = 2s
+    for dt in (2.5, 3.0, 3.5):
+        t[0] = dt
+        m.on_token("r")                    # tpot = 0.5s over 3 gaps
+    m.on_finish("r", "length")
+    r = m.request("r")
+    assert r["queue_time_ms"] == pytest.approx(1000.0)
+    assert r["ttft_ms"] == pytest.approx(2000.0)
+    assert r["tpot_ms"] == pytest.approx(500.0)
+    assert r["generated"] == 4 and r["finish_reason"] == "length"
+    mj = m.to_json(extra_counters={"prefill_dispatches": 7})
+    assert mj["summary"]["ttft_ms"]["mean"] == pytest.approx(2000.0)
+    assert mj["engine"]["prefill_dispatches"] == 7
+    # tokens_per_s counts from first SUBMISSION (t=0) to the last
+    # token (t=3.5) -- queue + prefill wall time included by design
+    assert mj["engine"]["tokens_per_s"] == pytest.approx(4 / 3.5)
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError, match="max_tokens"):
+        SamplingParams(max_tokens=0)
+    with pytest.raises(ValueError, match="greedy"):
+        SamplingParams(greedy=False)
+    sp = SamplingParams(temperature=2.0, greedy=True)
+    assert sp.is_greedy and sp.effective_temperature == 0.0
+    import dataclasses
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        sp.temperature = 1.0               # frozen
+
+
+def test_request_legacy_and_new_styles_exclusive():
+    r = Request([1, 2], uid=3, max_new_tokens=5, temperature=0.5,
+                eos_id=9)
+    assert r.params.max_tokens == 5
+    assert r.params.temperature == 0.5
+    assert r.params.stop_token_ids == (9,)
+    with pytest.raises(ValueError, match="not both"):
+        Request([1], SamplingParams(), max_new_tokens=5)
+    with pytest.raises(ValueError, match="empty prompt"):
+        Request([])
+
+
+def test_legacy_engine_shim_views_and_duplicate_ids(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, max_batch=1, max_len=32)
+    r0 = Request(uid=0, prompt=[3], max_new_tokens=2)
+    r1 = Request(uid=1, prompt=[5], max_new_tokens=2)
+    eng.submit(r0)
+    eng.submit(r1)
+    assert eng.queue == [r0, r1] and eng.slots == [None]
+    eng.step()
+    assert eng.slots == [r0] and eng.queue == [r1]
+    eng.run()
+    assert r0.done and r1.done
+    assert eng.slots == [None] and eng.queue == []
+    # same uid twice is fine (identity comes from the global counter)
+    eng.submit(Request(uid=0, prompt=[4], max_new_tokens=1))
+    eng.run()
+    # explicit duplicate request_ids are rejected
+    eng2 = LLMEngine(params, cfg, max_batch=1, max_len=32)
+    eng2.add_request([1], SamplingParams(max_tokens=1), request_id="x")
+    with pytest.raises(ValueError, match="duplicate"):
+        eng2.add_request([2], SamplingParams(max_tokens=1),
+                         request_id="x")
+    # a ready Request plus separate params/priority is ambiguous
+    with pytest.raises(ValueError, match="Request itself"):
+        eng2.add_request(Request([1, 2]), SamplingParams(max_tokens=1))
+    with pytest.raises(ValueError, match="Request itself"):
+        eng2.add_request(Request([1, 2]), priority=3)
