@@ -1,7 +1,9 @@
 """PR perf trajectory: decode TPOT (fp vs quamba-qdq vs quamba+kernels),
-chunked-prefill throughput/dispatch counts, bytes moved, and the
+chunked-prefill throughput/dispatch counts, bytes moved, the
 request-lifecycle serving metrics (per-request TTFT/TPOT/queue-time,
-queue-depth and occupancy series through the scheduler).
+queue-depth and occupancy series through the scheduler), and the
+shared-prefix prefix-cache workload (``serve.prefix_cache``: hit-path
+vs miss-path TTFT, hit rate, bytes).
 
 ``python -m benchmarks.run pr_speed`` writes the results to
 ``BENCH_PR.json`` at the repo root so future PRs have a baseline to
@@ -70,6 +72,41 @@ def _engine_dispatches(cfg, params, qctx) -> dict:
         "prefill_chunk": PREFILL_CHUNK,
         "prefill_dispatches": eng.counters["prefill_dispatches"],
         "per_token_dispatches_would_be": PREFILL_LEN - 1,
+    }
+
+
+def _prefix_cache_workload(cfg, params, qctx, smoke: bool) -> dict:
+    """Shared-prefix serving: one cold request pays the prefill and
+    fills the ``StateCache``; the following requests reuse the same
+    prompt and restore the cached SSM state instead of prefilling.
+    The hit/miss TTFT split is the cache's measurable win (miss-side
+    TTFT includes the prefill compiles a cold engine pays either way).
+    """
+    shared_len = 96 if smoke else 192
+    chunk = 32
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=shared_len + 24,
+                    qctx=qctx, prefill_chunk=chunk, prefix_cache_mb=64)
+    shared = [(5 * j + 3) % cfg.vocab_size for j in range(shared_len)]
+    prompt = shared + [7, 11]
+    n_hot = 3 if smoke else 6
+    eng.add_request(list(prompt), SamplingParams(max_tokens=4))
+    eng.run()                       # cold: full prefill, cache filled
+    for _ in range(n_hot):          # hot: full hits, zero prefill
+        eng.add_request(list(prompt), SamplingParams(max_tokens=4))
+    eng.run()
+    pc = eng.metrics_json()["prefix_cache"]
+    return {
+        "shared_prefix_len": shared_len,
+        "prefill_chunk": chunk,
+        "requests": 1 + n_hot,
+        "hit_rate": pc["hit_rate"],
+        "full_hit_rate": pc["full_hit_rate"],
+        "tokens_reused": pc["tokens_reused"],
+        "bytes_in_use": pc["bytes_in_use"],
+        "entries": pc["entries"],
+        "prefix_restores": eng.counters["prefix_restores"],
+        "ttft_ms_hit": pc["ttft_ms_hit"],
+        "ttft_ms_miss": pc["ttft_ms_miss"],
     }
 
 
@@ -145,6 +182,17 @@ def run() -> dict:
                 * 1e3,  # stats are ms; emit expects us
                 f"mean TTFT over {out['serve']['requests']} requests "
                 f"(queue depth max {out['serve']['queue_depth_max']})")
+
+    out["serve"]["prefix_cache"] = _prefix_cache_workload(
+        cfg, qm.params, qm.qctx(), smoke)
+    pc = out["serve"]["prefix_cache"]
+    common.emit(
+        "pr_speed/serve_prefix_cache_ttft_hit",
+        pc["ttft_ms_hit"]["mean"] * 1e3,
+        f"hit {pc['ttft_ms_hit']['mean']:.1f} ms vs miss "
+        f"{pc['ttft_ms_miss']['mean']:.1f} ms over a "
+        f"{pc['shared_prefix_len']}-token shared prefix "
+        f"(hit rate {pc['hit_rate']:.2f})")
 
     # bytes moved per decode step: weights read once per token (the
     # memory-bound regime the paper's 1.7x rides on) + recurrent state

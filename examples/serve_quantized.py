@@ -30,8 +30,11 @@ def main() -> None:
                     choices=["fp", "quamba", "quamba-kernels", "static",
                              "dynamic"])
     ap.add_argument("--prefill-chunk", type=int, default=128)
-    ap.add_argument("--policy", default="fcfs",
-                    choices=["fcfs", "priority"])
+    ap.add_argument("--policy", default=None,
+                    choices=["fcfs", "priority", "cache-aware"])
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="enable prefix state caching (requests share "
+                         "a 24-token prompt head to exercise it)")
     args = ap.parse_args()
 
     cfg, params = trained_model()
@@ -42,7 +45,10 @@ def main() -> None:
     # chunks of --prefill-chunk (one dispatch per chunk, not per token)
     eng = model.engine(max_batch=4, max_len=256,
                        prefill_chunk=args.prefill_chunk,
-                       scheduler=args.policy)
+                       scheduler=args.policy,
+                       prefix_cache_mb=(args.prefix_cache_mb or None))
+    shared = ([(3 * j + 1) % cfg.vocab_size for j in range(24)]
+              if args.prefix_cache_mb else [])
 
     # a heterogeneous batch: greedy, sampled (top-k/top-p), pinned seed
     def sp_for(i: int) -> SamplingParams:
@@ -55,7 +61,7 @@ def main() -> None:
                               max_tokens=args.max_new)
 
     states = [eng.add_request(
-        [(7 * i + j) % cfg.vocab_size for j in range(2 + i % 5)],
+        shared + [(7 * i + j) % cfg.vocab_size for j in range(2 + i % 5)],
         sp_for(i), request_id=f"demo-{i}", priority=i % 3)
         for i in range(args.requests)]
 
@@ -83,6 +89,11 @@ def main() -> None:
           f"TPOT mean {e['tpot_ms']['mean']:.1f} ms  "
           f"queue mean {e['queue_time_ms']['mean']:.1f} ms  "
           f"throughput {mj['engine']['tokens_per_s']:.1f} tok/s")
+    pc = mj.get("prefix_cache")
+    if pc:
+        print(f"prefix cache: hit rate {pc['hit_rate']}, "
+              f"{pc['tokens_reused']} tokens reused, "
+              f"{pc['entries']} entries / {pc['bytes_in_use']} B")
     for st in states[:3]:
         m = mj["requests"][st.request_id]
         ttft = m["ttft_ms"]

@@ -19,6 +19,13 @@ scheduler's request-latency behavior):
   * ``serve.ttft_ms.mean``            -- lower is better (per-request
     time-to-first-token through the scheduler; covers admission +
     prefill latency, not just the decode inner loop)
+  * ``serve.prefix_cache.ttft_ms_hit.mean`` -- lower is better (TTFT
+    of requests whose prompt prefix was restored from the state cache;
+    the serving win prefix caching exists for).  This is a ~15 ms mean
+    over few samples on shared runners, so it gets a loose 100%
+    threshold: the failure mode it guards against -- the cache
+    silently stops hitting and requests re-prefill -- is a ~100x
+    regression, far above any timer wobble.
 
 Forward compatibility is deliberate: the gate reads ONLY the dotted
 keys above and ignores everything else in either file, so a newer
@@ -44,6 +51,7 @@ GATED = (
     ("prefill_chunked_tokens_per_s", True, None),
     ("engine_prefill.prefill_dispatches", False, 0.0),
     ("serve.ttft_ms.mean", False, None),
+    ("serve.prefix_cache.ttft_ms_hit.mean", False, 1.0),
 )
 
 

@@ -67,8 +67,12 @@ class QuantizedModel:
 
         The spec's ``quantize_kv_cache`` flag flows through: attention KV
         caches are stored int8 with per-entry scales when it is set.
-        The pre-PR-4 ``submit(Request)`` surface remains available via
-        ``repro.serve.Engine`` (deprecated shim).
+        ``engine(prefix_cache_mb=64)`` turns on prefix state caching:
+        prefilled prompt prefixes are snapshotted (in the artifact's
+        own state layout -- e.g. int8 KV entries under
+        ``quantize_kv_cache``) and later
+        requests sharing a prefix restore instead of re-prefilling; see
+        ``repro.serve.cache`` and docs/serving.md.
         """
         from repro.serve.engine import LLMEngine  # local: avoid cycle
         return LLMEngine(self.params, self.cfg, qctx=self.qctx(), **kw)

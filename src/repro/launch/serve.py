@@ -6,6 +6,12 @@
 Requests go through the request-centric API (``LLMEngine.add_request``
 with per-request ``SamplingParams``); per-request TTFT/TPOT/queue-time
 and engine occupancy land in the metrics JSON.
+
+``--prefix-cache-mb N`` enables prefix state caching: every request
+here shares the same few-shot-style prompt head, so after the first
+prefill the remaining requests restore the cached SSM state instead of
+re-prefilling (watch ``prefix_cache.hit_rate`` and the hit/miss TTFT
+split in the printed summary).
 """
 from __future__ import annotations
 
@@ -28,11 +34,19 @@ def main() -> None:
     ap.add_argument("--quant", default="quamba")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--policy", default="fcfs",
-                    choices=["fcfs", "priority"])
+    ap.add_argument("--policy", default=None,
+                    choices=["fcfs", "priority", "cache-aware"],
+                    help="scheduler policy (default: fcfs, or "
+                         "cache-aware when --prefix-cache-mb is set)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="prefix state cache byte budget in MiB "
+                         "(0 disables)")
+    ap.add_argument("--shared-prefix", type=int, default=48,
+                    help="length of the shared prompt head the demo "
+                         "requests reuse (exercises the prefix cache)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the per-request metrics JSON here")
     args = ap.parse_args()
@@ -45,24 +59,42 @@ def main() -> None:
     calib = eval_batches(cfg.vocab_size, 4, 64, 4, seed=777)
     model = api.Quantizer(cfg, args.quant).calibrate(calib) \
         .quantize(params)
-    eng = model.engine(max_batch=4, max_len=128, scheduler=args.policy)
+    eng = model.engine(
+        max_batch=4, max_len=args.shared_prefix + args.max_new + 16,
+        scheduler=args.policy,
+        prefix_cache_mb=(args.prefix_cache_mb or None))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, max_tokens=args.max_new)
+    shared = [(7 * j + 1) % cfg.vocab_size
+              for j in range(args.shared_prefix)]
     for i in range(args.requests):
-        # odd requests get a priority bump so --policy priority is visible
-        eng.add_request([1 + i, 2, 3], sp, priority=i % 2)
+        # every request reuses the shared head (a system prompt /
+        # few-shot template); odd requests get a priority bump so
+        # --policy priority is visible
+        eng.add_request(shared + [1 + i, 2, 3], sp, priority=i % 2)
     t0 = time.time()
     eng.run()
     mj = eng.metrics_json()
     ttft = mj["summary"]["ttft_ms"]
     print(f"{args.requests} requests served in {time.time()-t0:.2f}s "
-          f"({args.quant}, {args.policy})")
+          f"({args.quant}, {type(eng.scheduler).__name__})")
     if ttft:
         print(f"TTFT mean {ttft['mean']:.1f} ms, p95 {ttft['p95']:.1f} ms;"
               f" {mj['engine']['tokens_per_s']:.1f} tok/s, occupancy "
               f"{mj['engine']['occupancy_mean']:.2f}")
+    pc = mj.get("prefix_cache")
+    if pc:
+        hit = pc["ttft_ms_hit"] or {}
+        miss = pc["ttft_ms_miss"] or {}
+        print(f"prefix cache: hit rate {pc['hit_rate']}, "
+              f"{pc['tokens_reused']} tokens reused, "
+              f"{pc['bytes_in_use'] / 1e6:.2f} MB in "
+              f"{pc['entries']} entries; TTFT hit "
+              f"{hit.get('mean', float('nan')):.1f} ms vs miss "
+              f"{miss.get('mean', float('nan')):.1f} ms")
     if args.metrics_out:
-        eng.metrics.dump(args.metrics_out, eng.counters)
+        eng.metrics.dump(args.metrics_out, eng.counters,
+                         pc if pc else None)
         print(f"metrics -> {args.metrics_out}")
 
 

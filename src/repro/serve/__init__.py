@@ -1,19 +1,23 @@
+from repro.serve.cache import CacheEntry, StateCache
 from repro.serve.core import EngineCore
-from repro.serve.engine import Engine, LLMEngine, generate
+from repro.serve.engine import LLMEngine, generate
 from repro.serve.metrics import Metrics, RequestMetrics
 from repro.serve.params import SamplingParams
 from repro.serve.request import (FinishReason, Request, RequestOutput,
                                  RequestState, RequestStatus,
                                  RequestStream)
 from repro.serve.sampler import apply_top_k_top_p, sample, sample_batched
-from repro.serve.scheduler import (FCFSScheduler, PriorityScheduler,
-                                   Scheduler, make_scheduler)
+from repro.serve.scheduler import (CacheAwareScheduler, FCFSScheduler,
+                                   PriorityScheduler, Scheduler,
+                                   make_scheduler)
 
 __all__ = [
-    "Engine", "EngineCore", "LLMEngine", "generate",
+    "CacheEntry", "StateCache",
+    "EngineCore", "LLMEngine", "generate",
     "Metrics", "RequestMetrics", "SamplingParams",
     "FinishReason", "Request", "RequestOutput", "RequestState",
     "RequestStatus", "RequestStream",
     "apply_top_k_top_p", "sample", "sample_batched",
-    "FCFSScheduler", "PriorityScheduler", "Scheduler", "make_scheduler",
+    "CacheAwareScheduler", "FCFSScheduler", "PriorityScheduler",
+    "Scheduler", "make_scheduler",
 ]

@@ -1,0 +1,222 @@
+"""Prefix state caching: prompt prefixes -> per-slot decode state.
+
+Selective-scan models carry O(1) recurrent state per sequence (SSM
+hidden state + conv taps + position), so the ENTIRE effect of a prompt
+prefix on future decoding is one small state tree -- unlike a KV cache
+it does not grow with the prefix length.  ``StateCache`` exploits this:
+after a slot prefills a prompt, the engine snapshots the slot's state
+under the consumed token prefix; a later request whose prompt starts
+with a cached prefix restores the snapshot (one device-side state copy)
+and skips the matched part of its prefill entirely.  A shared system
+prompt or few-shot template turns from O(prefix) prefill dispatches
+into a dictionary lookup.
+
+Design:
+
+* **Keys** are token prefixes, indexed by ``(length, rolling hash)``.
+  Lookup computes the prompt's rolling prefix hashes once (O(n)) and
+  probes cached lengths longest-first, so the match is the LONGEST
+  cached prefix; the stored token tuple is compared on every probe, so
+  a hash collision can never restore the wrong state.
+* **Values** are batch-1 decode-state trees from ``slice_slot`` --
+  int8 or fp leaves exactly as the artifact's backend laid them out.
+  jax arrays are immutable, so a snapshot is a tree of references, not
+  a copy; eviction just drops the references.
+* **Eviction** is LRU under a byte budget (plus an entry-count cap).
+  ``lookup`` refreshes recency; inserting past the budget evicts the
+  least recently used entries.
+* **Metrics**: hits (full/partial), misses, tokens reused, bytes in
+  use, insert/evict counts -- exported via :meth:`stats` into the
+  engine's ``metrics_json()['prefix_cache']`` section.
+
+The cache itself is model-agnostic (it never inspects the trees beyond
+byte accounting); correctness of restore-then-resume is the engine's
+contract: state after ``k`` prompt tokens is identical however those
+``k`` tokens were chunked (sequential-scan prefill, chunk-invariant
+scales -- see ``repro.quant.recipe.prefill_chunk_safe``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# budget accounting shares the roofline model's leaf-bytes definition
+# (int8 leaves count 1 byte/elem, so an int8-KV snapshot is accounted
+# at its real footprint)
+from repro.dist.roofline import count_bytes as tree_nbytes
+
+# polynomial rolling hash: h_k = (h_{k-1} * BASE + tok + 1) mod MOD.
+# MOD is a Mersenne prime (2^61 - 1) so collisions across equal-length
+# prefixes are ~2^-61; equality of the stored token tuple is still
+# checked on every probe, so collisions cost a miss, never wrong state.
+_HASH_BASE = 1_000_003
+_HASH_MOD = (1 << 61) - 1
+
+
+def rolling_hashes(tokens: Sequence[int]) -> List[int]:
+    """``out[k]`` = hash of ``tokens[:k]`` (``out[0]`` = empty prefix)."""
+    out = [0]
+    h = 0
+    for t in tokens:
+        h = (h * _HASH_BASE + int(t) + 1) % _HASH_MOD
+        out.append(h)
+    return out
+
+
+def prefix_hash(tokens: Sequence[int]) -> int:
+    return rolling_hashes(tokens)[-1]
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One cached prefix: the tokens it covers and the state after them."""
+
+    tokens: Tuple[int, ...]
+    state: Dict                 # batch-1 decode-state tree (device refs)
+    nbytes: int
+    hits: int = 0
+
+
+class StateCache:
+    """LRU prefix -> decode-state cache under a byte budget.
+
+    ``byte_budget`` bounds the summed leaf bytes of all entries; 0 (or
+    negative) disables insertion entirely (every lookup misses), which
+    lets callers keep one code path for cache-on/cache-off.
+    """
+
+    def __init__(self, byte_budget: int, max_entries: int = 1024):
+        self.byte_budget = int(byte_budget)
+        self.max_entries = int(max_entries)
+        self._entries: "OrderedDict[Tuple[int, int], CacheEntry]" = \
+            OrderedDict()
+        self._len_counts: Dict[int, int] = {}   # prefix length -> #entries
+        self.bytes_in_use = 0
+        # counters (exported via stats())
+        self.hits = 0               # full hits: whole prompt head cached
+        self.partial_hits = 0       # matched a shorter prefix
+        self.misses = 0
+        self.inserted = 0
+        self.evicted = 0
+        self.rejected = 0           # single entry larger than the budget
+        self.tokens_reused = 0      # prefill tokens skipped via restores
+
+    # -- queries ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, tokens: Sequence[int]) -> bool:
+        key = (len(tokens), prefix_hash(tokens))
+        e = self._entries.get(key)
+        return e is not None and e.tokens == tuple(tokens)
+
+    def _candidate_lengths(self, limit: int) -> List[int]:
+        return sorted((n for n in self._len_counts if n <= limit),
+                      reverse=True)
+
+    def peek_len(self, prompt: Sequence[int]) -> int:
+        """Length of the longest cached prefix usable for ``prompt``
+        (at most ``len(prompt) - 1`` -- the last prompt token is always
+        fed as the first decode input).  No counters, no LRU bump: the
+        scheduler calls this to order admissions without perturbing the
+        cache."""
+        e = self._match(prompt)
+        return len(e.tokens) if e is not None else 0
+
+    def _match(self, prompt: Sequence[int]) -> Optional[CacheEntry]:
+        limit = len(prompt) - 1
+        if limit <= 0 or not self._entries:
+            return None
+        hs = rolling_hashes(prompt[:limit])
+        for n in self._candidate_lengths(limit):
+            e = self._entries.get((n, hs[n]))
+            if e is not None and e.tokens == tuple(prompt[:n]):
+                return e
+        return None
+
+    def lookup(self, prompt: Sequence[int]) -> Optional[CacheEntry]:
+        """Longest-prefix-match for ``prompt`` with accounting: bumps
+        LRU recency and the hit/miss counters.  Returns the entry (its
+        ``.tokens`` tell the caller how much prefill to skip) or None.
+        A *full* hit covers ``len(prompt) - 1`` tokens: the request can
+        go straight to decoding."""
+        e = self._match(prompt)
+        if e is None:
+            self.misses += 1
+            return None
+        key = (len(e.tokens), prefix_hash(e.tokens))
+        self._entries.move_to_end(key)
+        e.hits += 1
+        self.tokens_reused += len(e.tokens)
+        if len(e.tokens) == len(prompt) - 1:
+            self.hits += 1
+        else:
+            self.partial_hits += 1
+        return e
+
+    # -- mutation ---------------------------------------------------------
+    def insert(self, tokens: Sequence[int], state: Dict) -> bool:
+        """Cache ``state`` as the decode state after ``tokens``.
+        Refreshes recency if the prefix is already cached.  Returns
+        True when a NEW entry was stored."""
+        tokens = tuple(int(t) for t in tokens)
+        if not tokens or self.byte_budget <= 0:
+            return False
+        key = (len(tokens), prefix_hash(tokens))
+        prev = self._entries.get(key)
+        if prev is not None and prev.tokens == tokens:
+            self._entries.move_to_end(key)
+            return False
+        nbytes = tree_nbytes(state)
+        if nbytes > self.byte_budget:
+            self.rejected += 1
+            return False
+        if prev is not None:        # same-length hash collision: replace
+            self._drop(key)
+        self._entries[key] = CacheEntry(tokens=tokens, state=state,
+                                        nbytes=nbytes)
+        self._len_counts[len(tokens)] = \
+            self._len_counts.get(len(tokens), 0) + 1
+        self.bytes_in_use += nbytes
+        self.inserted += 1
+        while (self.bytes_in_use > self.byte_budget
+               or len(self._entries) > self.max_entries):
+            oldest = next(iter(self._entries))
+            self._drop(oldest)
+            self.evicted += 1
+        return True
+
+    def _drop(self, key: Tuple[int, int]) -> None:
+        e = self._entries.pop(key)
+        self.bytes_in_use -= e.nbytes
+        n = len(e.tokens)
+        self._len_counts[n] -= 1
+        if not self._len_counts[n]:
+            del self._len_counts[n]
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._len_counts.clear()
+        self.bytes_in_use = 0
+
+    # -- metrics ----------------------------------------------------------
+    def stats(self) -> Dict:
+        """JSON-safe counters (feeds ``metrics_json()['prefix_cache']``
+        and the ``serve.prefix_cache`` section of BENCH_PR.json)."""
+        lookups = self.hits + self.partial_hits + self.misses
+        return {
+            "entries": len(self._entries),
+            "bytes_in_use": self.bytes_in_use,
+            "byte_budget": self.byte_budget,
+            "hits": self.hits,
+            "partial_hits": self.partial_hits,
+            "misses": self.misses,
+            "hit_rate": ((self.hits + self.partial_hits) / lookups
+                         if lookups else None),
+            "full_hit_rate": (self.hits / lookups if lookups else None),
+            "tokens_reused": self.tokens_reused,
+            "inserted": self.inserted,
+            "evicted": self.evicted,
+            "rejected": self.rejected,
+        }

@@ -120,7 +120,8 @@ class EngineCore:
         self._keys_dev = jax.random.split(self._base_key, max_batch)
         # dispatch accounting (benchmarks / tests)
         self.counters: Dict[str, int] = {"prefill_dispatches": 0,
-                                         "decode_steps": 0}
+                                         "decode_steps": 0,
+                                         "prefix_restores": 0}
 
     # -- jitted cores -----------------------------------------------------
     def _one_step(self, params, state, tokens, keys, temps, top_k, top_p,
@@ -154,13 +155,27 @@ class EngineCore:
         return sizes
 
     def seat(self, i: int, prompt: Sequence[int], sp: SamplingParams,
-             salt: int) -> None:
+             salt: int, *, prefix_state: Optional[Dict] = None,
+             prefix_len: int = 0, on_prefix=None) -> None:
         """Reset slot ``i``, install ``sp``'s sampling arrays and PRNG
         key, and prefill the prompt (leaving the last prompt token as
         the slot's next decode input).  ``salt`` derives the slot key
         when ``sp.seed`` is None (the engine passes a monotonically
-        increasing admission index, so streams stay deterministic)."""
-        self.state = reset_slot(self.cfg, self.state, i)
+        increasing admission index, so streams stay deterministic).
+
+        Prefix-cache integration (``repro.serve.cache``):
+        ``prefix_state`` is a batch-1 state tree covering
+        ``prompt[:prefix_len]`` -- it is restored with one device-side
+        ``write_slot`` and prefill resumes from ``prefix_len`` (a full
+        hit, ``prefix_len == len(prompt) - 1``, skips prefill
+        entirely).  ``on_prefix(consumed, slot_state)`` is called with
+        the batch-1 state after each prefill chunk so the engine can
+        snapshot intermediate prefixes without an extra copy."""
+        if prefix_state is not None:
+            self.restore_slot(i, prefix_state)
+        else:
+            prefix_len = 0
+            self.state = reset_slot(self.cfg, self.state, i)
         self._temps_host[i] = sp.effective_temperature
         # greedy rows take argmax whatever the masks say -- store the
         # disabled values so a greedy request never flips the batch
@@ -171,7 +186,19 @@ class EngineCore:
                else jax.random.fold_in(self._base_key, salt))
         self._keys_dev = self._keys_dev.at[i].set(key)
         self._dirty = True
-        self._prefill(i, prompt)
+        self._prefill(i, prompt, start=prefix_len, on_prefix=on_prefix)
+
+    # -- prefix-cache state movement (device-side; jax arrays are
+    # immutable so a snapshot is a tree of references, not a copy) ------
+    def snapshot_slot(self, i: int) -> Dict:
+        """Slot ``i``'s decode state as a standalone batch-1 tree."""
+        return slice_slot(self.cfg, self.state, i)
+
+    def restore_slot(self, i: int, slot_state: Dict) -> None:
+        """Overwrite slot ``i`` with a ``snapshot_slot``/prefill tree
+        (covers every state leaf incl. ``pos``, so no reset needed)."""
+        self.state = write_slot(self.cfg, self.state, slot_state, i)
+        self.counters["prefix_restores"] += 1
 
     def clear_slot(self, i: int) -> None:
         """Reset slot ``i``'s sampling arrays after eviction (its state
@@ -185,9 +212,17 @@ class EngineCore:
         self._next_host[i] = tok
         self._dirty = True
 
-    def _prefill(self, i: int, prompt: Sequence[int]) -> None:
-        """Advance slot ``i``'s state over ``prompt[:-1]``."""
-        toks = list(prompt[:-1])
+    def _prefill(self, i: int, prompt: Sequence[int], start: int = 0,
+                 on_prefix=None) -> None:
+        """Advance slot ``i``'s state over ``prompt[start:-1]``.
+
+        ``on_prefix(consumed, slot_state)``: after each chunk (and once
+        at the end of the per-token path) reports the batch-1 state
+        covering ``prompt[:consumed]`` -- the prefix-cache snapshot
+        hook.  ``consumed`` is an absolute prompt offset, so a resumed
+        prefill (``start > 0``) extends the cached prefix chain."""
+        toks = list(prompt[start:-1])
+        consumed = start
         if toks and self._prefill_fn is not None:
             # chunked sequence prefill on a batch-1 slice of the state:
             # O(num_chunks) dispatches, none of them full-batch
@@ -199,8 +234,11 @@ class EngineCore:
                 slot_state = self._prefill_fn(self.params, slot_state,
                                               chunk)
                 self.counters["prefill_dispatches"] += 1
+                consumed = start + c0
+                if on_prefix is not None:
+                    on_prefix(consumed, slot_state)
             self.state = write_slot(self.cfg, self.state, slot_state, i)
-        else:
+        elif toks:
             # fallback: per-token decode dispatches (attention families);
             # the sampled token is discarded -- only slot i's state moves
             for t in toks:
@@ -214,6 +252,11 @@ class EngineCore:
                 self.counters["prefill_dispatches"] += 1
                 self.state = merge_slot(self.cfg, self.state, new_state,
                                         i)
+                consumed += 1
+            if on_prefix is not None:
+                # one snapshot at the full prefix (slicing per token
+                # would double the host work of the fallback path)
+                on_prefix(consumed, slice_slot(self.cfg, self.state, i))
         self._set_next(i, prompt[-1])
 
     # -- decode -----------------------------------------------------------

@@ -7,6 +7,7 @@ Layering::
                                            admission/eviction/cancel
       EngineCore  (repro.serve.core)       WHAT runs: device state,
                                            prefill/decode dispatches
+      StateCache  (repro.serve.cache)      prompt prefixes -> slot state
       Metrics     (repro.serve.metrics)    TTFT/TPOT/queue/occupancy
 
 Requests enter via ``add_request(prompt, SamplingParams(...))`` and move
@@ -17,10 +18,12 @@ immediately so queued requests start without waiting for the batch to
 drain.  Tokens stream incrementally through each request's
 ``RequestStream`` (iterating a stream pumps the engine).
 
-``Engine`` is the deprecated pre-PR-4 surface (``submit(Request)`` +
-engine-wide temperature), kept as a thin shim over ``LLMEngine`` so
-existing call sites -- including the dist DP-slot sharding path -- work
-unchanged.  Intent: remove it once nothing in-repo imports it.
+``prefix_cache_mb`` enables prefix state caching: prefilled prompt
+prefixes are snapshotted (O(1) recurrent state per sequence -- the SSM
+advantage) and requests sharing a cached prefix restore it instead of
+re-prefilling; a full hit admits straight to DECODING with zero prefill
+dispatches.  The default scheduler becomes cache-aware (hits first)
+when the cache is on; pass ``scheduler=`` explicitly to override.
 """
 from __future__ import annotations
 
@@ -28,6 +31,7 @@ import time
 from typing import Dict, List, Optional, Sequence, Union
 
 from repro.configs.base import ModelConfig
+from repro.serve.cache import StateCache
 from repro.serve.core import EngineCore
 from repro.serve.metrics import Metrics, REQUEST_CAP, evict_finished
 from repro.serve.params import SamplingParams
@@ -42,12 +46,20 @@ class LLMEngine:
                  max_len: int = 2048, qctx=None, seed: int = 0,
                  cache_dtype=None, prefill_chunk: int = 128,
                  shard: Optional[bool] = None,
-                 scheduler: Union[str, Scheduler, None] = "fcfs",
+                 scheduler: Union[str, Scheduler, None] = None,
+                 prefix_cache_mb: Optional[float] = None,
                  clock=time.monotonic):
         self.core = EngineCore(params, cfg, max_batch=max_batch,
                                max_len=max_len, qctx=qctx, seed=seed,
                                cache_dtype=cache_dtype,
                                prefill_chunk=prefill_chunk, shard=shard)
+        self.prefix_cache: Optional[StateCache] = None
+        if prefix_cache_mb is not None and prefix_cache_mb > 0:
+            self.prefix_cache = StateCache(
+                byte_budget=int(prefix_cache_mb * (1 << 20)))
+        if scheduler is None:
+            scheduler = ("cache-aware" if self.prefix_cache is not None
+                         else "fcfs")
         self.scheduler = make_scheduler(scheduler, max_batch)
         self.metrics = Metrics(clock=clock)
         self._states: Dict[str, RequestState] = {}
@@ -109,6 +121,10 @@ class LLMEngine:
         state = RequestState(request=req)
         state.stream = RequestStream(req.request_id, pump=self._pump,
                                      on_token=on_token)
+        if self.prefix_cache is not None:
+            # admission-ordering hint only (no counters, no LRU bump);
+            # the authoritative match happens at seat time
+            state.cached_len = self.prefix_cache.peek_len(req.prompt)
         self._states[req.request_id] = state
         self.scheduler.add(state)
         state.arrival_time = self.metrics.on_submit(
@@ -152,11 +168,28 @@ class LLMEngine:
         nothing queued and nothing live this is a strict no-op: no
         dispatch, no counters, no metrics samples."""
         for slot, state in self.scheduler.schedule():
+            prompt = state.request.prompt
+            entry = None
+            on_prefix = None
+            if self.prefix_cache is not None:
+                entry = self.prefix_cache.lookup(prompt)
+
+                def on_prefix(consumed, tree, _p=tuple(prompt)):
+                    self.prefix_cache.insert(_p[:consumed], tree)
+            k = len(entry.tokens) if entry is not None else 0
+            state.cached_len = k
+            # seat() is synchronous, so PREFILLING is never observable
+            # from outside this loop; a full hit (whole prompt head
+            # cached, k == len(prompt) - 1) restores the snapshot and
+            # reaches DECODING with zero prefill dispatches
             state.status = RequestStatus.PREFILLING
             state.scheduled_time = self.metrics.on_schedule(
-                state.request_id)
-            self.core.seat(slot, state.request.prompt,
-                           state.request.params, self._admitted)
+                state.request_id, cached_tokens=k)
+            self.core.seat(slot, prompt, state.request.params,
+                           self._admitted,
+                           prefix_state=(entry.state if entry is not None
+                                         else None),
+                           prefix_len=k, on_prefix=on_prefix)
             self._admitted += 1
             state.status = RequestStatus.DECODING
         live = self.scheduler.live()
@@ -213,33 +246,13 @@ class LLMEngine:
     # -- metrics -----------------------------------------------------------
     def metrics_json(self) -> Dict:
         """Per-request TTFT/TPOT/queue-time + engine tokens/s,
-        occupancy, queue-depth series, and dispatch counts as one
+        occupancy, queue-depth series, dispatch counts, and (when the
+        prefix cache is on) its hit-rate/bytes/TTFT-split, as one
         JSON-safe dict."""
-        return self.metrics.to_json(extra_counters=self.core.counters)
-
-
-class Engine(LLMEngine):
-    """Deprecated pre-PR-4 surface: ``submit(Request)`` + ``run()``.
-
-    Thin shim over ``LLMEngine`` -- legacy ``Request`` fields
-    (``max_new_tokens``/``temperature``/``eos_id``) become a
-    ``SamplingParams`` in ``Request.__post_init__``, and the mutable
-    ``Request.output``/``.done`` mirrors are the same objects the new
-    lifecycle writes, so nothing needs syncing.  New code should use
-    ``add_request`` / ``SamplingParams`` / streams directly.
-    """
-
-    def submit(self, req: Request) -> RequestState:
-        return self.add_request(req)
-
-    @property
-    def queue(self) -> List[Request]:
-        return [s.request for s in self.scheduler.waiting]
-
-    @property
-    def slots(self) -> List[Optional[Request]]:
-        return [None if s is None else s.request
-                for s in self.scheduler.slots]
+        return self.metrics.to_json(
+            extra_counters=self.core.counters,
+            prefix_cache=(self.prefix_cache.stats()
+                          if self.prefix_cache is not None else None))
 
 
 def generate(params, cfg: ModelConfig, prompts: Sequence[Sequence[int]],

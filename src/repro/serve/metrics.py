@@ -51,7 +51,8 @@ class RequestMetrics:
 
     prompt_len: int = 0
     priority: int = 0
-    arrival_time: float = 0.0
+    cached_tokens: int = 0        # prompt tokens restored from the
+    arrival_time: float = 0.0     # prefix cache instead of prefilled
     scheduled_time: Optional[float] = None
     first_token_time: Optional[float] = None
     last_token_time: Optional[float] = None
@@ -85,6 +86,7 @@ class RequestMetrics:
         return {
             "prompt_len": self.prompt_len,
             "priority": self.priority,
+            "cached_tokens": self.cached_tokens,
             "generated": self.generated,
             "finish_reason": self.finish_reason,
             "queue_time_ms": ms(self.queue_time_s),
@@ -149,9 +151,12 @@ class Metrics:
         self.requests_submitted += 1
         return t
 
-    def on_schedule(self, request_id: str) -> float:
+    def on_schedule(self, request_id: str,
+                    cached_tokens: int = 0) -> float:
         t = self.now()
-        self.requests[request_id].scheduled_time = t
+        m = self.requests[request_id]
+        m.scheduled_time = t
+        m.cached_tokens = cached_tokens
         return t
 
     def on_token(self, request_id: str) -> float:
@@ -187,9 +192,13 @@ class Metrics:
     def request(self, request_id: str) -> Dict:
         return self.requests[request_id].to_dict()
 
-    def to_json(self, extra_counters: Optional[Dict[str, int]] = None
-                ) -> Dict:
-        """One JSON-safe dict: per-request, summary, engine sections."""
+    def to_json(self, extra_counters: Optional[Dict[str, int]] = None,
+                prefix_cache: Optional[Dict] = None) -> Dict:
+        """One JSON-safe dict: per-request, summary, engine sections --
+        plus a ``prefix_cache`` section (hit-rate/bytes from the
+        ``StateCache`` counters passed in, TTFT split by whether the
+        request's prefix was cached) when ``prefix_cache`` stats are
+        provided."""
         elapsed = None
         if (self._start_time is not None
                 and self._last_token_time is not None):
@@ -218,16 +227,30 @@ class Metrics:
             "queue_time_ms": _stats_ms([m.queue_time_s for m in ms
                                         if m.queue_time_s is not None]),
         }
-        return {
+        out = {
             "requests": {rid: m.to_dict()
                          for rid, m in self.requests.items()},
             "summary": summary,
             "engine": engine,
         }
+        if prefix_cache is not None:
+            # TTFT split: a hit request restored >= 1 prompt tokens from
+            # the cache; the gap between the two is the cache's win
+            out["prefix_cache"] = dict(
+                prefix_cache,
+                ttft_ms_hit=_stats_ms([m.ttft_s for m in ms
+                                       if m.ttft_s is not None
+                                       and m.cached_tokens > 0]),
+                ttft_ms_miss=_stats_ms([m.ttft_s for m in ms
+                                        if m.ttft_s is not None
+                                        and m.cached_tokens == 0]),
+            )
+        return out
 
     def dump(self, path: str,
-             extra_counters: Optional[Dict[str, int]] = None) -> str:
+             extra_counters: Optional[Dict[str, int]] = None,
+             prefix_cache: Optional[Dict] = None) -> str:
         with open(path, "w") as f:
-            json.dump(self.to_json(extra_counters), f, indent=1,
-                      sort_keys=True)
+            json.dump(self.to_json(extra_counters, prefix_cache), f,
+                      indent=1, sort_keys=True)
         return path

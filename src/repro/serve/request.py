@@ -8,10 +8,10 @@ into TTFT/TPOT/queue-time.  Each ``step()`` yields ``RequestOutput``
 snapshots, and every request owns a ``RequestStream`` for incremental
 token delivery (pull iteration or an ``on_token`` callback).
 
-``Request`` also accepts the pre-PR-4 constructor surface
-(``uid``/``max_new_tokens``/``temperature``/``eos_id``) and keeps the
-mutable ``output``/``done`` mirrors those call sites read, so legacy
-code keeps working through the ``Engine`` shim unchanged.
+The pre-PR-4 legacy surface (``Engine.submit`` + ``Request(uid=,
+max_new_tokens=, temperature=, eos_id=)``) was removed in PR 5 once the
+last in-repo users migrated; the mutable ``output``/``done`` fields
+remain as the canonical accumulating token list and finish flag.
 """
 from __future__ import annotations
 
@@ -44,44 +44,25 @@ _REQUEST_IDS = itertools.count()
 class Request:
     """A unit of work for the engine.
 
-    New-style: ``Request(prompt, SamplingParams(...), request_id=...,
-    priority=...)``.  Legacy keywords (``uid``, ``max_new_tokens``,
-    ``temperature``, ``eos_id``) are translated into an equivalent
-    ``SamplingParams`` -- passing both styles at once is an error.
-    ``priority``: higher values are served first under the priority
-    scheduling policy (FCFS breaks ties).
+    ``Request(prompt, SamplingParams(...), request_id=...,
+    priority=...)``; ``params=None`` means greedy with the
+    ``SamplingParams`` defaults.  ``priority``: higher values are
+    served first under the priority scheduling policy (FCFS breaks
+    ties).
     """
 
     prompt: List[int]
     params: Optional[SamplingParams] = None
     request_id: Optional[str] = None
     priority: int = 0
-    # legacy (pre-PR-4) construction surface -- deprecated
-    uid: Optional[int] = None
-    max_new_tokens: Optional[int] = None
-    temperature: Optional[float] = None
-    eos_id: Optional[int] = None
-    # engine-written mirrors (legacy readers; the canonical token list)
+    # engine-written: the canonical accumulating token list + finish flag
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
     def __post_init__(self) -> None:
         self.prompt = [int(t) for t in self.prompt]
-        legacy = (self.max_new_tokens is not None
-                  or self.temperature is not None
-                  or self.eos_id is not None)
         if self.params is None:
-            self.params = SamplingParams(
-                temperature=(self.temperature
-                             if self.temperature is not None else 0.0),
-                max_tokens=(self.max_new_tokens
-                            if self.max_new_tokens is not None else 32),
-                stop_token_ids=((self.eos_id,)
-                                if self.eos_id is not None else ()))
-        elif legacy:
-            raise ValueError(
-                "pass SamplingParams OR the legacy max_new_tokens/"
-                "temperature/eos_id fields, not both")
+            self.params = SamplingParams()
         if self.request_id is None:
             self.request_id = f"req-{next(_REQUEST_IDS)}"
         if not self.prompt:
@@ -169,6 +150,10 @@ class RequestState:
     slot: Optional[int] = None
     finish_reason: Optional[FinishReason] = None
     stream: Optional[RequestStream] = None
+    # prompt tokens covered by the prefix cache: the add_request-time
+    # estimate drives cache-aware admission ordering; re-resolved at
+    # seat time (entries may be evicted while the request queues)
+    cached_len: int = 0
     # timestamps from the engine clock (metrics derives TTFT/TPOT)
     arrival_time: float = 0.0
     scheduled_time: Optional[float] = None

@@ -106,7 +106,27 @@ class PriorityScheduler(Scheduler):
         return state
 
 
-SCHEDULERS = {"fcfs": FCFSScheduler, "priority": PriorityScheduler}
+class CacheAwareScheduler(Scheduler):
+    """Longest cached prompt prefix first; FCFS within equal matches.
+
+    Requests whose prefix is already in the engine's ``StateCache``
+    skip (part of) their prefill, so admitting them first minimises the
+    time their slot is occupied before decoding starts -- hits free
+    slots fastest, which drains the queue fastest.  ``cached_len`` is
+    the match length the engine recorded at ``add_request`` time (0
+    when the prefix cache is off, making this policy degrade to FCFS).
+    """
+
+    def _pick(self) -> RequestState:
+        best = max(range(len(self.waiting)),
+                   key=lambda i: self.waiting[i].cached_len)
+        state = self.waiting[best]
+        del self.waiting[best]
+        return state
+
+
+SCHEDULERS = {"fcfs": FCFSScheduler, "priority": PriorityScheduler,
+              "cache-aware": CacheAwareScheduler}
 
 
 def make_scheduler(policy: Union[str, Scheduler, Type[Scheduler], None],

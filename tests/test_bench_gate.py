@@ -15,7 +15,10 @@ BASE = {
     "tpot_quamba_kernels_us": 100.0,
     "prefill_chunked_tokens_per_s": 5000.0,
     "engine_prefill": {"prefill_dispatches": 8},
-    "serve": {"ttft_ms": {"mean": 40.0}},
+    "serve": {"ttft_ms": {"mean": 40.0},
+              "prefix_cache": {"ttft_ms_hit": {"mean": 10.0},
+                               "ttft_ms_miss": {"mean": 40.0},
+                               "hit_rate": 0.8}},
 }
 
 
@@ -55,23 +58,32 @@ def test_regression_detected_and_improvement_passes():
         "tpot_quamba_kernels_us": 140.0,             # +40% (lower better)
         "prefill_chunked_tokens_per_s": 3000.0,      # -40% (higher better)
         "engine_prefill": {"prefill_dispatches": 9},  # any increase fails
-        "serve": {"ttft_ms": {"mean": 60.0}},         # +50%
+        "serve": {"ttft_ms": {"mean": 60.0},          # +50%
+                  # hit TTFT gets a loose 100% threshold (small-sample
+                  # wall clock); +400% = the cache stopped hitting
+                  "prefix_cache": {"ttft_ms_hit": {"mean": 50.0}}},
     }
     failures = gate(BASE, worse, 0.25)
-    assert len(failures) == 4
+    assert len(failures) == 5
     assert any("serve.ttft_ms.mean" in f for f in failures)
+    assert any("serve.prefix_cache.ttft_ms_hit.mean" in f
+               for f in failures)
     better = {
         "tpot_quamba_kernels_us": 50.0,
         "prefill_chunked_tokens_per_s": 9000.0,
         "engine_prefill": {"prefill_dispatches": 3},
-        "serve": {"ttft_ms": {"mean": 10.0}},
+        "serve": {"ttft_ms": {"mean": 10.0},
+                  "prefix_cache": {"ttft_ms_hit": {"mean": 5.0}}},
     }
     assert gate(BASE, better, 0.25) == []
 
 
 def test_small_wobble_within_tolerance_passes():
     cur = dict(BASE, tpot_quamba_kernels_us=120.0,
-               serve={"ttft_ms": {"mean": 48.0}})    # 20% < 25%
+               serve={"ttft_ms": {"mean": 48.0},     # 20% < 25%
+                      # 2x on the ms-scale hit TTFT is runner wobble,
+                      # not a cache regression: within its 100% band
+                      "prefix_cache": {"ttft_ms_hit": {"mean": 19.9}}})
     assert gate(BASE, cur, 0.25) == []
 
 
@@ -84,3 +96,21 @@ def test_dispatch_count_zero_tolerance():
 
 def test_gated_covers_serve_ttft():
     assert any(k == "serve.ttft_ms.mean" for k, _, _ in GATED)
+    assert any(k == "serve.prefix_cache.ttft_ms_hit.mean"
+               for k, _, _ in GATED)
+
+
+def test_prefix_cache_keys_tolerated_by_old_and_new_gates():
+    """Forward/backward compat for the serve.prefix_cache section: a
+    pre-PR-5 artifact (no section at all), a null TTFT split (a run
+    where nothing hit), and extra unknown cache keys all skip."""
+    pre_pr5 = {k: v for k, v in BASE.items() if k != "serve"}
+    pre_pr5["serve"] = {"ttft_ms": {"mean": 40.0}}
+    assert gate(pre_pr5, BASE, 0.25) == []       # new keys, old baseline
+    assert gate(BASE, pre_pr5, 0.25) == []       # rollback direction
+    no_hits = dict(BASE, serve={
+        "ttft_ms": {"mean": 40.0},
+        "prefix_cache": {"ttft_ms_hit": None, "hit_rate": None,
+                         "brand_new_counter": [1, 2]}})
+    assert gate(BASE, no_hits, 0.25) == []
+    assert gate(no_hits, BASE, 0.25) == []

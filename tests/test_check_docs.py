@@ -1,0 +1,56 @@
+"""Doc-CI plumbing (scripts/check_docs.py): fence extraction rules and
+the documented files actually containing executable blocks.  Executing
+the blocks is the CI ``docs`` job; this keeps the extractor honest in
+tier-1 without paying the snippet runtimes."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "scripts"))
+from check_docs import default_files, extract_blocks  # noqa: E402
+
+SAMPLE = """\
+intro text
+```python
+x = 1
+```
+```bash
+echo not python
+```
+```python no-run
+this_would_crash(
+```
+```text
+nope
+```
+```python
+y = x + 1
+```
+"""
+
+
+def test_extracts_only_runnable_python_blocks():
+    blocks = extract_blocks(SAMPLE)
+    assert [src for _, src in blocks] == ["x = 1", "y = x + 1"]
+    # line numbers point INTO the block (1-indexed markdown lines)
+    assert blocks[0][0] == 3
+    assert blocks[1][0] == 15
+
+
+def test_unterminated_fence_does_not_hang_or_crash():
+    blocks = extract_blocks("```python\nx = 1")
+    assert blocks == [(2, "x = 1")]
+
+
+def test_plain_fence_without_language_ignored():
+    assert extract_blocks("```\nnot code\n```\n") == []
+
+
+def test_documented_files_exist_with_executable_blocks():
+    files = default_files()
+    names = {os.path.basename(f) for f in files}
+    assert {"README.md", "serving.md", "quantization.md"} <= names
+    for f in files:
+        with open(f) as fh:
+            assert extract_blocks(fh.read()), \
+                f"{f} has no executable python block"

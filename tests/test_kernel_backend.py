@@ -14,7 +14,7 @@ from repro.models import (decode_step, forward, init_decode_state,
                           init_params, prefill_step)
 from repro.models.mamba import use_kernel_backend
 from repro.quant.recipe import get_spec, uses_kernel_backend
-from repro.serve import Engine, Request, generate
+from repro.serve import LLMEngine, Request, SamplingParams, generate
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -208,10 +208,9 @@ def test_prefill_matches_stepping_quant(qsetup, backend):
 
 def test_engine_prefill_is_chunked_not_per_token(qsetup):
     cfg, qm = qsetup
-    eng = Engine(qm.params, cfg, max_batch=2, max_len=32,
-                 qctx=qm.qctx(), prefill_chunk=4)
-    req = Request(uid=0, prompt=PROMPT, max_new_tokens=4)
-    eng.submit(req)
+    eng = LLMEngine(qm.params, cfg, max_batch=2, max_len=32,
+                    qctx=qm.qctx(), prefill_chunk=4)
+    st = eng.add_request(PROMPT, SamplingParams(max_tokens=4))
     eng.run()
     # 7 prompt-head tokens, chunk=4 -> [4, 2, 1]: 3 dispatches, not 7
     assert eng.counters["prefill_dispatches"] == 3
@@ -229,13 +228,13 @@ def test_engine_prefill_is_chunked_not_per_token(qsetup):
         lg, state = decode_step(qm.params, cfg, state,
                                 jnp.asarray([nt], jnp.int32),
                                 qctx=qm.qctx())
-    assert req.output == ref
+    assert st.token_ids == ref
 
 
 def test_chunk_plan_bounds_compiles_and_covers():
     for chunk in (1, 3, 4, 128):
         for n in (0, 1, 2, 5, 7, 127, 128, 255, 300):
-            plan = Engine._chunk_plan(n, chunk)
+            plan = LLMEngine._chunk_plan(n, chunk)
             assert sum(plan) == n
             # full chunks plus powers of two below chunk -> bounded
             # distinct shapes no matter the prompt-length mix
@@ -254,15 +253,15 @@ def test_engine_per_call_scales_keep_per_token_prefill(qsetup, spec_kw):
     import dataclasses
     spec = dataclasses.replace(get_spec("quamba"), **spec_kw)
     qctx = {"mode": "quant", "spec": spec, **qm.qdata}
-    eng = Engine(qm.params, cfg, max_batch=1, max_len=32, qctx=qctx,
-                 prefill_chunk=4)
+    eng = LLMEngine(qm.params, cfg, max_batch=1, max_len=32, qctx=qctx,
+                    prefill_chunk=4)
     # per-call scales (dynamic method / per-tensor input_quant stats):
     # chunked prefill would see chunk-wide statistics, so the engine
     # must keep the per-token path
     assert eng._prefill_fn is None
     # the chunk-invariant default does use the sequence path
-    eng2 = Engine(qm.params, cfg, max_batch=1, max_len=32,
-                  qctx=qm.qctx(), prefill_chunk=4)
+    eng2 = LLMEngine(qm.params, cfg, max_batch=1, max_len=32,
+                     qctx=qm.qctx(), prefill_chunk=4)
     assert eng2._prefill_fn is not None
 
 
@@ -272,6 +271,6 @@ def test_generate_rejects_empty_inputs(qsetup):
         generate(qm.params, cfg, [])
     with pytest.raises(ValueError, match="prompts\\[1\\] is empty"):
         generate(qm.params, cfg, [[1], []])
-    eng = Engine(qm.params, cfg, max_batch=1, max_len=32)
+    eng = LLMEngine(qm.params, cfg, max_batch=1, max_len=32)
     with pytest.raises(ValueError, match="empty prompt"):
-        eng.submit(Request(uid=0, prompt=[]))
+        eng.add_request(Request([]))

@@ -1,0 +1,265 @@
+"""Prefix state cache (``repro.serve.cache``): longest-prefix-match
+correctness, LRU/byte-budget eviction, cache-on/off token-stream
+equivalence through the engine, and metrics hit-rate math."""
+import numpy as np
+import jax
+import pytest
+
+pytestmark = pytest.mark.serve
+
+from repro.configs import get_config, scale_down
+from repro.models import init_params
+from repro.serve import (CacheAwareScheduler, LLMEngine, Request,
+                         RequestStatus, SamplingParams, StateCache,
+                         make_scheduler)
+from repro.serve.cache import prefix_hash, rolling_hashes, tree_nbytes
+from repro.serve.request import RequestState
+
+
+def _state(n_floats: int):
+    """A fake slot-state tree of a known byte size (4 bytes/elem)."""
+    return {"h": np.arange(n_floats, dtype=np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# pure cache semantics (no engine, no jax compiles)
+# ---------------------------------------------------------------------------
+
+def test_rolling_hash_prefix_identity():
+    toks = [3, 1, 4, 1, 5, 9, 2, 6]
+    hs = rolling_hashes(toks)
+    assert len(hs) == len(toks) + 1
+    for k in range(len(toks) + 1):
+        assert hs[k] == prefix_hash(toks[:k])
+    # token order matters (not a bag-of-tokens hash)
+    assert prefix_hash([1, 2]) != prefix_hash([2, 1])
+
+
+def test_longest_prefix_match_and_collision_guard():
+    c = StateCache(byte_budget=1 << 20)
+    c.insert([1, 2], _state(4))
+    c.insert([1, 2, 3, 4], _state(4))
+    c.insert([9, 9], _state(4))
+    # longest usable prefix wins; covering len(prompt) - 1 tokens makes
+    # it a FULL hit (only the last token is left to feed the decoder)
+    e = c.lookup([1, 2, 3, 4, 5])
+    assert e is not None and e.tokens == (1, 2, 3, 4)
+    # the full-length entry is NOT usable for its own prompt (the last
+    # token must stay as the first decode input) -> shorter match
+    e = c.lookup([1, 2, 3, 4])
+    assert e is not None and e.tokens == (1, 2)
+    # same length, different tokens: token equality is checked, so a
+    # would-be hash-bucket probe can never return the wrong state
+    assert c.lookup([5, 6, 7]) is None
+    assert c.lookup([2]) is None            # limit 0: nothing to reuse
+    assert [1, 2] in c and [1, 3] not in c
+    s = c.stats()
+    assert s["hits"] == 1 and s["partial_hits"] == 1
+    assert s["misses"] == 2
+    assert s["hit_rate"] == pytest.approx(0.5)
+    assert s["tokens_reused"] == 4 + 2
+
+
+def test_peek_len_has_no_side_effects():
+    c = StateCache(byte_budget=1 << 20)
+    c.insert([1, 2, 3], _state(4))
+    assert c.peek_len([1, 2, 3, 4]) == 3
+    assert c.peek_len([1, 2, 3]) == 0       # limit is len-1
+    assert c.peek_len([7]) == 0
+    s = c.stats()
+    assert s["hits"] == s["partial_hits"] == s["misses"] == 0
+
+
+def test_lru_byte_budget_eviction():
+    c = StateCache(byte_budget=3 * 16)      # room for three 16B entries
+    c.insert([1], _state(4))
+    c.insert([2], _state(4))
+    c.insert([3], _state(4))
+    assert len(c) == 3 and c.bytes_in_use == 48
+    c.lookup([1, 99])                       # refresh [1]: now [2] is LRU
+    c.insert([4], _state(4))                # over budget -> evict [2]
+    assert [2] not in c and [1] in c and [3] in c and [4] in c
+    assert c.bytes_in_use == 48 and c.stats()["evicted"] == 1
+    # an entry bigger than the whole budget is rejected, not thrashed
+    assert not c.insert([5, 6], _state(1000))
+    assert c.stats()["rejected"] == 1 and len(c) == 3
+    # zero budget disables insertion entirely
+    off = StateCache(byte_budget=0)
+    assert not off.insert([1], _state(1))
+    assert off.lookup([1, 2]) is None
+
+
+def test_reinsert_refreshes_not_duplicates():
+    c = StateCache(byte_budget=1 << 20)
+    assert c.insert([1, 2], _state(4))
+    assert not c.insert([1, 2], _state(4))  # already cached: LRU bump
+    assert len(c) == 1 and c.stats()["inserted"] == 1
+
+
+def test_tree_nbytes_counts_dtype_width():
+    assert tree_nbytes({"a": np.zeros((3,), np.float32)}) == 12
+    assert tree_nbytes({"a": np.zeros((3,), np.int8),
+                        "b": {"c": np.zeros((2, 2), np.float32)}}) == 19
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy
+# ---------------------------------------------------------------------------
+
+def test_cache_aware_scheduler_orders_hits_first():
+    sched = make_scheduler("cache-aware", 1)
+    assert isinstance(sched, CacheAwareScheduler)
+    states = []
+    for rid, cached in (("a", 0), ("b", 5), ("c", 5), ("d", 2)):
+        st = RequestState(Request([1, 2], SamplingParams(),
+                                  request_id=rid))
+        st.cached_len = cached
+        sched.add(st)
+        states.append(st)
+    order = [sched._pick().request_id for _ in range(4)]
+    assert order == ["b", "c", "d", "a"]    # longest first, FCFS ties
+
+
+# ---------------------------------------------------------------------------
+# engine integration (small mamba; one module-scoped param set)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scale_down(get_config("mamba-130m"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _run(cfg, params, prompts, prefix_cache_mb, **kw):
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=64,
+                    prefill_chunk=4, prefix_cache_mb=prefix_cache_mb,
+                    **kw)
+    states = [eng.add_request(list(p),
+                              SamplingParams(max_tokens=4, seed=i)
+                              if i % 2 else
+                              SamplingParams(max_tokens=4))
+              for i, p in enumerate(prompts)]
+    eng.run()
+    return [list(s.token_ids) for s in states], eng
+
+
+def test_cache_on_off_token_streams_identical(setup):
+    """Same seeds => identical outputs with the cache on and off, over
+    full hits, partial hits, and misses (greedy + sampled mixed)."""
+    cfg, params = setup
+    shared = [(3 * i) % cfg.vocab_size for i in range(17)]
+    prompts = [shared + [5],            # cold miss (fills the cache)
+               shared + [5],            # full hit (identical prompt)
+               shared[:8] + [9, 2],     # partial hit at the 8-boundary
+               [7, 7]]                  # miss (nothing shared)
+    off, _ = _run(cfg, params, prompts, None)
+    on, eng = _run(cfg, params, prompts, 64)
+    assert on == off
+    s = eng.prefix_cache.stats()
+    assert s["hits"] >= 1 and s["partial_hits"] >= 1 and s["misses"] >= 1
+    assert eng.counters["prefix_restores"] == \
+        s["hits"] + s["partial_hits"]
+
+
+def test_full_hit_skips_prefill_dispatches(setup):
+    cfg, params = setup
+    prompt = [(2 * i + 1) % cfg.vocab_size for i in range(9)]
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=64,
+                    prefill_chunk=4, prefix_cache_mb=64)
+    eng.add_request(list(prompt), SamplingParams(max_tokens=2))
+    eng.run()
+    cold_dispatches = eng.counters["prefill_dispatches"]
+    assert cold_dispatches > 0
+    st = eng.add_request(list(prompt), SamplingParams(max_tokens=2))
+    eng.step()                               # admission + first decode
+    # full hit: restored straight past PREFILLING, zero new dispatches
+    assert eng.counters["prefill_dispatches"] == cold_dispatches
+    assert st.cached_len == len(prompt) - 1
+    assert st.status is RequestStatus.DECODING
+    eng.run()
+    assert len(st.token_ids) == 2
+
+
+def test_tiny_budget_degrades_to_miss_with_correct_outputs(setup):
+    cfg, params = setup
+    shared = [(3 * i) % cfg.vocab_size for i in range(9)]
+    prompts = [shared + [5], shared + [5]]
+    off, _ = _run(cfg, params, prompts, None)
+    on, eng = _run(cfg, params, prompts, 1e-4)   # ~100B: nothing fits
+    assert on == off
+    s = eng.prefix_cache.stats()
+    assert s["rejected"] > 0 and s["hits"] == 0 and len(
+        eng.prefix_cache) == 0
+
+
+def test_cache_aware_admission_serves_hits_first(setup):
+    cfg, params = setup
+    shared = [(5 * i + 1) % cfg.vocab_size for i in range(9)]
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=64,
+                    prefill_chunk=4, prefix_cache_mb=64)
+    assert isinstance(eng.scheduler, CacheAwareScheduler)  # default
+    eng.add_request(list(shared), SamplingParams(max_tokens=1),
+                    request_id="cold")
+    eng.run()
+    # queue a miss BEFORE a hit: cache-aware admission flips the order
+    eng.add_request([9, 8, 7], SamplingParams(max_tokens=1),
+                    request_id="miss")
+    eng.add_request(list(shared), SamplingParams(max_tokens=1),
+                    request_id="hit")
+    finish_order = []
+    while eng.has_unfinished():
+        finish_order += [o.request_id for o in eng.step() if o.finished]
+    assert finish_order == ["hit", "miss"]
+
+
+def test_metrics_hit_rate_and_ttft_split_with_fake_clock(setup):
+    cfg, params = setup
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    shared = [(3 * i + 2) % cfg.vocab_size for i in range(9)]
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=64,
+                    prefill_chunk=4, prefix_cache_mb=64, clock=clock)
+    eng.add_request(list(shared), SamplingParams(max_tokens=2))
+    eng.run()
+    for _ in range(2):
+        eng.add_request(list(shared), SamplingParams(max_tokens=2))
+    eng.run()
+    mj = eng.metrics_json()
+    pc = mj["prefix_cache"]
+    assert pc["hits"] == 2 and pc["misses"] == 1
+    assert pc["hit_rate"] == pytest.approx(2 / 3)
+    assert pc["full_hit_rate"] == pytest.approx(2 / 3)
+    assert pc["ttft_ms_hit"]["n"] == 2 and pc["ttft_ms_miss"]["n"] == 1
+    # the fake clock ticks once per metrics event: a hit request sees
+    # submit -> schedule -> first token (2 ticks of TTFT); the miss
+    # also pays one tick per decoded-but-queued step before it -- the
+    # split just has to be internally consistent and finite
+    assert pc["ttft_ms_hit"]["mean"] > 0
+    assert pc["ttft_ms_miss"]["mean"] > 0
+    reqs = list(mj["requests"].values())
+    assert sorted(r["cached_tokens"] for r in reqs) == \
+        [0, len(shared) - 1, len(shared) - 1]
+
+
+def test_partial_hit_resumes_and_extends_prefix_chain(setup):
+    cfg, params = setup
+    base = [(7 * i + 3) % cfg.vocab_size for i in range(13)]
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=64,
+                    prefill_chunk=4, prefix_cache_mb=64)
+    eng.add_request(base[:9], SamplingParams(max_tokens=1))
+    eng.run()                              # snapshots at 4 and 8
+    assert base[:8] in eng.prefix_cache
+    eng.add_request(list(base), SamplingParams(max_tokens=1))
+    eng.run()                              # resumes at 8, snapshots 12
+    s = eng.prefix_cache.stats()
+    assert s["partial_hits"] == 1
+    assert base[:12] in eng.prefix_cache   # the chain grew
+    st = eng.add_request(base[:12] + [1], SamplingParams(max_tokens=1))
+    eng.run()                              # ...and is itself a full hit
+    assert eng.prefix_cache.stats()["hits"] >= 1
+    assert st.cached_len == 12

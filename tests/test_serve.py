@@ -1,6 +1,6 @@
-"""Serving engine (legacy ``Engine`` shim surface): correctness vs
-standalone decode, continuous batching, slot reuse, quantized serving.
-The request-centric API is covered in test_serve_lifecycle.py."""
+"""Serving engine correctness vs standalone decode: continuous
+batching, slot reuse, stop tokens, quantized serving.  The request
+lifecycle/scheduling surface is covered in test_serve_lifecycle.py."""
 import jax
 import jax.numpy as jnp
 import pytest
@@ -12,7 +12,7 @@ from repro.models import decode_step, init_decode_state, init_params, forward
 from repro.models.quantize import make_qctx, quantize_model
 from repro.quant.calibrate import run_calibration
 from repro.quant.recipe import get_spec
-from repro.serve import Engine, Request, generate
+from repro.serve import LLMEngine, SamplingParams, generate
 
 
 def _greedy_ref(params, cfg, prompt, n, qctx=None):
@@ -37,18 +37,15 @@ def test_engine_matches_standalone_greedy(arch):
     params = init_params(jax.random.PRNGKey(0), cfg)
     prompt = [3, 1, 4]
     ref = _greedy_ref(params, cfg, prompt, 5)
-    eng = Engine(params, cfg, max_batch=2, max_len=64)
-    r0 = Request(uid=0, prompt=prompt, max_new_tokens=5)
-    r1 = Request(uid=1, prompt=[9], max_new_tokens=2)   # interleaved
-    eng.submit(r0)
-    eng.submit(r1)
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=64)
+    s0 = eng.add_request(prompt, SamplingParams(max_tokens=5))
+    eng.add_request([9], SamplingParams(max_tokens=2))   # interleaved
     eng.run()
-    assert r0.output == ref
+    assert s0.token_ids == ref
     # reused slot must be clean
-    r2 = Request(uid=2, prompt=prompt, max_new_tokens=5)
-    eng.submit(r2)
+    s2 = eng.add_request(prompt, SamplingParams(max_tokens=5))
     eng.run()
-    assert r2.output == ref
+    assert s2.token_ids == ref
 
 
 def test_continuous_batching_throughput():
@@ -65,11 +62,11 @@ def test_eos_stops_generation():
     params = init_params(jax.random.PRNGKey(2), cfg)
     ref = _greedy_ref(params, cfg, [5], 8)
     eos = ref[0]                              # first generated token
-    eng = Engine(params, cfg, max_batch=1, max_len=32)
-    r = Request(uid=0, prompt=[5], max_new_tokens=8, eos_id=eos)
-    eng.submit(r)
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=32)
+    st = eng.add_request([5], SamplingParams(max_tokens=8,
+                                             stop_token_ids=(eos,)))
     eng.run()
-    assert r.output == ref[:1]                # stops at eos inclusive
+    assert st.token_ids == ref[:1]            # stops at eos inclusive
 
 
 def test_quantized_serving_runs():
@@ -86,8 +83,7 @@ def test_quantized_serving_runs():
     qparams, qdata = quantize_model(params, stats, cfg, spec)
     qctx = make_qctx(spec, qdata)
     ref = _greedy_ref(qparams, cfg, [2, 7], 4, qctx=qctx)
-    eng = Engine(qparams, cfg, max_batch=2, max_len=32, qctx=qctx)
-    r = Request(uid=0, prompt=[2, 7], max_new_tokens=4)
-    eng.submit(r)
+    eng = LLMEngine(qparams, cfg, max_batch=2, max_len=32, qctx=qctx)
+    st = eng.add_request([2, 7], SamplingParams(max_tokens=4))
     eng.run()
-    assert r.output == ref
+    assert st.token_ids == ref

@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs import get_config, scale_down
 from repro.models import decode_step, init_decode_state, init_params
-from repro.serve import (Engine, FinishReason, LLMEngine, Metrics,
+from repro.serve import (FinishReason, LLMEngine, Metrics,
                          Request, RequestStatus, SamplingParams)
 from repro.serve.scheduler import (FCFSScheduler, PriorityScheduler,
                                    make_scheduler)
@@ -297,7 +297,7 @@ def test_priority_ties_break_fcfs():
 
 
 # ---------------------------------------------------------------------------
-# metrics math (fake clock) + validation + legacy shim views
+# metrics math (fake clock) + validation + request objects
 # ---------------------------------------------------------------------------
 
 def test_metrics_math_with_fake_clock():
@@ -345,34 +345,24 @@ def test_sampling_params_validation():
         sp.temperature = 1.0               # frozen
 
 
-def test_request_legacy_and_new_styles_exclusive():
-    r = Request([1, 2], uid=3, max_new_tokens=5, temperature=0.5,
-                eos_id=9)
-    assert r.params.max_tokens == 5
-    assert r.params.temperature == 0.5
-    assert r.params.stop_token_ids == (9,)
-    with pytest.raises(ValueError, match="not both"):
-        Request([1], SamplingParams(), max_new_tokens=5)
+def test_request_defaults_and_validation():
+    r = Request([1, 2])
+    assert r.params == SamplingParams()          # greedy defaults
+    assert r.request_id.startswith("req-")
     with pytest.raises(ValueError, match="empty prompt"):
         Request([])
 
 
-def test_legacy_engine_shim_views_and_duplicate_ids(setup):
+def test_ready_request_objects_and_duplicate_ids(setup):
     cfg, params = setup
-    eng = Engine(params, cfg, max_batch=1, max_len=32)
-    r0 = Request(uid=0, prompt=[3], max_new_tokens=2)
-    r1 = Request(uid=1, prompt=[5], max_new_tokens=2)
-    eng.submit(r0)
-    eng.submit(r1)
-    assert eng.queue == [r0, r1] and eng.slots == [None]
-    eng.step()
-    assert eng.slots == [r0] and eng.queue == [r1]
+    eng = LLMEngine(params, cfg, max_batch=1, max_len=32)
+    r0 = Request([3], SamplingParams(max_tokens=2))
+    r1 = Request([5], SamplingParams(max_tokens=2))
+    s0 = eng.add_request(r0)                 # ready Request objects are
+    s1 = eng.add_request(r1)                 # accepted as-is
     eng.run()
     assert r0.done and r1.done
-    assert eng.slots == [None] and eng.queue == []
-    # same uid twice is fine (identity comes from the global counter)
-    eng.submit(Request(uid=0, prompt=[4], max_new_tokens=1))
-    eng.run()
+    assert len(s0.token_ids) == 2 and len(s1.token_ids) == 2
     # explicit duplicate request_ids are rejected
     eng2 = LLMEngine(params, cfg, max_batch=1, max_len=32)
     eng2.add_request([1], SamplingParams(max_tokens=1), request_id="x")

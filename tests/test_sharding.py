@@ -110,23 +110,23 @@ _ENGINE_SCRIPT = textwrap.dedent("""
     import jax
     from repro.configs import get_config, scale_down
     from repro.models import init_params
-    from repro.serve.engine import Engine, Request
+    from repro.serve.engine import LLMEngine
+    from repro.serve.params import SamplingParams
 
     cfg = scale_down(get_config("mamba-130m"))
     params = init_params(jax.random.PRNGKey(0), cfg)
-    eng = Engine(params, cfg, max_batch=4, max_len=64)
-    reqs = [Request(uid=i, prompt=[2 + i, 5, 7], max_new_tokens=8)
-            for i in range(6)]
-    for r in reqs:
-        eng.submit(r)
+    eng = LLMEngine(params, cfg, max_batch=4, max_len=64)
+    states = [eng.add_request([2 + i, 5, 7],
+                              SamplingParams(max_tokens=8))
+              for i in range(6)]
     eng.run()
     print(json.dumps({"sharded": eng.mesh is not None,
-                      "outputs": [r.output for r in reqs]}))
+                      "outputs": [list(s.token_ids) for s in states]}))
 """)
 
 
 def test_engine_dp_slot_sharding_matches_single_device():
-    """With >1 device the Engine spreads decode slots over the data
+    """With >1 device the LLMEngine spreads decode slots over the data
     axis (repro.dist.sharding rules) and greedy outputs are unchanged."""
     outs = []
     for ndev in (1, 2):
