@@ -3,7 +3,11 @@ chunked-prefill throughput/dispatch counts, bytes moved, the
 request-lifecycle serving metrics (per-request TTFT/TPOT/queue-time,
 queue-depth and occupancy series through the scheduler), and the
 shared-prefix prefix-cache workload (``serve.prefix_cache``: hit-path
-vs miss-path TTFT, hit rate, bytes).
+vs miss-path TTFT, hit rate, bytes), and the trace-driven open-loop
+load test (``serve.loadgen``: p99 TTFT, goodput, async-pump vs sync
+time-weighted occupancy, prefix-cache spill-tier counters).  The file
+carries a top-level ``run_meta`` provenance stamp (git commit,
+timestamp, jax backend/device) which the perf gate ignores.
 
 ``python -m benchmarks.run pr_speed`` writes the results to
 ``BENCH_PR.json`` at the repo root so future PRs have a baseline to
@@ -15,8 +19,11 @@ hardware-independent.
 """
 from __future__ import annotations
 
+import datetime
 import json
 import os
+import platform
+import subprocess
 
 import numpy as np
 import jax
@@ -27,11 +34,43 @@ from repro.kernels._backend import default_interpret
 from repro.models import (decode_step, init_decode_state, param_count,
                           prefill_step)
 from repro.serve import LLMEngine, SamplingParams
+from repro.serve.loadgen import (SLO, ClusteredArrivals, RAGLongPrompt,
+                                 SharedPrefixChat, WorkloadMix)
+from repro.serve.loadgen import run as loadgen_run
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR.json")
 DECODE_BATCH = 8
 PREFILL_LEN = 256
 PREFILL_CHUNK = 128
+
+
+def _run_meta() -> dict:
+    """Provenance stamp for BENCH_PR.json: which code, when, on what.
+
+    Top-level so bisecting a perf regression from archived artifacts
+    does not require the CI run that produced them; the gate
+    (``scripts/compare_bench.py``) reads only its dotted metric keys
+    and ignores this block entirely.
+    """
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True,
+            text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        commit = None
+    dev = jax.devices()[0]
+    return {
+        "git_commit": commit,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "jax_version": jax.__version__,
+        "backend": dev.platform,
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+    }
 
 
 def _tpot(cfg, params, qctx, iters: int = 20) -> float:
@@ -141,6 +180,136 @@ def _serve_lifecycle(cfg, params, qctx, n_requests: int) -> dict:
     }
 
 
+def _loadgen_workload(cfg, params, qctx, smoke: bool) -> dict:
+    """Trace-driven open-loop load test (``repro.serve.loadgen``):
+    a seeded chat+RAG mix with bursty arrivals and mid-flight cancels,
+    replayed twice on the SAME trace -- once through the async
+    ``EnginePump`` and once through the sync consumer-pumped control.
+
+    Arrivals are CLUSTERED (bursts of >= max_batch requests, one gap
+    apart) and the pacing self-calibrates: a ``time_scale=0`` probe
+    measures the pure drain time, then the inter-cluster gap is set to
+    ~1.3x one cluster's share of it.  The async pump drains each burst
+    at full batch during the following gap; the sync control cannot
+    decode until the last burst has landed -- that idle window is what
+    the time-weighted occupancy comparison charges it for.  The trace
+    is saved next to the checkpoint so the run is replayable
+    bit-for-bit.
+    """
+    n_clusters = 3 if smoke else 5
+    n = n_clusters * 4                  # one full batch per burst
+    mix = WorkloadMix(
+        [(3, SharedPrefixChat(n_prefixes=4, prefix_len=24,
+                              suffix_len=(1, 4), max_tokens=(4, 8))),
+         (1, RAGLongPrompt(prompt_len=(32, 56), max_tokens=(2, 4)))],
+        cancel_fraction=0.1)
+    trace = mix.build(
+        n_requests=n, vocab_size=cfg.vocab_size, seed=1234,
+        arrivals=ClusteredArrivals(n_clusters=n_clusters, gap_s=1.0,
+                                   spread_s=0.002))
+    os.makedirs(common.BENCH_DIR, exist_ok=True)
+    trace_path = trace.save(os.path.join(common.BENCH_DIR,
+                                         "loadgen_trace.json"))
+
+    def engine():
+        return LLMEngine(params, cfg, max_batch=4, max_len=96,
+                         qctx=qctx, prefill_chunk=32, prefix_cache_mb=8)
+
+    probe = loadgen_run(engine(), trace, pump="sync", time_scale=0.0)
+    # inter-cluster gap = 1.3x one cluster's drain share (the nominal
+    # gap is 1.0 s, so time_scale IS the gap in seconds)
+    ts = 1.3 * probe["wall_s"] / n_clusters
+    slo = SLO(ttft_p99_ms=120_000.0)     # finiteness gate, not a perf bar
+    rep_a = loadgen_run(engine(), trace, slo, pump="async",
+                        time_scale=ts)
+    rep_s = loadgen_run(engine(), trace, pump="sync", time_scale=ts)
+
+    sync_occ = rep_s["occupancy_mean"]
+    return {
+        "trace": rep_a["trace"],
+        "trace_path": os.path.abspath(trace_path),
+        "time_scale": ts,
+        "wall_s": rep_a["wall_s"],
+        "ttft_ms": rep_a["ttft_ms"],
+        "tpot_ms": rep_a["tpot_ms"],
+        "queue_time_ms": rep_a["queue_time_ms"],
+        "submit_lag_ms": rep_a["submit_lag_ms"],
+        "goodput_requests": rep_a["goodput_requests"],
+        "goodput_tokens": rep_a["goodput_tokens"],
+        "goodput_rps": rep_a["goodput_rps"],
+        "completed": rep_a["completed"],
+        "cancelled": rep_a["cancelled"],
+        "steps": rep_a["steps"],
+        "steps_before_last_arrival": rep_a["steps_before_last_arrival"],
+        "occupancy_mean": rep_a["occupancy_mean"],
+        "slo": rep_a["slo"],
+        "streams_match_sync": (rep_a["token_streams"]
+                               == rep_s["token_streams"]),
+        "sync_control": {
+            "occupancy_mean": sync_occ,
+            "steps_before_last_arrival":
+                rep_s["steps_before_last_arrival"],
+            "wall_s": rep_s["wall_s"],
+            "goodput_requests": rep_s["goodput_requests"],
+        },
+        "occupancy_gain": (rep_a["occupancy_mean"] / sync_occ
+                           if sync_occ else None),
+    }
+
+
+def _spill_workload(cfg, params, qctx, smoke: bool) -> dict:
+    """Host-RAM spill tier under real eviction pressure: the device
+    budget holds ~1.6 state snapshots while the workload cycles more
+    prefixes than that, so earlier prefixes are LRU-evicted to host;
+    the second pass over the same prefixes must still HIT (promoted
+    back from host).  Three stream controls prove correctness: spill
+    == big-device-cache == cache-off, bit for bit.
+    """
+    di, ds, w = cfg.d_inner, cfg.d_state, cfg.conv_width
+    entry_bytes = cfg.n_layers * (di * ds + (w - 1) * di) * 4
+    device_mb = 1.6 * entry_bytes / (1 << 20)
+    n_prefixes = 3 if smoke else 4
+    plen = 40
+
+    def prompts():
+        for i in range(n_prefixes):
+            head = [(11 * i + 2 * j + 1) % cfg.vocab_size
+                    for j in range(plen)]
+            yield head + [i + 1, 5]
+
+    def serve(**cache_kw):
+        eng = LLMEngine(params, cfg, max_batch=2, max_len=plen + 12,
+                        qctx=qctx, prefill_chunk=16, **cache_kw)
+        streams = []
+        for _ in range(2):               # pass 2 re-visits evictees
+            for p in prompts():
+                st = eng.add_request(list(p),
+                                     SamplingParams(max_tokens=4))
+                eng.run()
+                streams.append(list(st.token_ids))
+        return eng, streams
+
+    eng_spill, s_spill = serve(prefix_cache_mb=device_mb,
+                               prefix_cache_spill_mb=64)
+    _, s_device = serve(prefix_cache_mb=64)
+    _, s_off = serve()
+    pc = eng_spill.metrics_json()["prefix_cache"]
+    return {
+        "requests": 2 * n_prefixes,
+        "device_budget_mb": device_mb,
+        "entry_bytes": entry_bytes,
+        "hit_rate": pc["hit_rate"],
+        "spills": pc["spills"],
+        "spilled_bytes": pc["spilled_bytes"],
+        "promotions": pc["promotions"],
+        "promoted_bytes": pc["promoted_bytes"],
+        "host_entries": pc["host_entries"],
+        "host_bytes_in_use": pc["host_bytes_in_use"],
+        "streams_match_device_tier": s_spill == s_device,
+        "streams_match_cache_off": s_spill == s_off,
+    }
+
+
 def run() -> dict:
     cfg, params = common.trained_model()
     stats = common.calibration_stats(cfg, params)
@@ -150,6 +319,7 @@ def run() -> dict:
     p_iters = 2 if smoke else 5
 
     out: dict = {
+        "run_meta": _run_meta(),
         "model": cfg.name,
         "interpret_mode": default_interpret(),
         "decode_batch": DECODE_BATCH,
@@ -193,6 +363,22 @@ def run() -> dict:
         f"{pc['ttft_ms_miss']['mean']:.1f} ms over a "
         f"{pc['shared_prefix_len']}-token shared prefix "
         f"(hit rate {pc['hit_rate']:.2f})")
+
+    lg = _loadgen_workload(cfg, qm.params, qm.qctx(), smoke)
+    lg["spill"] = _spill_workload(cfg, qm.params, qm.qctx(), smoke)
+    out["serve"]["loadgen"] = lg
+    common.emit(
+        "pr_speed/serve_loadgen_ttft_p99", lg["ttft_ms"]["p99"] * 1e3,
+        f"p99 TTFT over {lg['trace']['n_requests']} open-loop requests "
+        f"(goodput {lg['goodput_requests']}, async occupancy "
+        f"{lg['occupancy_mean']:.2f} vs sync "
+        f"{lg['sync_control']['occupancy_mean']:.2f})")
+    common.emit(
+        "pr_speed/serve_spill_promotions",
+        float(lg["spill"]["promotions"]),
+        f"{lg['spill']['spills']} spills / "
+        f"{lg['spill']['promotions']} promotions, streams match "
+        f"cache-off: {lg['spill']['streams_match_cache_off']}")
 
     # bytes moved per decode step: weights read once per token (the
     # memory-bound regime the paper's 1.7x rides on) + recurrent state

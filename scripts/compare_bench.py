@@ -26,12 +26,17 @@ scheduler's request-latency behavior):
     threshold: the failure mode it guards against -- the cache
     silently stops hitting and requests re-prefill -- is a ~100x
     regression, far above any timer wobble.
+  * ``serve.ttft_ms.p95`` and ``serve.loadgen.ttft_ms.p99`` -- lower is
+    better (TAIL latency: the mean hides convoy effects and bursty
+    queueing that the p95/p99 expose; the loadgen p99 comes from the
+    trace-driven open-loop run).  Small-sample percentiles on shared
+    runners get the same loose 100% threshold as the cache TTFT.
 
 Forward compatibility is deliberate: the gate reads ONLY the dotted
 keys above and ignores everything else in either file, so a newer
 BENCH_PR.json with keys this script has never heard of (or a metric
-whose value is a dict/string/None) can never crash the gate -- unknown
-structure skips with a note.  A timing metric regressing by more than
+whose value is a dict/string/None, or a top-level ``run_meta`` stamp)
+can never crash the gate -- unknown structure skips with a note.  A timing metric regressing by more than
 ``--max-regression`` (fraction, default 0.25) fails the job.  Missing
 previous artifact (first run on a branch, expired artifact) or missing
 metrics skip gracefully with exit 0 -- the gate only ever compares like
@@ -51,7 +56,9 @@ GATED = (
     ("prefill_chunked_tokens_per_s", True, None),
     ("engine_prefill.prefill_dispatches", False, 0.0),
     ("serve.ttft_ms.mean", False, None),
+    ("serve.ttft_ms.p95", False, 1.0),
     ("serve.prefix_cache.ttft_ms_hit.mean", False, 1.0),
+    ("serve.loadgen.ttft_ms.p99", False, 1.0),
 )
 
 

@@ -11,11 +11,24 @@ and engine occupancy land in the metrics JSON.
 here shares the same few-shot-style prompt head, so after the first
 prefill the remaining requests restore the cached SSM state instead of
 re-prefilling (watch ``prefix_cache.hit_rate`` and the hit/miss TTFT
-split in the printed summary).
+split in the printed summary).  ``--prefix-cache-spill-mb M`` adds the
+host-RAM spill tier behind it.
+
+Load generation (``repro.serve.loadgen``):
+
+  # write a replayable seeded trace
+  ... --emit-trace trace.json --trace-requests 32 --trace-seed 7
+  # replay it (sync pump: two runs are bit-identical, including the
+  # schedule -- the printed digest proves it)
+  ... --loadgen trace.json
+  # realtime open-loop run through the async EnginePump + SLO gate
+  ... --loadgen trace.json --pump async --slo-ttft-p99-ms 500
 """
 from __future__ import annotations
 
 import argparse
+import hashlib
+import json
 import time
 
 import jax
@@ -25,6 +38,63 @@ from repro.configs import get_config, scale_down
 from repro.data import eval_batches
 from repro.models import init_params
 from repro.serve import SamplingParams
+from repro.serve.loadgen import (SLO, BurstyArrivals, RAGLongPrompt,
+                                 SharedPrefixChat, Trace, WorkloadMix)
+from repro.serve.loadgen import run as loadgen_run
+
+
+def _default_mix(cancel_fraction: float) -> WorkloadMix:
+    return WorkloadMix(
+        [(3, SharedPrefixChat(n_prefixes=4, prefix_len=24,
+                              suffix_len=(1, 4), max_tokens=(4, 8))),
+         (1, RAGLongPrompt(prompt_len=(32, 56), max_tokens=(2, 4)))],
+        cancel_fraction=cancel_fraction)
+
+
+def _loadgen(args, model) -> None:
+    trace = Trace.load(args.loadgen)
+    need = max(len(e.prompt) + e.max_tokens for e in trace.events)
+    eng = model.engine(
+        max_batch=4, max_len=need + 8, scheduler=args.policy,
+        prefix_cache_mb=(args.prefix_cache_mb or None),
+        prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None))
+    slo = SLO(ttft_p95_ms=args.slo_ttft_p95_ms,
+              ttft_p99_ms=args.slo_ttft_p99_ms,
+              tpot_p95_ms=args.slo_tpot_p95_ms)
+    report = loadgen_run(eng, trace, slo if slo.to_json() else None,
+                         pump=args.pump, time_scale=args.time_scale)
+    # the digest covers streams AND schedule: two sync replays of one
+    # trace print the same hash, which is the determinism contract
+    digest = hashlib.sha256(json.dumps(
+        {"streams": report["token_streams"],
+         "schedule": report["schedule"]},
+        sort_keys=True).encode()).hexdigest()
+    ttft, occ = report["ttft_ms"], report["occupancy_mean"]
+    print(f"loadgen: {trace.name} x{len(trace)} ({args.pump} pump, "
+          f"time_scale {args.time_scale:g}) in {report['wall_s']:.2f}s")
+    if ttft:
+        print(f"  TTFT p50 {ttft['p50']:.1f} / p95 {ttft['p95']:.1f} / "
+              f"p99 {ttft['p99']:.1f} ms; goodput "
+              f"{report['goodput_requests']} req "
+              f"({report['goodput_rps']:.2f} rps), "
+              f"{report['cancelled']} cancelled, occupancy "
+              f"{occ:.2f}" if occ is not None else "")
+    print(f"  replay digest {digest[:16]} "
+          f"(streams+schedule, sha256)")
+    if "slo" in report:
+        verdict = "PASS" if report["slo"]["ok"] else "FAIL"
+        print(f"  SLO {verdict}: {report['slo']['objectives']}")
+        for v in report["slo"]["violations"]:
+            print(f"    violation: {v}")
+    if args.metrics_out:
+        report.pop("token_streams")
+        with open(args.metrics_out, "w") as f:
+            json.dump({"loadgen": report,
+                       "engine": eng.metrics_json()}, f,
+                      indent=1, sort_keys=True)
+        print(f"metrics -> {args.metrics_out}")
+    if "slo" in report and not report["slo"]["ok"]:
+        raise SystemExit(1)
 
 
 def main() -> None:
@@ -44,25 +114,66 @@ def main() -> None:
     ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
                     help="prefix state cache byte budget in MiB "
                          "(0 disables)")
+    ap.add_argument("--prefix-cache-spill-mb", type=float, default=0.0,
+                    help="host-RAM spill tier budget in MiB behind the "
+                         "device prefix cache (0 disables)")
     ap.add_argument("--shared-prefix", type=int, default=48,
                     help="length of the shared prompt head the demo "
                          "requests reuse (exercises the prefix cache)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the per-request metrics JSON here")
+    lg = ap.add_argument_group("load generation")
+    lg.add_argument("--loadgen", default=None, metavar="TRACE.json",
+                    help="replay a saved loadgen trace instead of the "
+                         "demo request burst")
+    lg.add_argument("--emit-trace", default=None, metavar="TRACE.json",
+                    help="build a seeded chat+RAG trace, save it, exit")
+    lg.add_argument("--trace-requests", type=int, default=32)
+    lg.add_argument("--trace-seed", type=int, default=0)
+    lg.add_argument("--trace-cancel-fraction", type=float, default=0.1)
+    lg.add_argument("--pump", default="sync",
+                    choices=["sync", "async"],
+                    help="sync = deterministic replay (default); "
+                         "async = realtime open-loop EnginePump")
+    lg.add_argument("--time-scale", type=float, default=1.0,
+                    help="stretch/compress the arrival schedule "
+                         "(0 = submit as fast as possible)")
+    lg.add_argument("--slo-ttft-p95-ms", type=float, default=None)
+    lg.add_argument("--slo-ttft-p99-ms", type=float, default=None)
+    lg.add_argument("--slo-tpot-p95-ms", type=float, default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.small:
         cfg = scale_down(cfg)
+
+    if args.emit_trace:
+        mix = _default_mix(args.trace_cancel_fraction)
+        trace = mix.build(n_requests=args.trace_requests,
+                          vocab_size=cfg.vocab_size,
+                          seed=args.trace_seed,
+                          arrivals=BurstyArrivals())
+        trace.save(args.emit_trace)
+        print(f"trace -> {args.emit_trace} ({len(trace)} requests, "
+              f"{trace.n_cancelled} cancelled, span {trace.span_s:.2f}s, "
+              f"seed {args.trace_seed})")
+        return
+
     params = init_params(jax.random.PRNGKey(0), cfg)
 
     calib = eval_batches(cfg.vocab_size, 4, 64, 4, seed=777)
     model = api.Quantizer(cfg, args.quant).calibrate(calib) \
         .quantize(params)
+
+    if args.loadgen:
+        _loadgen(args, model)
+        return
+
     eng = model.engine(
         max_batch=4, max_len=args.shared_prefix + args.max_new + 16,
         scheduler=args.policy,
-        prefix_cache_mb=(args.prefix_cache_mb or None))
+        prefix_cache_mb=(args.prefix_cache_mb or None),
+        prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, max_tokens=args.max_new)
     shared = [(7 * j + 1) % cfg.vocab_size

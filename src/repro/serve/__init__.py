@@ -1,8 +1,9 @@
 from repro.serve.cache import CacheEntry, StateCache
 from repro.serve.core import EngineCore
-from repro.serve.engine import LLMEngine, generate
+from repro.serve.engine import LLMEngine, StepBudgetExhausted, generate
 from repro.serve.metrics import Metrics, RequestMetrics
 from repro.serve.params import SamplingParams
+from repro.serve.pump import EnginePump
 from repro.serve.request import (FinishReason, Request, RequestOutput,
                                  RequestState, RequestStatus,
                                  RequestStream)
@@ -13,8 +14,9 @@ from repro.serve.scheduler import (CacheAwareScheduler, FCFSScheduler,
 
 __all__ = [
     "CacheEntry", "StateCache",
-    "EngineCore", "LLMEngine", "generate",
+    "EngineCore", "LLMEngine", "StepBudgetExhausted", "generate",
     "Metrics", "RequestMetrics", "SamplingParams",
+    "EnginePump",
     "FinishReason", "Request", "RequestOutput", "RequestState",
     "RequestStatus", "RequestStream",
     "apply_top_k_top_p", "sample", "sample_batched",

@@ -25,9 +25,23 @@ Design:
 * **Eviction** is LRU under a byte budget (plus an entry-count cap).
   ``lookup`` refreshes recency; inserting past the budget evicts the
   least recently used entries.
+* **Spill tier** (``spill_byte_budget > 0``): LRU-evicted entries are
+  moved to host RAM (one ``device_get``) instead of dropped, so the
+  device byte budget stops competing with decode slots for HBM.  A
+  lookup that matches a spilled prefix *promotes* it back to the
+  device tier (one ``device_put``); the promoted tree is immutable, so
+  concurrent restores of the same prefix share it copy-on-write.  The
+  host tier is itself LRU under its own byte budget; overflow there is
+  a true drop.  Tree movement is injectable (``to_host`` /
+  ``to_device``) and defaults to ``EngineCore.tree_to_host`` /
+  ``tree_to_device`` semantics (plain ``jax.device_get`` /
+  ``device_put``), which keeps the cache model-agnostic and the spill
+  tier unit-testable on numpy trees.
 * **Metrics**: hits (full/partial), misses, tokens reused, bytes in
-  use, insert/evict counts -- exported via :meth:`stats` into the
-  engine's ``metrics_json()['prefix_cache']`` section.
+  use, insert/evict counts, and the spill tier's
+  spills/spilled_bytes/promotions counters -- exported via
+  :meth:`stats` into the engine's ``metrics_json()['prefix_cache']``
+  section.
 
 The cache itself is model-agnostic (it never inspects the trees beyond
 byte accounting); correctness of restore-then-resume is the engine's
@@ -39,7 +53,9 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
 
 # budget accounting shares the roofline model's leaf-bytes definition
 # (int8 leaves count 1 byte/elem, so an int8-KV snapshot is accounted
@@ -84,15 +100,34 @@ class StateCache:
     ``byte_budget`` bounds the summed leaf bytes of all entries; 0 (or
     negative) disables insertion entirely (every lookup misses), which
     lets callers keep one code path for cache-on/cache-off.
+
+    ``spill_byte_budget`` > 0 turns on the host-RAM spill tier:
+    device-tier LRU evictions move to host memory instead of dropping,
+    and a lookup that matches a spilled prefix promotes it back (see
+    the module docstring).  ``to_host`` / ``to_device`` override how
+    trees cross the boundary (tests inject counters; the engine passes
+    ``EngineCore.tree_to_host`` / ``tree_to_device``).
     """
 
-    def __init__(self, byte_budget: int, max_entries: int = 1024):
+    def __init__(self, byte_budget: int, max_entries: int = 1024,
+                 spill_byte_budget: int = 0,
+                 to_host: Optional[Callable[[Dict], Dict]] = None,
+                 to_device: Optional[Callable[[Dict], Dict]] = None):
         self.byte_budget = int(byte_budget)
         self.max_entries = int(max_entries)
+        self.spill_byte_budget = int(spill_byte_budget)
+        self._to_host = to_host if to_host is not None else jax.device_get
+        self._to_device = (to_device if to_device is not None
+                           else jax.device_put)
         self._entries: "OrderedDict[Tuple[int, int], CacheEntry]" = \
             OrderedDict()
         self._len_counts: Dict[int, int] = {}   # prefix length -> #entries
         self.bytes_in_use = 0
+        # host (spill) tier: same key scheme, numpy-leaved trees
+        self._host: "OrderedDict[Tuple[int, int], CacheEntry]" = \
+            OrderedDict()
+        self._host_len_counts: Dict[int, int] = {}
+        self.host_bytes_in_use = 0
         # counters (exported via stats())
         self.hits = 0               # full hits: whole prompt head cached
         self.partial_hits = 0       # matched a shorter prefix
@@ -101,6 +136,11 @@ class StateCache:
         self.evicted = 0
         self.rejected = 0           # single entry larger than the budget
         self.tokens_reused = 0      # prefill tokens skipped via restores
+        self.spills = 0             # device evictions moved to host RAM
+        self.spilled_bytes = 0      # cumulative bytes spilled
+        self.promotions = 0         # host hits moved back to the device
+        self.promoted_bytes = 0     # cumulative bytes promoted
+        self.host_evicted = 0       # true drops out of the host tier
 
     # -- queries ----------------------------------------------------------
     def __len__(self) -> int:
@@ -108,43 +148,58 @@ class StateCache:
 
     def __contains__(self, tokens: Sequence[int]) -> bool:
         key = (len(tokens), prefix_hash(tokens))
-        e = self._entries.get(key)
-        return e is not None and e.tokens == tuple(tokens)
+        for tier in (self._entries, self._host):
+            e = tier.get(key)
+            if e is not None and e.tokens == tuple(tokens):
+                return True
+        return False
 
     def _candidate_lengths(self, limit: int) -> List[int]:
-        return sorted((n for n in self._len_counts if n <= limit),
-                      reverse=True)
+        lens = set(self._len_counts)
+        lens.update(self._host_len_counts)
+        return sorted((n for n in lens if n <= limit), reverse=True)
 
     def peek_len(self, prompt: Sequence[int]) -> int:
         """Length of the longest cached prefix usable for ``prompt``
         (at most ``len(prompt) - 1`` -- the last prompt token is always
-        fed as the first decode input).  No counters, no LRU bump: the
-        scheduler calls this to order admissions without perturbing the
-        cache."""
-        e = self._match(prompt)
+        fed as the first decode input).  No counters, no LRU bump, no
+        promotion: the scheduler calls this to order admissions without
+        perturbing the cache."""
+        e, _ = self._match(prompt)
         return len(e.tokens) if e is not None else 0
 
-    def _match(self, prompt: Sequence[int]) -> Optional[CacheEntry]:
+    def _match(self, prompt: Sequence[int]
+               ) -> Tuple[Optional[CacheEntry], bool]:
+        """Longest usable prefix across BOTH tiers -> ``(entry,
+        is_spilled)``.  At equal length the device tier wins (no
+        promotion cost)."""
         limit = len(prompt) - 1
-        if limit <= 0 or not self._entries:
-            return None
+        if limit <= 0 or not (self._entries or self._host):
+            return None, False
         hs = rolling_hashes(prompt[:limit])
         for n in self._candidate_lengths(limit):
             e = self._entries.get((n, hs[n]))
             if e is not None and e.tokens == tuple(prompt[:n]):
-                return e
-        return None
+                return e, False
+            e = self._host.get((n, hs[n]))
+            if e is not None and e.tokens == tuple(prompt[:n]):
+                return e, True
+        return None, False
 
     def lookup(self, prompt: Sequence[int]) -> Optional[CacheEntry]:
         """Longest-prefix-match for ``prompt`` with accounting: bumps
         LRU recency and the hit/miss counters.  Returns the entry (its
         ``.tokens`` tell the caller how much prefill to skip) or None.
         A *full* hit covers ``len(prompt) - 1`` tokens: the request can
-        go straight to decoding."""
-        e = self._match(prompt)
+        go straight to decoding.  A match in the spill tier is promoted
+        back to the device tier first, so the returned ``.state`` is
+        always device-resident and shared across concurrent restores."""
+        e, spilled = self._match(prompt)
         if e is None:
             self.misses += 1
             return None
+        if spilled:
+            e = self._promote(e)
         key = (len(e.tokens), prefix_hash(e.tokens))
         self._entries.move_to_end(key)
         e.hits += 1
@@ -153,6 +208,20 @@ class StateCache:
             self.hits += 1
         else:
             self.partial_hits += 1
+        return e
+
+    def _promote(self, host_e: CacheEntry) -> CacheEntry:
+        """Move a spilled entry back to the device tier (one
+        ``device_put``); the device tier may evict -- and re-spill --
+        its own LRU to make room."""
+        key = (len(host_e.tokens), prefix_hash(host_e.tokens))
+        self._host_drop(key)
+        e = CacheEntry(tokens=host_e.tokens,
+                       state=self._to_device(host_e.state),
+                       nbytes=host_e.nbytes, hits=host_e.hits)
+        self.promotions += 1
+        self.promoted_bytes += e.nbytes
+        self._admit(key, e)
         return e
 
     # -- mutation ---------------------------------------------------------
@@ -174,31 +243,71 @@ class StateCache:
             return False
         if prev is not None:        # same-length hash collision: replace
             self._drop(key)
-        self._entries[key] = CacheEntry(tokens=tokens, state=state,
-                                        nbytes=nbytes)
-        self._len_counts[len(tokens)] = \
-            self._len_counts.get(len(tokens), 0) + 1
-        self.bytes_in_use += nbytes
+        if key in self._host:       # fresh device copy supersedes a
+            self._host_drop(key)    # stale (or colliding) spilled one
+        self._admit(key, CacheEntry(tokens=tokens, state=state,
+                                    nbytes=nbytes))
         self.inserted += 1
+        return True
+
+    def _admit(self, key: Tuple[int, int], e: CacheEntry) -> None:
+        """Store ``e`` in the device tier and run LRU eviction; each
+        eviction spills to the host tier when one is configured."""
+        self._entries[key] = e
+        n = len(e.tokens)
+        self._len_counts[n] = self._len_counts.get(n, 0) + 1
+        self.bytes_in_use += e.nbytes
         while (self.bytes_in_use > self.byte_budget
                or len(self._entries) > self.max_entries):
             oldest = next(iter(self._entries))
-            self._drop(oldest)
+            dropped = self._drop(oldest)
             self.evicted += 1
-        return True
+            self._spill(oldest, dropped)
 
-    def _drop(self, key: Tuple[int, int]) -> None:
+    def _spill(self, key: Tuple[int, int], e: CacheEntry) -> None:
+        if self.spill_byte_budget <= 0 or e.nbytes > self.spill_byte_budget:
+            return
+        if key in self._host:       # same-length hash collision: replace
+            self._host_drop(key)
+        self._host[key] = CacheEntry(tokens=e.tokens,
+                                     state=self._to_host(e.state),
+                                     nbytes=e.nbytes, hits=e.hits)
+        n = len(e.tokens)
+        self._host_len_counts[n] = self._host_len_counts.get(n, 0) + 1
+        self.host_bytes_in_use += e.nbytes
+        self.spills += 1
+        self.spilled_bytes += e.nbytes
+        while (self.host_bytes_in_use > self.spill_byte_budget
+               or len(self._host) > self.max_entries):
+            stale = next(iter(self._host))
+            self._host_drop(stale)
+            self.host_evicted += 1
+
+    def _drop(self, key: Tuple[int, int]) -> CacheEntry:
         e = self._entries.pop(key)
         self.bytes_in_use -= e.nbytes
         n = len(e.tokens)
         self._len_counts[n] -= 1
         if not self._len_counts[n]:
             del self._len_counts[n]
+        return e
+
+    def _host_drop(self, key: Tuple[int, int]) -> CacheEntry:
+        e = self._host.pop(key)
+        self.host_bytes_in_use -= e.nbytes
+        n = len(e.tokens)
+        self._host_len_counts[n] -= 1
+        if not self._host_len_counts[n]:
+            del self._host_len_counts[n]
+        return e
 
     def clear(self) -> None:
         self._entries.clear()
         self._len_counts.clear()
         self.bytes_in_use = 0
+        self._host.clear()
+        self._host_len_counts.clear()
+        self.host_bytes_in_use = 0
 
     # -- metrics ----------------------------------------------------------
     def stats(self) -> Dict:
@@ -219,4 +328,14 @@ class StateCache:
             "inserted": self.inserted,
             "evicted": self.evicted,
             "rejected": self.rejected,
+            # spill tier (all zero / empty when spill_byte_budget == 0)
+            "spill_enabled": self.spill_byte_budget > 0,
+            "spill_byte_budget": self.spill_byte_budget,
+            "host_entries": len(self._host),
+            "host_bytes_in_use": self.host_bytes_in_use,
+            "spills": self.spills,
+            "spilled_bytes": self.spilled_bytes,
+            "promotions": self.promotions,
+            "promoted_bytes": self.promoted_bytes,
+            "host_evicted": self.host_evicted,
         }

@@ -200,6 +200,25 @@ class EngineCore:
         self.state = write_slot(self.cfg, self.state, slot_state, i)
         self.counters["prefix_restores"] += 1
 
+    # device <-> host state movement: the prefix cache's spill tier
+    # evicts cold snapshots to host RAM instead of dropping them, so
+    # the device byte budget stops competing with decode slots for HBM.
+    # The policy (what to move when) lives in ``repro.serve.cache``;
+    # the mechanism lives here with the rest of the device-state code.
+    @staticmethod
+    def tree_to_host(tree: Dict) -> Dict:
+        """Materialize a state tree as host numpy arrays (one blocking
+        ``device_get`` per spill; leaves keep dtype and layout)."""
+        return jax.device_get(tree)
+
+    @staticmethod
+    def tree_to_device(tree: Dict) -> Dict:
+        """Promote a host tree back onto the default device.  jax
+        arrays are immutable, so the single promoted tree is shared
+        copy-on-write across however many concurrent ``restore_slot``
+        calls hit the same prefix -- no per-restore copies."""
+        return jax.device_put(tree)
+
     def clear_slot(self, i: int) -> None:
         """Reset slot ``i``'s sampling arrays after eviction (its state
         is re-initialised at the next seat)."""

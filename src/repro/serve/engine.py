@@ -28,6 +28,7 @@ when the cache is on; pass ``scheduler=`` explicitly to override.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Union
 
 from repro.configs.base import ModelConfig
@@ -41,6 +42,16 @@ from repro.serve.request import (FinishReason, Request, RequestOutput,
 from repro.serve.scheduler import Scheduler, make_scheduler
 
 
+class StepBudgetExhausted(RuntimeError):
+    """``LLMEngine.run`` ran out of steps with requests unfinished.
+
+    A load-generated run that quietly truncates invalidates its SLO
+    report, so exhaustion raises by default (``on_exhaust="warn"``
+    downgrades it); either way ``metrics_json()["engine"]
+    ["run_budget_exhausted"]`` records the event.  The engine is left
+    in a consistent state -- calling ``run`` again resumes."""
+
+
 class LLMEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 2048, qctx=None, seed: int = 0,
@@ -48,6 +59,7 @@ class LLMEngine:
                  shard: Optional[bool] = None,
                  scheduler: Union[str, Scheduler, None] = None,
                  prefix_cache_mb: Optional[float] = None,
+                 prefix_cache_spill_mb: Optional[float] = None,
                  clock=time.monotonic):
         self.core = EngineCore(params, cfg, max_batch=max_batch,
                                max_len=max_len, qctx=qctx, seed=seed,
@@ -55,8 +67,17 @@ class LLMEngine:
                                prefill_chunk=prefill_chunk, shard=shard)
         self.prefix_cache: Optional[StateCache] = None
         if prefix_cache_mb is not None and prefix_cache_mb > 0:
+            spill_mb = prefix_cache_spill_mb or 0
             self.prefix_cache = StateCache(
-                byte_budget=int(prefix_cache_mb * (1 << 20)))
+                byte_budget=int(prefix_cache_mb * (1 << 20)),
+                spill_byte_budget=int(spill_mb * (1 << 20)),
+                to_host=self.core.tree_to_host,
+                to_device=self.core.tree_to_device)
+        elif prefix_cache_spill_mb:
+            raise ValueError(
+                "prefix_cache_spill_mb needs prefix_cache_mb > 0: the "
+                "spill tier extends the device cache, it cannot replace "
+                "it")
         if scheduler is None:
             scheduler = ("cache-aware" if self.prefix_cache is not None
                          else "fcfs")
@@ -229,11 +250,34 @@ class LLMEngine:
     def has_unfinished(self) -> bool:
         return self.scheduler.has_work
 
-    def run(self, max_steps: int = 10_000) -> None:
+    def run(self, max_steps: int = 10_000, *,
+            on_exhaust: str = "raise") -> None:
+        """Step until drained, or until ``max_steps`` is spent.  A
+        budget exhausted with requests still unfinished raises
+        :class:`StepBudgetExhausted` (``on_exhaust="warn"`` downgrades
+        to a warning) -- silent truncation would invalidate any
+        latency/SLO numbers derived from the run.  The engine stays
+        consistent either way; ``run`` again to resume."""
+        if on_exhaust not in ("raise", "warn"):
+            raise ValueError(
+                f"on_exhaust must be 'raise' or 'warn', got "
+                f"{on_exhaust!r}")
         for _ in range(max_steps):
             if not self.has_unfinished():
                 return
             self.step()
+        if not self.has_unfinished():
+            return
+        self.metrics.run_budget_exhausted += 1
+        left = self.scheduler.outstanding()
+        msg = (f"run(max_steps={max_steps}) exhausted its step budget "
+               f"with {len(left)} request(s) unfinished "
+               f"({', '.join(left[:8])}{'...' if len(left) > 8 else ''}); "
+               "results are truncated -- raise max_steps or call run() "
+               "again to resume")
+        if on_exhaust == "raise":
+            raise StepBudgetExhausted(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=2)
 
     def _pump(self) -> bool:
         """Stream-iteration driver: advance the engine once if it still

@@ -1,0 +1,32 @@
+"""repro.serve.loadgen -- trace-driven traffic simulation.
+
+Build a deterministic arrival trace from seeded workload models
+(:class:`WorkloadMix`), replay it against an :class:`LLMEngine`
+through the async :class:`EnginePump` (or the sync consumer-pumped
+control), and get back a tail-latency / goodput / occupancy report
+gated by an :class:`SLO`::
+
+    from repro.serve.loadgen import (SharedPrefixChat, RAGLongPrompt,
+                                     BurstyArrivals, WorkloadMix,
+                                     SLO, run)
+    mix = WorkloadMix([(3, SharedPrefixChat()), (1, RAGLongPrompt())],
+                      cancel_fraction=0.1)
+    trace = mix.build(n_requests=64, vocab_size=cfg.vocab_size, seed=0)
+    trace.save("trace.json")          # replay later, bit-identically
+    report = run(engine, trace, SLO(ttft_p99_ms=500.0))
+"""
+from repro.serve.loadgen.runner import SLO, run
+from repro.serve.loadgen.trace import (TRACE_VERSION, Trace, TraceEvent,
+                                       validate_prompts)
+from repro.serve.loadgen.workloads import (BurstyArrivals,
+                                           ClusteredArrivals,
+                                           RAGLongPrompt,
+                                           SharedPrefixChat,
+                                           UniformArrivals, WorkloadMix)
+
+__all__ = [
+    "SLO", "run",
+    "TRACE_VERSION", "Trace", "TraceEvent", "validate_prompts",
+    "BurstyArrivals", "ClusteredArrivals", "RAGLongPrompt",
+    "SharedPrefixChat", "UniformArrivals", "WorkloadMix",
+]

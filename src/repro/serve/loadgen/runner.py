@@ -1,0 +1,258 @@
+"""Trace replay against a live engine + the SLO report.
+
+``run(engine, trace)`` replays a :class:`Trace` and returns one
+JSON-safe report: tail latency (p50/p95/p99 TTFT/TPOT), goodput,
+time-weighted occupancy, the per-request token streams, and the SLO
+verdict.  Two pump modes:
+
+* ``pump="async"`` -- the real serving shape: an :class:`EnginePump`
+  steps the engine from a background thread while this thread paces
+  arrivals, so the open-loop schedule is honored (the engine decodes
+  *between* arrivals).
+* ``pump="sync"`` -- the consumer-pumped control: arrivals are paced
+  on the same wall schedule but nothing steps the engine until the
+  last request is in; then a step-drain loop runs it dry.  This is
+  exactly what today's pull-pumped streams do under load, and it is
+  fully deterministic (admission order == trace order), which makes it
+  the replay mode: two sync runs of the same trace produce identical
+  token streams AND identical schedules.
+
+Occupancy is TIME-weighted -- ``sum(occupancy * step_duration)`` over
+the wall window from the first submission to the last step -- so wall
+time the engine spends idle while requests are arriving counts as
+zero.  Per-step means would flatter the sync control (it only steps
+with full queues); the time-weighted number is what capacity planning
+actually cares about, and it is the async pump's win:
+``steps_before_last_arrival`` is 0 for sync by construction and > 0
+for async whenever there is any decode overlap.
+
+Cancellation replay: ``cancel_after_tokens=0`` cancels at submission
+(atomically with it under the async pump, via ``run_locked``);
+``k > 0`` cancels from the request's own ``on_token`` callback the
+moment the k-th token lands, which the engine supports reentrantly
+from inside ``step()``.  Both are token-deterministic, never
+wall-clock races.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.serve.engine import LLMEngine
+from repro.serve.loadgen.trace import Trace, TraceEvent, validate_prompts
+from repro.serve.metrics import stats_ms
+from repro.serve.pump import EnginePump
+
+_DRAIN_STEP_CAP = 200_000
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Latency/goodput objectives for one loadgen run (milliseconds).
+
+    ``ttft_ms``/``tpot_ms`` are PER-REQUEST bounds: a finished request
+    is "good" (counts toward goodput) only when it meets them.  The
+    ``*_p95``/``*_p99`` fields gate the report's tail percentiles;
+    ``check`` returns the list of violations (empty == pass).
+    """
+
+    ttft_ms: Optional[float] = None
+    tpot_ms: Optional[float] = None
+    ttft_p95_ms: Optional[float] = None
+    ttft_p99_ms: Optional[float] = None
+    tpot_p95_ms: Optional[float] = None
+
+    def good(self, ttft_ms: Optional[float],
+             tpot_ms: Optional[float]) -> bool:
+        if (self.ttft_ms is not None
+                and (ttft_ms is None or ttft_ms > self.ttft_ms)):
+            return False
+        if (self.tpot_ms is not None and tpot_ms is not None
+                and tpot_ms > self.tpot_ms):
+            return False
+        return True
+
+    def check(self, report: Dict) -> List[str]:
+        out = []
+        for section, pct, bound in (
+                ("ttft_ms", "p95", self.ttft_p95_ms),
+                ("ttft_ms", "p99", self.ttft_p99_ms),
+                ("tpot_ms", "p95", self.tpot_p95_ms)):
+            if bound is None:
+                continue
+            stats = report.get(section)
+            got = stats.get(pct) if stats else None
+            if got is None or got > bound:
+                out.append(f"{section}.{pct} = "
+                           f"{'n/a' if got is None else f'{got:.2f}'} ms "
+                           f"> SLO {bound:.2f} ms")
+        return out
+
+    def to_json(self) -> Dict:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None}
+
+
+def _cancel_hook(engine: LLMEngine, event: TraceEvent):
+    """``on_token`` callback cancelling after the k-th token (k >= 1).
+    Fires from inside ``step()`` -- the engine handles the reentry."""
+    k = event.cancel_after_tokens
+    if not k:
+        return None
+    seen = {"n": 0}
+
+    def on_token(_tok: int) -> None:
+        seen["n"] += 1
+        if seen["n"] == k:
+            engine.cancel(event.request_id)
+    return on_token
+
+
+def run(engine: LLMEngine, trace: Trace, slo: Optional[SLO] = None, *,
+        pump: str = "async", time_scale: float = 1.0,
+        drain_timeout_s: float = 300.0, warmup: bool = True,
+        clock: Callable[[], float] = time.perf_counter,
+        sleep: Callable[[float], None] = time.sleep) -> Dict:
+    """Replay ``trace`` against ``engine`` and report (see module doc).
+
+    ``time_scale`` compresses/stretches the arrival schedule
+    (``0`` = submit as fast as possible); ``warmup`` runs one tiny
+    request to absorb jit compilation before the pacing clock starts.
+    """
+    if pump not in ("async", "sync"):
+        raise ValueError(f"pump must be 'async' or 'sync', got {pump!r}")
+    if time_scale < 0:
+        raise ValueError(f"time_scale must be >= 0, got {time_scale}")
+    if not trace.events:
+        raise ValueError("trace has no events")
+    validate_prompts(trace, engine.cfg.vocab_size, engine.core.max_len)
+
+    if warmup:
+        wst = engine.add_request(
+            list(trace.events[0].prompt[:4]) or [0],
+            request_id="loadgen-warmup")
+        while not wst.finished:
+            engine.step()
+
+    states: Dict[str, object] = {}
+    samples: List = []          # (step start, duration, occupancy)
+    submit_lag_s: List[float] = []
+    t_start = clock()
+    last_submit = t_start
+
+    def _submit(add, cancel, locked, event: TraceEvent):
+        nonlocal last_submit
+        due = t_start + event.t * time_scale
+        while True:
+            wait = due - clock()
+            if wait <= 0:
+                break
+            sleep(wait)
+        submit_lag_s.append(max(0.0, clock() - due))
+
+        def _go():
+            st = add(list(event.prompt), event.sampling_params(),
+                     request_id=event.request_id,
+                     priority=event.priority,
+                     on_token=_cancel_hook(engine, event))
+            if event.cancel_after_tokens == 0:
+                cancel(event.request_id)
+            return st
+        states[event.request_id] = locked(_go)
+        last_submit = clock()
+
+    if pump == "async":
+        with EnginePump(engine, clock=clock) as ep:
+            for ev in trace.events:
+                _submit(ep.add_request, ep.cancel, ep.run_locked, ev)
+            if not ep.drain(timeout=drain_timeout_s):
+                raise RuntimeError(
+                    f"loadgen drain timed out after {drain_timeout_s}s "
+                    f"with {engine.scheduler.outstanding()!r} "
+                    "outstanding")
+            samples = list(ep.samples)
+    else:
+        for ev in trace.events:
+            _submit(engine.add_request, engine.cancel, lambda f: f(), ev)
+        steps = 0
+        while engine.has_unfinished():
+            if steps >= _DRAIN_STEP_CAP:
+                raise RuntimeError(
+                    f"sync drain exceeded {_DRAIN_STEP_CAP} steps with "
+                    f"{engine.scheduler.outstanding()!r} outstanding")
+            t0 = clock()
+            engine.step()
+            occ = engine.metrics.occupancy_series
+            samples.append((t0, clock() - t0, occ[-1] if occ else 0.0))
+            steps += 1
+    t_end = clock()
+
+    return _report(engine, trace, slo, states, samples,
+                   pump=pump, time_scale=time_scale,
+                   window=(t_start, last_submit, t_end),
+                   submit_lag_s=submit_lag_s)
+
+
+def _report(engine: LLMEngine, trace: Trace, slo: Optional[SLO],
+            states: Dict, samples: List, *, pump: str,
+            time_scale: float, window, submit_lag_s) -> Dict:
+    t_start, last_submit, t_end = window
+    recs = {e.request_id: engine.metrics.requests[e.request_id]
+            for e in trace.events}
+
+    busy = sum(occ * dur for _, dur, occ in samples)
+    span = max(t_end - t_start,
+               max((t0 + dur for t0, dur, _ in samples),
+                   default=t_start) - t_start)
+
+    good_requests = good_tokens = 0
+    for rid, m in recs.items():
+        if m.finish_reason not in ("stop", "length"):
+            continue
+        d = m.to_dict()
+        if slo is None or slo.good(d["ttft_ms"], d["tpot_ms"]):
+            good_requests += 1
+            good_tokens += m.generated
+
+    scheduled = [rid for rid, m in recs.items()
+                 if m.scheduled_time is not None]
+    scheduled.sort(key=lambda rid: recs[rid].scheduled_time)
+
+    report = {
+        "trace": {"name": trace.name, "seed": trace.seed,
+                  "n_requests": len(trace),
+                  "n_cancelled": trace.n_cancelled,
+                  "span_s": trace.span_s},
+        "pump": pump,
+        "time_scale": time_scale,
+        "wall_s": t_end - t_start,
+        "ttft_ms": stats_ms([m.ttft_s for m in recs.values()
+                             if m.ttft_s is not None]),
+        "tpot_ms": stats_ms([m.tpot_s for m in recs.values()
+                             if m.tpot_s is not None]),
+        "queue_time_ms": stats_ms([m.queue_time_s for m in recs.values()
+                                   if m.queue_time_s is not None]),
+        "submit_lag_ms": stats_ms(submit_lag_s),
+        "goodput_requests": good_requests,
+        "goodput_tokens": good_tokens,
+        "goodput_rps": (good_requests / (t_end - t_start)
+                        if t_end > t_start else None),
+        "completed": sum(1 for m in recs.values()
+                         if m.finish_reason in ("stop", "length")),
+        "cancelled": sum(1 for m in recs.values()
+                         if m.finish_reason == "cancelled"),
+        "steps": len(samples),
+        "steps_before_last_arrival": sum(
+            1 for t0, _, _ in samples if t0 < last_submit),
+        "occupancy_mean": busy / span if span > 0 else None,
+        "schedule": scheduled,
+        "token_streams": {rid: list(states[rid].token_ids)
+                          for rid in recs},
+    }
+    if slo is not None:
+        violations = slo.check(report)
+        report["slo"] = {"objectives": slo.to_json(),
+                         "violations": violations,
+                         "ok": not violations}
+    return report

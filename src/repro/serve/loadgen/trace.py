@@ -1,0 +1,158 @@
+"""Replayable traffic traces: the loadgen's on-disk interchange format.
+
+A trace is a list of arrival events, each carrying everything the
+engine needs to reproduce the request exactly: the prompt, the full
+``SamplingParams`` surface (including an explicit per-request PRNG
+seed -- seedless requests would derive their key from the admission
+order, which an async replay does not fix), a priority, and an
+optional deterministic cancellation point.
+
+Cancellation is expressed in *tokens*, not wall time:
+``cancel_after_tokens=k`` cancels the request the moment its ``k``-th
+token is delivered (``k=0`` cancels at submission, before any token
+can be decoded).  Wall-time cancels would race the scheduler and make
+two replays disagree on how many tokens a cancelled request produced;
+token-count cancels make the cancelled stream bit-reproducible.
+
+The JSON schema (``version`` 1) is flat and self-describing::
+
+    {"version": 1, "name": ..., "seed": ..., "meta": {...},
+     "events": [{"t": 0.013, "request_id": "chat-0",
+                 "prompt": [...], "max_tokens": 8,
+                 "temperature": 0.8, "top_k": 20, "top_p": 0.95,
+                 "seed": 1234, "stop_token_ids": [], "priority": 0,
+                 "cancel_after_tokens": null, "workload": "chat"}]}
+
+``Trace.save``/``Trace.load`` round-trip it; two builds of the same
+``WorkloadMix`` with the same seed serialize to identical JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple
+
+from repro.serve.params import SamplingParams
+
+TRACE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One request arrival at trace time ``t`` (seconds from start)."""
+
+    t: float
+    request_id: str
+    prompt: Tuple[int, ...]
+    max_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+    priority: int = 0
+    cancel_after_tokens: Optional[int] = None
+    workload: str = ""
+
+    def sampling_params(self) -> SamplingParams:
+        return SamplingParams(temperature=self.temperature,
+                              top_k=self.top_k, top_p=self.top_p,
+                              seed=self.seed,
+                              max_tokens=self.max_tokens,
+                              stop_token_ids=tuple(self.stop_token_ids))
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["prompt"] = list(self.prompt)
+        d["stop_token_ids"] = list(self.stop_token_ids)
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "TraceEvent":
+        d = dict(d)
+        d["prompt"] = tuple(int(t) for t in d["prompt"])
+        d["stop_token_ids"] = tuple(int(t)
+                                    for t in d.get("stop_token_ids", ()))
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class Trace:
+    """An ordered arrival schedule plus its provenance."""
+
+    events: List[TraceEvent]
+    seed: int = 0
+    name: str = "trace"
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.events = sorted(self.events, key=lambda e: e.t)
+        seen = set()
+        for e in self.events:
+            if e.t < 0:
+                raise ValueError(
+                    f"event {e.request_id} has negative time {e.t}")
+            if e.request_id in seen:
+                raise ValueError(
+                    f"duplicate request_id {e.request_id!r} in trace")
+            seen.add(e.request_id)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    @property
+    def span_s(self) -> float:
+        """Arrival window: time of the last arrival."""
+        return self.events[-1].t if self.events else 0.0
+
+    @property
+    def n_cancelled(self) -> int:
+        return sum(1 for e in self.events
+                   if e.cancel_after_tokens is not None)
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> Dict:
+        return {"version": TRACE_VERSION, "name": self.name,
+                "seed": self.seed, "meta": self.meta,
+                "events": [e.to_json() for e in self.events]}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "Trace":
+        v = d.get("version")
+        if v != TRACE_VERSION:
+            raise ValueError(
+                f"unsupported trace version {v!r} "
+                f"(this build reads version {TRACE_VERSION})")
+        return cls(events=[TraceEvent.from_json(e) for e in d["events"]],
+                   seed=int(d.get("seed", 0)),
+                   name=d.get("name", "trace"),
+                   meta=dict(d.get("meta", {})))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def validate_prompts(trace: Trace, vocab_size: int,
+                     max_len: Optional[int] = None) -> None:
+    """Fail fast (before any device work) when a trace does not fit
+    the engine it is about to be replayed on."""
+    for e in trace.events:
+        if not e.prompt:
+            raise ValueError(f"event {e.request_id} has an empty prompt")
+        bad = [t for t in e.prompt if not 0 <= t < vocab_size]
+        if bad:
+            raise ValueError(
+                f"event {e.request_id} has out-of-vocab tokens "
+                f"{bad[:4]} (vocab_size={vocab_size})")
+        if max_len is not None and len(e.prompt) + e.max_tokens > max_len:
+            raise ValueError(
+                f"event {e.request_id} needs "
+                f"{len(e.prompt) + e.max_tokens} positions but the "
+                f"engine's max_len is {max_len}")

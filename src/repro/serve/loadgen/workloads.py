@@ -1,0 +1,266 @@
+"""Deterministic, seeded workload models for the load generator.
+
+Every generator draws from a ``random.Random`` threaded through
+``WorkloadMix.build`` -- no wall-clock entropy anywhere, so the same
+``(mix, seed, n_requests)`` always builds the identical trace and a
+saved trace replays exactly.
+
+Components:
+
+* :class:`SharedPrefixChat` -- chat traffic against a pool of shared
+  system prompts / few-shot templates.  Prefix popularity is
+  Zipf-distributed (rank ``r`` drawn with weight ``1 / r**zipf_a``),
+  the realistic shape for prefix-cache stress: a couple of hot
+  prefixes dominate while a long tail of cold ones forces eviction.
+* :class:`RAGLongPrompt` -- retrieval-augmented requests: long, mostly
+  unique prompts (the pasted-context shape) with short completions.
+  These are prefill-heavy and cache-hostile by design.
+* :class:`BurstyArrivals` -- open-loop arrival process: Poisson gaps
+  whose rate switches between a base and a burst level via on/off
+  phases with exponentially distributed durations (a standard
+  Markov-modulated Poisson process).  Bursts are what make tail
+  latency diverge from the mean, which is the whole point of gating
+  p95/p99 instead of means.
+
+``WorkloadMix`` composes weighted components, sprinkles deterministic
+mid-flight cancellations (``cancel_fraction`` of requests get a
+``cancel_after_tokens`` point), and emits a :class:`Trace`.
+"""
+from __future__ import annotations
+
+import bisect
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serve.loadgen.trace import Trace, TraceEvent
+
+
+def _span(rng: random.Random, lo_hi: Tuple[int, int]) -> int:
+    lo, hi = lo_hi
+    if lo > hi:
+        raise ValueError(f"range ({lo}, {hi}) has lo > hi")
+    return rng.randint(lo, hi)
+
+
+class SharedPrefixChat:
+    """Zipf-reused shared prompt heads + short unique suffixes."""
+
+    name = "chat"
+
+    def __init__(self, *, n_prefixes: int = 8, prefix_len: int = 32,
+                 zipf_a: float = 1.2,
+                 suffix_len: Tuple[int, int] = (2, 6),
+                 max_tokens: Tuple[int, int] = (4, 12),
+                 sampled_fraction: float = 0.5):
+        if n_prefixes < 1 or prefix_len < 1:
+            raise ValueError("need at least one prefix of length >= 1")
+        self.n_prefixes = n_prefixes
+        self.prefix_len = prefix_len
+        self.zipf_a = zipf_a
+        self.suffix_len = suffix_len
+        self.max_tokens = max_tokens
+        self.sampled_fraction = sampled_fraction
+        self._prefixes: List[List[int]] = []
+        self._cum: List[float] = []
+
+    def prepare(self, rng: random.Random, vocab_size: int) -> None:
+        self._prefixes = [[rng.randrange(vocab_size)
+                           for _ in range(self.prefix_len)]
+                          for _ in range(self.n_prefixes)]
+        weights = [1.0 / (r + 1) ** self.zipf_a
+                   for r in range(self.n_prefixes)]
+        total = sum(weights)
+        acc, self._cum = 0.0, []
+        for w in weights:
+            acc += w / total
+            self._cum.append(acc)
+
+    def sample(self, rng: random.Random, vocab_size: int) -> Dict:
+        idx = min(bisect.bisect_left(self._cum, rng.random()),
+                  self.n_prefixes - 1)
+        suffix = [rng.randrange(vocab_size)
+                  for _ in range(_span(rng, self.suffix_len))]
+        sampled = rng.random() < self.sampled_fraction
+        return {
+            "prompt": tuple(self._prefixes[idx] + suffix),
+            "max_tokens": _span(rng, self.max_tokens),
+            "temperature": 0.8 if sampled else 0.0,
+            "top_k": 20 if sampled else 0,
+            "top_p": 0.95 if sampled else 1.0,
+        }
+
+
+class RAGLongPrompt:
+    """Long unique prompts, short outputs (prefill-dominated)."""
+
+    name = "rag"
+
+    def __init__(self, *, prompt_len: Tuple[int, int] = (48, 128),
+                 max_tokens: Tuple[int, int] = (2, 6),
+                 sampled_fraction: float = 0.2):
+        self.prompt_len = prompt_len
+        self.max_tokens = max_tokens
+        self.sampled_fraction = sampled_fraction
+
+    def prepare(self, rng: random.Random, vocab_size: int) -> None:
+        del rng, vocab_size          # stateless: nothing to materialize
+
+    def sample(self, rng: random.Random, vocab_size: int) -> Dict:
+        n = _span(rng, self.prompt_len)
+        sampled = rng.random() < self.sampled_fraction
+        return {
+            "prompt": tuple(rng.randrange(vocab_size) for _ in range(n)),
+            "max_tokens": _span(rng, self.max_tokens),
+            "temperature": 0.7 if sampled else 0.0,
+            "top_k": 0,
+            "top_p": 0.9 if sampled else 1.0,
+        }
+
+
+class BurstyArrivals:
+    """Markov-modulated Poisson arrivals: base rate with burst phases.
+
+    ``rate`` / ``burst_rate`` are requests per second; ``off_s`` /
+    ``on_s`` are the MEAN durations of the base and burst phases
+    (exponentially distributed).  ``burst_rate=rate`` degrades to a
+    plain Poisson process.
+    """
+
+    def __init__(self, *, rate: float = 20.0, burst_rate: float = 80.0,
+                 on_s: float = 0.1, off_s: float = 0.2):
+        if rate <= 0 or burst_rate <= 0:
+            raise ValueError("arrival rates must be > 0")
+        if on_s <= 0 or off_s <= 0:
+            raise ValueError("phase durations must be > 0")
+        self.rate = rate
+        self.burst_rate = burst_rate
+        self.on_s = on_s
+        self.off_s = off_s
+
+    def times(self, rng: random.Random, n: int) -> List[float]:
+        out: List[float] = []
+        t = 0.0
+        bursting = False
+        phase_end = rng.expovariate(1.0 / self.off_s)
+        while len(out) < n:
+            gap = rng.expovariate(self.burst_rate if bursting
+                                  else self.rate)
+            t += gap
+            while t >= phase_end:
+                bursting = not bursting
+                phase_end += rng.expovariate(
+                    1.0 / (self.on_s if bursting else self.off_s))
+            out.append(t)
+        return out
+
+
+class ClusteredArrivals:
+    """``n_clusters`` near-simultaneous bursts, ``gap_s`` apart.
+
+    The adversarial shape for a consumer-pumped engine: each burst
+    fills the batch, then nothing arrives while it drains.  A
+    background pump decodes each burst during the following gap; the
+    sync control cannot start until the last burst has landed, which
+    is exactly the time-weighted-occupancy separation the loadgen
+    benchmark measures.  Deterministic (no rng draw).
+    """
+
+    def __init__(self, *, n_clusters: int = 4, gap_s: float = 1.0,
+                 spread_s: float = 0.005):
+        if n_clusters < 1 or gap_s < 0 or spread_s < 0:
+            raise ValueError("need n_clusters >= 1 and non-negative "
+                             "gap_s / spread_s")
+        self.n_clusters = n_clusters
+        self.gap_s = gap_s
+        self.spread_s = spread_s
+
+    def times(self, rng: random.Random, n: int) -> List[float]:
+        del rng
+        per = max(1, (n + self.n_clusters - 1) // self.n_clusters)
+        return [(i // per) * self.gap_s + (i % per) * self.spread_s
+                for i in range(n)]
+
+
+class UniformArrivals:
+    """Evenly spaced arrivals over ``span_s`` (a smoke-test pacing)."""
+
+    def __init__(self, *, span_s: float = 0.5):
+        if span_s < 0:
+            raise ValueError("span_s must be >= 0")
+        self.span_s = span_s
+
+    def times(self, rng: random.Random, n: int) -> List[float]:
+        del rng
+        if n <= 1:
+            return [0.0] * n
+        return [i * self.span_s / (n - 1) for i in range(n)]
+
+
+class WorkloadMix:
+    """Weighted composition of workload components -> :class:`Trace`.
+
+    ``components`` is ``[(weight, component), ...]``;
+    ``cancel_fraction`` of the generated requests receive a
+    deterministic ``cancel_after_tokens`` drawn from
+    ``cancel_after_tokens`` (0 = cancel at submission -- exercises
+    cancel-while-queued; larger values cancel mid-decode).
+    """
+
+    def __init__(self, components: Sequence[Tuple[float, object]], *,
+                 cancel_fraction: float = 0.0,
+                 cancel_after_tokens: Tuple[int, int] = (0, 3)):
+        if not components:
+            raise ValueError("WorkloadMix needs at least one component")
+        if any(w <= 0 for w, _ in components):
+            raise ValueError("component weights must be > 0")
+        if not 0.0 <= cancel_fraction <= 1.0:
+            raise ValueError(
+                f"cancel_fraction must be in [0, 1], got "
+                f"{cancel_fraction}")
+        self.components = list(components)
+        self.cancel_fraction = cancel_fraction
+        self.cancel_after_tokens = cancel_after_tokens
+        total = sum(w for w, _ in components)
+        acc, self._cum = 0.0, []
+        for w, _ in components:
+            acc += w / total
+            self._cum.append(acc)
+
+    def build(self, *, n_requests: int, vocab_size: int, seed: int = 0,
+              arrivals: Optional[object] = None,
+              name: str = "mix") -> Trace:
+        """Generate a fully replayable trace.  Every request carries an
+        explicit SamplingParams seed, so the replayed token streams do
+        not depend on admission order (the engine's seedless fallback
+        would tie them to it)."""
+        if n_requests < 1:
+            raise ValueError("n_requests must be >= 1")
+        rng = random.Random(seed)
+        arrivals = arrivals if arrivals is not None else BurstyArrivals()
+        times = arrivals.times(rng, n_requests)
+        for _, comp in self.components:
+            comp.prepare(rng, vocab_size)
+        events: List[TraceEvent] = []
+        counts: Dict[str, int] = {}
+        for i, t in enumerate(times):
+            ci = min(bisect.bisect_left(self._cum, rng.random()),
+                     len(self.components) - 1)
+            comp = self.components[ci][1]
+            fields = comp.sample(rng, vocab_size)
+            cancel = None
+            if rng.random() < self.cancel_fraction:
+                cancel = _span(rng, self.cancel_after_tokens)
+            counts[comp.name] = counts.get(comp.name, 0) + 1
+            events.append(TraceEvent(
+                t=round(t, 6),
+                request_id=f"{comp.name}-{i}",
+                seed=rng.randrange(1 << 31),
+                cancel_after_tokens=cancel,
+                workload=comp.name,
+                **fields))
+        return Trace(events=events, seed=seed, name=name,
+                     meta={"n_requests": n_requests,
+                           "vocab_size": vocab_size,
+                           "arrivals": type(arrivals).__name__,
+                           "cancel_fraction": self.cancel_fraction,
+                           "component_counts": counts})

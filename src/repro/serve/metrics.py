@@ -116,9 +116,17 @@ def _stats_ms(vals_s: List[float]) -> Optional[Dict[str, float]]:
         "mean": sum(vals) / len(vals),
         "p50": _percentile(vals, 0.50),
         "p95": _percentile(vals, 0.95),
+        "p99": _percentile(vals, 0.99),
         "max": vals[-1],
         "n": len(vals),
     }
+
+
+def stats_ms(vals_s: List[float]) -> Optional[Dict[str, float]]:
+    """Public alias: mean/p50/p95/p99/max/n summary (ms) of a list of
+    second-valued samples -- the loadgen report uses the same shape as
+    the engine summaries so BENCH_PR.json stays uniform."""
+    return _stats_ms(vals_s)
 
 
 class Metrics:
@@ -132,6 +140,11 @@ class Metrics:
         self.requests_submitted = 0
         self.requests_finished = 0
         self.requests_cancelled = 0
+        # times LLMEngine.run() exhausted its step budget with requests
+        # still unfinished (a truncated run invalidates SLO numbers, so
+        # it is surfaced here even when the caller downgraded the raise
+        # to a warning)
+        self.run_budget_exhausted = 0
         self.queue_depth_series: Deque[int] = deque(maxlen=_SERIES_CAP)
         self.occupancy_series: Deque[float] = deque(maxlen=_SERIES_CAP)
         self._start_time: Optional[float] = None
@@ -210,6 +223,7 @@ class Metrics:
             "requests_submitted": self.requests_submitted,
             "requests_finished": self.requests_finished,
             "requests_cancelled": self.requests_cancelled,
+            "run_budget_exhausted": self.run_budget_exhausted,
             "tokens_per_s": (self.tokens_generated / elapsed
                              if elapsed and elapsed > 0 else None),
             "occupancy_mean": (sum(occ) / len(occ) if occ else None),

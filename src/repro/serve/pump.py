@@ -1,0 +1,166 @@
+"""EnginePump: a background stepping driver for ``LLMEngine``.
+
+Today's engine is pumped by its consumers: iterating a
+``RequestStream`` calls ``engine.step()`` until the stream yields, so
+the engine only advances at one client's consumption pace.  That is
+fine for a single caller but it breaks open-loop load generation -- an
+arrival schedule cannot be honored when submitting a request does not
+make it run until somebody polls.
+
+``EnginePump`` decouples stepping from consumption: a daemon thread
+steps the engine whenever it has work and parks on a condition
+variable when it does not.  Producers (``add_request`` / ``cancel``)
+and any other engine access go through the pump's lock, so the engine
+itself stays single-threaded -- exactly one thread is ever inside
+``step()``, jax dispatch included.
+
+Streams still work while the pump runs: the pump replaces each
+request's pull-pump with a blocking wait on the same condition, so a
+consumer iterating a stream sleeps until the pump thread delivers the
+next token instead of stepping the engine from a second thread.
+
+The pump also records a per-step timeline -- ``(start, duration,
+occupancy)`` samples -- which is what the loadgen report integrates
+into time-weighted occupancy (idle wall time counts as zero, unlike
+the engine's per-step occupancy series).
+
+Usage::
+
+    with EnginePump(engine) as pump:
+        st = pump.add_request(prompt, SamplingParams(...))
+        ...                      # arrivals paced in real time
+        pump.drain(timeout=30)   # block until idle
+    report = engine.metrics_json()
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.serve.engine import LLMEngine
+from repro.serve.request import RequestState
+
+
+class EnginePump:
+    """Background stepping driver (see module docstring).
+
+    ``idle_wait_s`` bounds how long the pump thread parks between
+    wakeup checks when the engine is empty; submissions notify the
+    condition, so the practical wakeup latency is the notify, not the
+    timeout.
+    """
+
+    def __init__(self, engine: LLMEngine, *,
+                 clock: Callable[[], float] = time.perf_counter,
+                 idle_wait_s: float = 0.02):
+        self.engine = engine
+        self._clock = clock
+        self._idle_wait_s = idle_wait_s
+        # RLock: on_token callbacks fired from inside step() may call
+        # back into engine.cancel() on the pump thread
+        self._work = threading.Condition(threading.RLock())
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        self.steps = 0
+        # (step start, step duration, occupancy after admission) --
+        # the loadgen report integrates these over wall time
+        self.samples: List[Tuple[float, float, float]] = []
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "EnginePump":
+        if self._thread is not None:
+            raise RuntimeError("pump already started")
+        self._thread = threading.Thread(target=self._loop,
+                                        name="engine-pump", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        if self._thread is None:
+            return
+        with self._work:
+            self._stop = True
+            self._work.notify_all()
+        self._thread.join(timeout)
+        if self._thread.is_alive():      # pragma: no cover - watchdog
+            raise RuntimeError("pump thread did not stop")
+        self._thread = None
+
+    def __enter__(self) -> "EnginePump":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                if self._stop:
+                    return
+                if not self.engine.has_unfinished():
+                    self._work.wait(self._idle_wait_s)
+                    continue
+                t0 = self._clock()
+                self.engine.step()
+                dur = self._clock() - t0
+                occ = self.engine.metrics.occupancy_series
+                self.samples.append((t0, dur, occ[-1] if occ else 0.0))
+                self.steps += 1
+                # wake drain() and any stream consumers
+                self._work.notify_all()
+
+    # -- producer side (all engine access goes through the lock) ----------
+    def add_request(self, prompt, params=None, **kw) -> RequestState:
+        """Thread-safe ``engine.add_request``; the returned state's
+        stream blocks on the pump instead of stepping the engine."""
+        with self._work:
+            st = self.engine.add_request(prompt, params, **kw)
+            st.stream._pump = self._stream_wait
+            self._work.notify_all()
+            return st
+
+    def cancel(self, request_id: str) -> bool:
+        with self._work:
+            return self.engine.cancel(request_id)
+
+    def run_locked(self, fn: Callable[[], object]):
+        """Run ``fn()`` under the pump lock -- e.g. submit-and-cancel
+        atomically so the pump thread cannot decode a token in
+        between (deterministic cancel-while-queued)."""
+        with self._work:
+            out = fn()
+            self._work.notify_all()
+            return out
+
+    def metrics_json(self):
+        with self._work:
+            return self.engine.metrics_json()
+
+    # -- consumers ---------------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until the engine has no unfinished work; True when it
+        drained, False on timeout (work still pending)."""
+        deadline = None if timeout is None else self._clock() + timeout
+        with self._work:
+            while self.engine.has_unfinished():
+                if self._stop:
+                    return not self.engine.has_unfinished()
+                wait = self._idle_wait_s
+                if deadline is not None:
+                    wait = min(wait, deadline - self._clock())
+                    if wait <= 0:
+                        return False
+                self._work.wait(wait)
+            return True
+
+    def _stream_wait(self) -> bool:
+        """Installed as the pull-pump of streams submitted through the
+        pump: park until the pump thread makes progress.  Returns False
+        only when the pump is stopped (the stream can then never be
+        fed, matching the RequestStream stall contract)."""
+        with self._work:
+            if self._stop:
+                return False
+            self._work.wait(self._idle_wait_s)
+            return True

@@ -48,6 +48,14 @@ class Scheduler:
     def live(self) -> List[Tuple[int, RequestState]]:
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
 
+    def outstanding(self) -> List[str]:
+        """Request ids still queued or seated.  The loadgen drain check
+        (and ``LLMEngine.run``'s step-budget diagnostics) use this to
+        name exactly which requests a truncated run left behind; an
+        empty list == the slot table and queue are both clean."""
+        return ([s.request_id for s in self.waiting]
+                + [s.request_id for s in self.slots if s is not None])
+
     # -- admission / eviction --------------------------------------------
     def schedule(self) -> List[Tuple[int, RequestState]]:
         """Fill free slots from the queue (policy order); returns the

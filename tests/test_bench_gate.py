@@ -15,10 +15,12 @@ BASE = {
     "tpot_quamba_kernels_us": 100.0,
     "prefill_chunked_tokens_per_s": 5000.0,
     "engine_prefill": {"prefill_dispatches": 8},
-    "serve": {"ttft_ms": {"mean": 40.0},
+    "serve": {"ttft_ms": {"mean": 40.0, "p95": 80.0},
               "prefix_cache": {"ttft_ms_hit": {"mean": 10.0},
                                "ttft_ms_miss": {"mean": 40.0},
-                               "hit_rate": 0.8}},
+                               "hit_rate": 0.8},
+              "loadgen": {"ttft_ms": {"p99": 500.0},
+                          "goodput_requests": 11}},
 }
 
 
@@ -98,6 +100,41 @@ def test_gated_covers_serve_ttft():
     assert any(k == "serve.ttft_ms.mean" for k, _, _ in GATED)
     assert any(k == "serve.prefix_cache.ttft_ms_hit.mean"
                for k, _, _ in GATED)
+
+
+def test_gated_covers_tail_latency_keys():
+    """PR-6: the gate watches the p95/p99 TAILS, with the loose
+    small-sample threshold (100%), not the default 25%."""
+    by_key = {k: (hb, ov) for k, hb, ov in GATED}
+    assert by_key["serve.ttft_ms.p95"] == (False, 1.0)
+    assert by_key["serve.loadgen.ttft_ms.p99"] == (False, 1.0)
+    # doubling is wobble-tolerated; 2.5x is a caught regression
+    cur = dict(BASE, serve={"ttft_ms": {"p95": 155.0},
+                            "loadgen": {"ttft_ms": {"p99": 1250.0}}})
+    failures = gate(BASE, cur, 0.25)
+    assert len(failures) == 1
+    assert "serve.loadgen.ttft_ms.p99" in failures[0]
+
+
+def test_run_meta_stamp_is_ignored_by_the_gate():
+    """PR-6: BENCH_PR.json carries a top-level run_meta provenance
+    stamp (git commit, timestamp, backend); the gate must skip it in
+    both directions -- new artifact vs old baseline and rollback."""
+    stamped = dict(BASE, run_meta={
+        "git_commit": "deadbeef", "timestamp_utc": "2026-01-01T00:00:00",
+        "backend": "cpu", "device_kind": "cpu", "jax_version": "0.4.37"})
+    assert gate(BASE, stamped, 0.25) == []
+    assert gate(stamped, BASE, 0.25) == []
+    # two stamped artifacts with DIFFERENT metadata still compare clean
+    other = dict(stamped, run_meta={"git_commit": "cafef00d",
+                                    "backend": "tpu"})
+    assert gate(stamped, other, 0.25) == []
+
+
+def test_pre_pr6_artifact_without_loadgen_skips():
+    old = dict(BASE, serve={"ttft_ms": {"mean": 40.0}})  # no loadgen,
+    assert gate(old, BASE, 0.25) == []                   # no p95
+    assert gate(BASE, old, 0.25) == []
 
 
 def test_prefix_cache_keys_tolerated_by_old_and_new_gates():

@@ -1,0 +1,341 @@
+"""repro.serve.loadgen: deterministic workload/trace generation, trace
+replay through the sync and async pumps (bit-identical token streams),
+token-deterministic cancellation under load, SLO gating, and the
+engine's run-budget guard."""
+import json
+import random
+import warnings
+
+import jax
+import pytest
+
+pytestmark = pytest.mark.serve
+
+from repro.configs import get_config, scale_down
+from repro.models import init_params
+from repro.serve import (EnginePump, LLMEngine, SamplingParams,
+                         StepBudgetExhausted)
+from repro.serve.loadgen import (SLO, BurstyArrivals, ClusteredArrivals,
+                                 RAGLongPrompt, SharedPrefixChat, Trace,
+                                 TraceEvent, UniformArrivals,
+                                 WorkloadMix, run, validate_prompts)
+from repro.serve.metrics import stats_ms
+
+
+# ---------------------------------------------------------------------------
+# workload models + traces (pure python, no engine)
+# ---------------------------------------------------------------------------
+
+def _mix(cancel_fraction=0.0):
+    return WorkloadMix(
+        [(3, SharedPrefixChat(n_prefixes=4, prefix_len=8,
+                              suffix_len=(1, 2), max_tokens=(2, 4))),
+         (1, RAGLongPrompt(prompt_len=(10, 16), max_tokens=(1, 2)))],
+        cancel_fraction=cancel_fraction)
+
+
+def test_trace_build_is_deterministic_and_roundtrips(tmp_path):
+    t1 = _mix(0.25).build(n_requests=20, vocab_size=64, seed=5)
+    t2 = _mix(0.25).build(n_requests=20, vocab_size=64, seed=5)
+    assert (json.dumps(t1.to_json(), sort_keys=True)
+            == json.dumps(t2.to_json(), sort_keys=True))
+    t3 = _mix(0.25).build(n_requests=20, vocab_size=64, seed=6)
+    assert t3.to_json() != t1.to_json()          # the seed matters
+    p = t1.save(str(tmp_path / "trace.json"))
+    assert Trace.load(p).to_json() == t1.to_json()
+    # every request carries an explicit sampling seed: replayed streams
+    # must not depend on admission order (the engine's seedless salt)
+    assert all(e.seed is not None for e in t1.events)
+    assert 0 < t1.n_cancelled < len(t1)
+
+
+def test_trace_rejects_bad_schedules():
+    e = TraceEvent(t=0.0, request_id="a", prompt=(1, 2))
+    with pytest.raises(ValueError, match="duplicate"):
+        Trace(events=[e, TraceEvent(t=1.0, request_id="a",
+                                    prompt=(3, 4))])
+    with pytest.raises(ValueError, match="negative"):
+        Trace(events=[TraceEvent(t=-0.5, request_id="b",
+                                 prompt=(1,))])
+    with pytest.raises(ValueError, match="version"):
+        Trace.from_json({"version": 99, "events": []})
+
+
+def test_trace_events_sorted_by_arrival():
+    tr = Trace(events=[TraceEvent(t=2.0, request_id="b", prompt=(1,)),
+                       TraceEvent(t=1.0, request_id="a", prompt=(2,))])
+    assert [e.request_id for e in tr.events] == ["a", "b"]
+    assert tr.span_s == 2.0
+
+
+def test_validate_prompts_catches_misfit_traces():
+    tr = Trace(events=[TraceEvent(t=0.0, request_id="a",
+                                  prompt=(1, 2, 63), max_tokens=4)])
+    validate_prompts(tr, vocab_size=64, max_len=16)
+    with pytest.raises(ValueError, match="out-of-vocab"):
+        validate_prompts(tr, vocab_size=32)
+    with pytest.raises(ValueError, match="max_len"):
+        validate_prompts(tr, vocab_size=64, max_len=5)
+    empty = Trace(events=[TraceEvent(t=0.0, request_id="e",
+                                     prompt=())])
+    with pytest.raises(ValueError, match="empty"):
+        validate_prompts(empty, vocab_size=64)
+
+
+def test_shared_prefix_reuse_is_zipf_skewed():
+    wl = SharedPrefixChat(n_prefixes=6, prefix_len=8, zipf_a=1.3)
+    mix = WorkloadMix([(1, wl)])
+    tr = mix.build(n_requests=120, vocab_size=64, seed=0,
+                   arrivals=UniformArrivals(span_s=1.0))
+    counts = {}
+    for e in tr.events:
+        counts[e.prompt[:8]] = counts.get(e.prompt[:8], 0) + 1
+    assert len(counts) > 1                  # more than one prefix used
+    ranked = sorted(counts.values(), reverse=True)
+    # a hot head and a long tail -- the prefix-cache-stress shape
+    assert ranked[0] >= 3 * ranked[-1]
+    assert sum(ranked) == 120
+
+
+def test_bursty_arrivals_deterministic_sorted_positive():
+    arr = BurstyArrivals(rate=30, burst_rate=120, on_s=0.05, off_s=0.1)
+    a = arr.times(random.Random(3), 50)
+    b = arr.times(random.Random(3), 50)
+    assert a == b and len(a) == 50
+    assert all(t > 0 for t in a) and a == sorted(a)
+    with pytest.raises(ValueError):
+        BurstyArrivals(rate=0)
+    with pytest.raises(ValueError):
+        BurstyArrivals(on_s=0)
+
+
+def test_clustered_and_uniform_arrivals_shapes():
+    times = ClusteredArrivals(n_clusters=3, gap_s=2.0,
+                              spread_s=0.01).times(None, 7)
+    assert len(times) == 7 and times == sorted(times)
+    # ceil(7/3) = 3 per cluster: bursts at 0, 2, 4 with tiny spreads
+    assert times[0] == 0.0 and times[3] == 2.0 and times[6] == 4.0
+    assert times[2] - times[0] == pytest.approx(0.02)
+    with pytest.raises(ValueError):
+        ClusteredArrivals(n_clusters=0)
+    u = UniformArrivals(span_s=3.0).times(None, 4)
+    assert u == [0.0, 1.0, 2.0, 3.0]
+    assert UniformArrivals(span_s=1.0).times(None, 1) == [0.0]
+
+
+def test_mix_validation_and_weighting():
+    with pytest.raises(ValueError, match="at least one"):
+        WorkloadMix([])
+    with pytest.raises(ValueError, match="weights"):
+        WorkloadMix([(0, RAGLongPrompt())])
+    with pytest.raises(ValueError, match="cancel_fraction"):
+        WorkloadMix([(1, RAGLongPrompt())], cancel_fraction=1.5)
+    tr = _mix().build(n_requests=80, vocab_size=64, seed=1)
+    counts = tr.meta["component_counts"]
+    # 3:1 weighting: chat must clearly dominate
+    assert counts["chat"] > counts.get("rag", 0) > 0
+    assert tr.n_cancelled == 0
+
+
+def test_slo_goodput_bounds_and_tail_gates():
+    slo = SLO(ttft_ms=100.0, ttft_p99_ms=200.0, tpot_p95_ms=50.0)
+    assert slo.good(80.0, None) and not slo.good(150.0, None)
+    assert not slo.good(None, None)          # no first token: not good
+    ok = {"ttft_ms": {"p95": 90.0, "p99": 150.0},
+          "tpot_ms": {"p95": 40.0}}
+    assert slo.check(ok) == []
+    bad = {"ttft_ms": {"p95": 90.0, "p99": 250.0},
+           "tpot_ms": {"p95": 60.0}}
+    v = slo.check(bad)
+    assert len(v) == 2 and any("p99" in s for s in v)
+    # absent stats count as violations, not silent passes
+    assert slo.check({"ttft_ms": None, "tpot_ms": None})
+    assert SLO(ttft_p99_ms=1.0).to_json() == {"ttft_p99_ms": 1.0}
+
+
+def test_stats_ms_includes_p99():
+    s = stats_ms([i / 1000.0 for i in range(1, 101)])
+    assert set(s) == {"mean", "p50", "p95", "p99", "max", "n"}
+    assert s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+    assert stats_ms([]) is None
+
+
+# ---------------------------------------------------------------------------
+# engine integration (small mamba; one module-scoped param set)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scale_down(get_config("mamba-130m"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("prefill_chunk", 8)
+    return LLMEngine(params, cfg, **kw)
+
+
+def _trace(vocab):
+    events = [
+        TraceEvent(t=0.000, request_id="a", prompt=(1, 2, 3, 4),
+                   max_tokens=5, seed=11),
+        TraceEvent(t=0.001, request_id="b",
+                   prompt=(9, 8, 7, 6, 5, 4, 3), max_tokens=4,
+                   temperature=0.8, top_k=16, seed=12),
+        TraceEvent(t=0.002, request_id="c", prompt=(5, 5, 5),
+                   max_tokens=3, seed=13),
+        TraceEvent(t=0.004, request_id="d",
+                   prompt=tuple(t % vocab for t in range(20, 32)),
+                   max_tokens=4, temperature=0.7, top_p=0.9, seed=14),
+    ]
+    return Trace(events=events, name="t4")
+
+
+def test_sync_replay_bit_identical_streams_and_schedule(setup):
+    cfg, params = setup
+    tr = _trace(cfg.vocab_size)
+    r1 = run(_engine(cfg, params), tr, pump="sync", time_scale=0.0,
+             warmup=False)
+    r2 = run(_engine(cfg, params), tr, pump="sync", time_scale=0.0,
+             warmup=False)
+    assert r1["token_streams"] == r2["token_streams"]
+    assert r1["schedule"] == r2["schedule"]
+    assert all(len(r1["token_streams"][e.request_id]) == e.max_tokens
+               for e in tr.events)
+    assert r1["steps_before_last_arrival"] == 0
+    assert r1["completed"] == 4 and r1["cancelled"] == 0
+
+
+def test_async_pump_matches_sync_streams_and_drains_clean(setup):
+    cfg, params = setup
+    tr = _trace(cfg.vocab_size)
+    eng_s = _engine(cfg, params)
+    rs = run(eng_s, tr, pump="sync", time_scale=0.0, warmup=False)
+    eng_a = _engine(cfg, params)
+    ra = run(eng_a, tr, SLO(ttft_p99_ms=600_000.0), pump="async",
+             time_scale=0.0, warmup=False)
+    ra2 = run(_engine(cfg, params), tr, pump="async", time_scale=0.0,
+              warmup=False)
+    # explicit per-request seeds make streams batch-mix invariant, so
+    # async timing noise cannot change a single token
+    assert ra["token_streams"] == rs["token_streams"]
+    assert ra["token_streams"] == ra2["token_streams"]
+    assert eng_a.scheduler.outstanding() == []
+    assert eng_s.scheduler.outstanding() == []
+    assert ra["slo"]["ok"] is True
+    assert ra["steps"] > 0 and ra["occupancy_mean"] > 0
+
+
+def test_cancellation_under_load_token_deterministic(setup):
+    cfg, params = setup
+    events = [
+        TraceEvent(t=0.000, request_id="keep0", prompt=(1, 2, 3, 4),
+                   max_tokens=6, seed=1),
+        # k=0: cancelled atomically with submission, while QUEUED
+        TraceEvent(t=0.001, request_id="cq", prompt=(5, 6, 7),
+                   max_tokens=6, seed=2, cancel_after_tokens=0),
+        # k=2: cancelled from its own on_token callback mid-DECODE
+        TraceEvent(t=0.002, request_id="cd", prompt=(8, 9, 10, 11),
+                   max_tokens=6, seed=3, cancel_after_tokens=2),
+        TraceEvent(t=0.003, request_id="keep1", prompt=(4, 3, 2, 1, 5),
+                   max_tokens=4, seed=4),
+    ]
+    tr = Trace(events=events, name="cancel")
+    assert tr.n_cancelled == 2
+    eng_s = _engine(cfg, params)
+    rs = run(eng_s, tr, pump="sync", time_scale=0.0, warmup=False)
+    eng_a = _engine(cfg, params)
+    ra = run(eng_a, tr, pump="async", time_scale=0.0, warmup=False)
+    for r, eng in ((rs, eng_s), (ra, eng_a)):
+        assert r["token_streams"]["cq"] == []
+        assert len(r["token_streams"]["cd"]) == 2       # exactly k
+        assert len(r["token_streams"]["keep0"]) == 6
+        assert len(r["token_streams"]["keep1"]) == 4
+        assert r["cancelled"] == 2 and r["completed"] == 2
+        # no slot leaks: queue and slot table fully drained
+        assert eng.scheduler.outstanding() == []
+        assert eng.scheduler.live() == []
+    assert rs["token_streams"] == ra["token_streams"]
+    mj = eng_a.metrics_json()
+    assert mj["engine"]["requests_cancelled"] == 2
+
+
+def test_cancelled_requests_do_not_perturb_survivors(setup):
+    """The survivors' streams must be bit-identical whether or not the
+    cancelled requests ever existed (batched sampler key isolation)."""
+    cfg, params = setup
+    keep = [TraceEvent(t=0.0, request_id="keep0", prompt=(1, 2, 3, 4),
+                       max_tokens=5, seed=21, temperature=0.9,
+                       top_k=8),
+            TraceEvent(t=0.002, request_id="keep1",
+                       prompt=(4, 3, 2, 1, 5), max_tokens=4, seed=22)]
+    noise = [TraceEvent(t=0.001, request_id=f"x{i}",
+                        prompt=(6 + i, 7, 8), max_tokens=6,
+                        seed=30 + i, cancel_after_tokens=i % 3)
+             for i in range(4)]
+    r_with = run(_engine(cfg, params), Trace(events=keep + noise),
+                 pump="sync", time_scale=0.0, warmup=False)
+    r_solo = run(_engine(cfg, params), Trace(events=list(keep)),
+                 pump="sync", time_scale=0.0, warmup=False)
+    for rid in ("keep0", "keep1"):
+        assert r_with["token_streams"][rid] \
+            == r_solo["token_streams"][rid]
+
+
+def test_run_budget_exhaustion_raises_warns_and_resumes(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    st = eng.add_request([1, 2, 3], SamplingParams(max_tokens=6))
+    with pytest.raises(StepBudgetExhausted, match="unfinished"):
+        eng.run(max_steps=2)
+    assert eng.metrics.run_budget_exhausted == 1
+    assert not st.finished and len(st.token_ids) == 2
+    with pytest.warns(RuntimeWarning, match="exhausted"):
+        eng.run(max_steps=1, on_exhaust="warn")
+    assert eng.metrics.run_budget_exhausted == 2
+    eng.run()                       # consistent state: resumes cleanly
+    assert st.finished and len(st.token_ids) == 6
+    mj = eng.metrics_json()
+    assert mj["engine"]["run_budget_exhausted"] == 2
+    with pytest.raises(ValueError, match="on_exhaust"):
+        eng.run(on_exhaust="ignore")
+    # a drained engine never trips the guard, even with max_steps=0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng.run(max_steps=0)
+
+
+def test_stream_iteration_under_running_pump(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    with EnginePump(eng) as pump:
+        st = pump.add_request([1, 2, 3, 4],
+                              SamplingParams(max_tokens=5))
+        toks = list(st.stream)      # consumer blocks; pump thread steps
+        assert toks == list(st.token_ids) and len(toks) == 5
+        st2 = pump.add_request([5, 6, 7],
+                               SamplingParams(max_tokens=3, seed=9))
+        assert pump.drain(timeout=60.0)
+        assert len(st2.token_ids) == 3
+    assert pump.steps > 0 and len(pump.samples) == pump.steps
+    assert eng.scheduler.outstanding() == []
+    with pytest.raises(RuntimeError, match="already started"):
+        with EnginePump(eng) as p2:
+            p2.start()
+
+
+def test_runner_rejects_bad_arguments(setup):
+    cfg, params = setup
+    tr = _trace(cfg.vocab_size)
+    eng = _engine(cfg, params)
+    with pytest.raises(ValueError, match="pump"):
+        run(eng, tr, pump="turbo")
+    with pytest.raises(ValueError, match="time_scale"):
+        run(eng, tr, time_scale=-1.0)
+    with pytest.raises(ValueError, match="no events"):
+        run(eng, Trace(events=[]))
+    with pytest.raises(ValueError, match="max_len"):
+        run(_engine(cfg, params, max_len=8), tr, pump="sync")

@@ -1,0 +1,213 @@
+"""Host-RAM spill tier of the prefix ``StateCache``: pure two-tier
+semantics with injected tree movers, promote-on-hit, host-side LRU,
+and end-to-end engine runs where evicted prefixes still hit (promoted
+from host) with token streams bit-identical to cache-off."""
+import numpy as np
+import jax
+import pytest
+
+pytestmark = pytest.mark.serve
+
+from repro.configs import get_config, scale_down
+from repro.models import init_params
+from repro.serve import LLMEngine, SamplingParams, StateCache
+
+
+def _state(n_floats: int):
+    return {"h": np.arange(n_floats, dtype=np.float32)}
+
+
+class _Movers:
+    """Injected to_host/to_device pair that counts crossings."""
+
+    def __init__(self):
+        self.to_host_calls = 0
+        self.to_device_calls = 0
+
+    def to_host(self, tree):
+        self.to_host_calls += 1
+        return {k: np.asarray(v) for k, v in tree.items()}
+
+    def to_device(self, tree):
+        self.to_device_calls += 1
+        return dict(tree)
+
+
+def _cache(device_entries=2, spill_entries=16, mv=None):
+    mv = mv or _Movers()
+    return StateCache(byte_budget=device_entries * 16,
+                      spill_byte_budget=spill_entries * 16,
+                      to_host=mv.to_host, to_device=mv.to_device), mv
+
+
+# ---------------------------------------------------------------------------
+# pure two-tier semantics (no engine, no jax)
+# ---------------------------------------------------------------------------
+
+def test_eviction_spills_instead_of_dropping():
+    c, mv = _cache(device_entries=2)
+    c.insert([1], _state(4))
+    c.insert([2], _state(4))
+    c.insert([3], _state(4))          # over budget: [1] spills to host
+    s = c.stats()
+    assert s["entries"] == 2 and s["host_entries"] == 1
+    assert s["spills"] == 1 and s["spilled_bytes"] == 16
+    assert s["evicted"] == 1 and s["host_evicted"] == 0
+    assert mv.to_host_calls == 1
+    # the spilled prefix is still "in" the cache, both tiers visible
+    assert [1] in c and [2] in c and [3] in c
+
+
+def test_promote_on_lookup_restores_device_residency():
+    c, mv = _cache(device_entries=2)
+    for t in ([1], [2], [3]):         # [1] ends up spilled
+        c.insert(t, _state(4))
+    e = c.lookup([1, 99])             # host match -> promotion
+    assert e is not None and e.tokens == (1,)
+    s = c.stats()
+    assert s["promotions"] == 1 and s["promoted_bytes"] == 16
+    assert mv.to_device_calls == 1
+    # promotion made room by re-spilling the device LRU ([2])
+    assert s["entries"] == 2 and s["spills"] == 2
+    assert c.lookup([2, 99]) is not None      # ...which still hits
+    assert c.stats()["promotions"] == 2
+
+
+def test_device_tier_wins_ties_no_promotion():
+    c, mv = _cache(device_entries=2)
+    c.insert([1], _state(4))
+    assert c.lookup([1, 5]) is not None
+    assert c.stats()["promotions"] == 0 and mv.to_device_calls == 0
+
+
+def test_host_tier_lru_overflow_is_a_true_drop():
+    c, _ = _cache(device_entries=1, spill_entries=2)
+    for t in ([1], [2], [3], [4]):    # 3 spills into a 2-entry host tier
+        c.insert(t, _state(4))
+    s = c.stats()
+    assert s["entries"] == 1 and s["host_entries"] == 2
+    assert s["spills"] == 3 and s["host_evicted"] == 1
+    assert [1] not in c               # the oldest spill fell off the end
+    assert [2] in c and [3] in c and [4] in c
+    assert c.lookup([1, 7]) is None   # a dropped entry is a real miss
+    assert c.stats()["misses"] == 1
+
+
+def test_reinsert_supersedes_stale_host_copy():
+    c, _ = _cache(device_entries=1)
+    c.insert([1], _state(4))
+    c.insert([2], _state(4))          # [1] spills
+    assert c.stats()["host_entries"] == 1
+    fresh = _state(4)
+    assert c.insert([1], fresh)       # fresh device copy...
+    s = c.stats()
+    assert s["host_entries"] == 1     # ...[2] spilled, stale [1] gone
+    assert c.lookup([1, 9]).state is fresh
+    assert c.stats()["promotions"] == 0
+
+
+def test_spill_disabled_is_plain_lru():
+    c = StateCache(byte_budget=16)    # no spill budget
+    c.insert([1], _state(4))
+    c.insert([2], _state(4))
+    s = c.stats()
+    assert s["spill_enabled"] is False
+    assert s["evicted"] == 1 and s["spills"] == 0
+    assert s["host_entries"] == 0 and [1] not in c
+
+
+def test_clear_empties_both_tiers():
+    c, _ = _cache(device_entries=1)
+    c.insert([1], _state(4))
+    c.insert([2], _state(4))
+    c.clear()
+    s = c.stats()
+    assert s["entries"] == 0 and s["host_entries"] == 0
+    assert c.bytes_in_use == 0 and c.host_bytes_in_use == 0
+    assert c.lookup([1, 2]) is None
+
+
+def test_peek_len_never_promotes():
+    c, mv = _cache(device_entries=1)
+    c.insert([1, 2], _state(4))
+    c.insert([3, 4], _state(4))       # [1, 2] spills
+    assert c.peek_len([1, 2, 9]) == 2
+    assert c.stats()["promotions"] == 0 and mv.to_device_calls == 0
+
+
+def test_engine_rejects_spill_without_device_cache():
+    cfg = scale_down(get_config("mamba-130m"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="spill"):
+        LLMEngine(params, cfg, max_batch=1, max_len=32,
+                  prefix_cache_spill_mb=8)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: eviction pressure + promote-on-hit, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scale_down(get_config("mamba-130m"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _entry_mb(cfg, entries: float) -> float:
+    di, ds, w = cfg.d_inner, cfg.d_state, cfg.conv_width
+    return entries * cfg.n_layers * (di * ds + (w - 1) * di) * 4 / (1 << 20)
+
+
+def _serve_rounds(cfg, params, n_prefixes=3, rounds=2, **cache_kw):
+    """Round-robin over ``n_prefixes`` shared heads, twice: round 2
+    re-visits prefixes that round 1's insertions evicted."""
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=48,
+                    prefill_chunk=8, **cache_kw)
+    streams = []
+    for _ in range(rounds):
+        for i in range(n_prefixes):
+            head = [(7 * i + 3 * j + 1) % cfg.vocab_size
+                    for j in range(17)]
+            st = eng.add_request(head + [i + 1, 2],
+                                 SamplingParams(max_tokens=3))
+            eng.run()
+            streams.append(list(st.token_ids))
+    assert eng.scheduler.outstanding() == []
+    return eng, streams
+
+
+def test_spilled_prefixes_still_hit_streams_identical(setup):
+    cfg, params = setup
+    tiny = _entry_mb(cfg, 1.6)        # device holds ~1.6 snapshots
+    eng_spill, s_spill = _serve_rounds(
+        cfg, params, prefix_cache_mb=tiny, prefix_cache_spill_mb=32)
+    _, s_off = _serve_rounds(cfg, params)
+    _, s_dev = _serve_rounds(cfg, params, prefix_cache_mb=32)
+
+    pc = eng_spill.metrics_json()["prefix_cache"]
+    assert pc["spill_enabled"] and pc["evicted"] > 0
+    assert pc["spills"] > 0 and pc["spilled_bytes"] > 0
+    # round 2 hit prefixes the device tier had already evicted
+    assert pc["promotions"] > 0 and pc["promoted_bytes"] > 0
+    assert pc["hits"] + pc["partial_hits"] > 0
+    # restore-from-host must not change a single token
+    assert s_spill == s_off == s_dev
+
+
+def test_eviction_readmission_churn_keeps_accounting_exact(setup):
+    cfg, params = setup
+    tiny = _entry_mb(cfg, 1.2)
+    eng, _ = _serve_rounds(cfg, params, n_prefixes=4, rounds=3,
+                           prefix_cache_mb=tiny,
+                           prefix_cache_spill_mb=_entry_mb(cfg, 2.5))
+    c = eng.prefix_cache
+    # byte accounting stays exact under spill/promote/drop churn
+    assert c.bytes_in_use == sum(e.nbytes for e in c._entries.values())
+    assert c.host_bytes_in_use == sum(e.nbytes
+                                      for e in c._host.values())
+    assert c.bytes_in_use <= c.byte_budget
+    assert c.host_bytes_in_use <= c.spill_byte_budget
+    s = c.stats()
+    assert s["spills"] > 0 and s["host_evicted"] > 0   # host churned too
+    assert eng.scheduler.outstanding() == []
