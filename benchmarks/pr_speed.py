@@ -3,9 +3,12 @@ chunked-prefill throughput/dispatch counts, bytes moved, the
 request-lifecycle serving metrics (per-request TTFT/TPOT/queue-time,
 queue-depth and occupancy series through the scheduler), and the
 shared-prefix prefix-cache workload (``serve.prefix_cache``: hit-path
-vs miss-path TTFT, hit rate, bytes), and the trace-driven open-loop
-load test (``serve.loadgen``: p99 TTFT, goodput, async-pump vs sync
-time-weighted occupancy, prefix-cache spill-tier counters).  The file
+vs miss-path TTFT, hit rate, bytes), the speculative-decoding workload
+(``serve.spec_decode``: tokens/s uplift over vanilla decode on the
+kernel backend, acceptance rate, greedy bit-identity), and the
+trace-driven open-loop load test (``serve.loadgen``: p99 TTFT,
+goodput, async-pump vs sync time-weighted occupancy, prefix-cache
+spill-tier counters).  The file
 carries a top-level ``run_meta`` provenance stamp (git commit,
 timestamp, jax backend/device) which the perf gate ignores.
 
@@ -24,6 +27,7 @@ import json
 import os
 import platform
 import subprocess
+import time
 
 import numpy as np
 import jax
@@ -33,7 +37,7 @@ from benchmarks import common
 from repro.kernels._backend import default_interpret
 from repro.models import (decode_step, init_decode_state, param_count,
                           prefill_step)
-from repro.serve import LLMEngine, SamplingParams
+from repro.serve import LLMEngine, SamplingParams, SpecConfig
 from repro.serve.loadgen import (SLO, ClusteredArrivals, RAGLongPrompt,
                                  SharedPrefixChat, WorkloadMix)
 from repro.serve.loadgen import run as loadgen_run
@@ -146,6 +150,71 @@ def _prefix_cache_workload(cfg, params, qctx, smoke: bool) -> dict:
         "prefix_restores": eng.counters["prefix_restores"],
         "ttft_ms_hit": pc["ttft_ms_hit"],
         "ttft_ms_miss": pc["ttft_ms_miss"],
+    }
+
+
+def _spec_decode_workload(cfg, qm, smoke: bool) -> dict:
+    """Speculative decoding on the int8 kernel path: the target runs
+    the Pallas ``kernels`` backend (per-dispatch cost dominates on the
+    CPU smoke path -- interpret mode makes every launch expensive, the
+    same shape as a launch-bound accelerator serving a small model) and
+    a self-draft rides the cheap XLA ``qdq`` backend over the SAME
+    weights, so acceptance sits near 1.0 and each round replaces
+    ``k + 1`` target dispatches with one fused draft scan + one
+    multi-token verify.  A shared prefix plus the prefix cache keeps
+    prefill out of the timed window; a warmup request pays every
+    compile before the clock starts.  Greedy spec streams must be
+    bit-identical to the vanilla control by construction.
+    """
+    k = 4
+    shared_len = 32 if smoke else 64
+    n_req = 4
+    max_tokens = 12 if smoke else 24
+    chunk = 32
+    kq = qm.qctx(backend="kernels")
+    shared = [(5 * j + 3) % cfg.vocab_size for j in range(shared_len)]
+
+    def serve(spec):
+        eng = LLMEngine(qm.params, cfg, max_batch=n_req,
+                        max_len=shared_len + max_tokens + 8, qctx=kq,
+                        prefill_chunk=chunk, prefix_cache_mb=32,
+                        speculative=spec)
+        # warmup: same prompt length -> compiles prefill chunks, the
+        # decode step / fused spec round, and fills the prefix cache
+        eng.add_request(shared + [cfg.vocab_size - 1],
+                        SamplingParams(max_tokens=k + 2))
+        eng.run()
+        sts = [eng.add_request(shared + [i + 1],
+                               SamplingParams(max_tokens=max_tokens),
+                               request_id=f"spec{i}")
+               for i in range(n_req)]
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        return [list(s.token_ids) for s in sts], \
+            n_req * max_tokens / dt, eng
+
+    s_van, tps_van, _ = serve(None)
+    s_spec, tps_spec, eng = serve(
+        SpecConfig(draft="self", k=k, draft_qctx=qm.qctx(backend="qdq")))
+    sd = eng.metrics_json()["spec_decode"]
+    return {
+        "k": k,
+        "draft": "self (qdq backend)",
+        "target_backend": "kernels",
+        "shared_prefix_len": shared_len,
+        "requests": n_req,
+        "max_tokens": max_tokens,
+        "tokens_per_s": tps_spec,
+        "vanilla_tokens_per_s": tps_van,
+        "uplift": tps_spec / tps_van,
+        "streams_match_greedy": s_spec == s_van,
+        "acceptance_rate": sd["acceptance_rate"],
+        "rounds": sd["rounds"],
+        "drafted_tokens": sd["drafted_tokens"],
+        "accepted_tokens": sd["accepted_tokens"],
+        "rolled_back_tokens": sd["rolled_back_tokens"],
+        "per_request_speedup": sd["per_request_speedup"],
     }
 
 
@@ -327,9 +396,19 @@ def run() -> dict:
     out["tpot_fp_us"] = _tpot(cfg, params, None, iters)
     out["tpot_quamba_qdq_us"] = _tpot(cfg, qm.params,
                                       qm.qctx(backend="qdq"), iters)
-    out["tpot_quamba_kernels_us"] = _tpot(cfg, qm.params,
+    out["tpot_quamba_kernels_ms"] = _tpot(cfg, qm.params,
                                           qm.qctx(backend="kernels"),
-                                          iters)
+                                          iters) / 1e3
+    # DEPRECATED alias (one release): the kernel-backend TPOT was
+    # always a milliseconds-scale number, so the canonical key is now
+    # *_ms; the old *_us key carries the same measurement in
+    # microseconds until downstream baselines have rolled over.
+    out["tpot_quamba_kernels_us"] = out["tpot_quamba_kernels_ms"] * 1e3
+    out["deprecations"] = {
+        "tpot_quamba_kernels_us":
+            "renamed to tpot_quamba_kernels_ms (same measurement, "
+            "milliseconds); this alias will be dropped next release",
+    }
     common.emit("pr_speed/tpot_fp", out["tpot_fp_us"], "decode_step")
     common.emit("pr_speed/tpot_quamba_qdq", out["tpot_quamba_qdq_us"],
                 "decode_step(fake-quant oracle)")
@@ -363,6 +442,16 @@ def run() -> dict:
         f"{pc['ttft_ms_miss']['mean']:.1f} ms over a "
         f"{pc['shared_prefix_len']}-token shared prefix "
         f"(hit rate {pc['hit_rate']:.2f})")
+
+    sd = _spec_decode_workload(cfg, qm, smoke)
+    out["serve"]["spec_decode"] = sd
+    common.emit(
+        "pr_speed/serve_spec_decode", 1e6 / max(sd["tokens_per_s"], 1e-9),
+        f"{sd['tokens_per_s']:.0f} tok/s spec vs "
+        f"{sd['vanilla_tokens_per_s']:.0f} vanilla "
+        f"({sd['uplift']:.2f}x, acceptance "
+        f"{sd['acceptance_rate']:.2f}, k={sd['k']}, greedy streams "
+        f"match: {sd['streams_match_greedy']})")
 
     lg = _loadgen_workload(cfg, qm.params, qm.qctx(), smoke)
     lg["spill"] = _spill_workload(cfg, qm.params, qm.qctx(), smoke)

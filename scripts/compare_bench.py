@@ -10,8 +10,14 @@ run on the base branch and calls::
 Gated metrics (the kernels-backend serving hot paths plus the
 scheduler's request-latency behavior):
 
-  * ``tpot_quamba_kernels_us``        -- lower is better
+  * ``tpot_quamba_kernels_ms``        -- lower is better.  Renamed
+    from ``tpot_quamba_kernels_us`` (same measurement, now reported in
+    milliseconds); baselines that predate the rename are read through
+    ``RENAMES`` so the gate keeps comparing across the transition.
   * ``prefill_chunked_tokens_per_s``  -- higher is better
+  * ``serve.spec_decode.tokens_per_s`` -- higher is better (end-to-end
+    speculative-decoding throughput on the kernel backend; guards the
+    fused draft-scan + multi-token-verify path against regressions)
   * ``engine_prefill.prefill_dispatches`` -- lower is better, and being
     a dispatch COUNT it is deterministic: unlike the wall-clock metrics
     (which shared CI runners can wobble), any increase is a real
@@ -52,14 +58,28 @@ from typing import List
 
 # (dotted key, higher_is_better, max_regression_override_or_None)
 GATED = (
-    ("tpot_quamba_kernels_us", False, None),
+    ("tpot_quamba_kernels_ms", False, None),
     ("prefill_chunked_tokens_per_s", True, None),
     ("engine_prefill.prefill_dispatches", False, 0.0),
     ("serve.ttft_ms.mean", False, None),
     ("serve.ttft_ms.p95", False, 1.0),
     ("serve.prefix_cache.ttft_ms_hit.mean", False, 1.0),
+    # higher-is-better regressions cap at 100% (throughput can only
+    # fall to zero), so the loose small-sample threshold here is 50%:
+    # worse than half the baseline throughput fails
+    ("serve.spec_decode.tokens_per_s", True, 0.5),
     ("serve.loadgen.ttft_ms.p99", False, 1.0),
 )
+
+# renamed metrics: canonical key -> (legacy key, scale legacy by).
+# When the canonical key is absent (a baseline produced before the
+# rename), the gate falls back to the legacy key converted into the
+# canonical unit, so the transition release still compares like with
+# like.  Drop entries here one release after the producing side drops
+# its alias.
+RENAMES = {
+    "tpot_quamba_kernels_ms": ("tpot_quamba_kernels_us", 1e-3),
+}
 
 
 def _lookup(d, dotted):
@@ -68,6 +88,21 @@ def _lookup(d, dotted):
             return None
         d = d[part]
     return d
+
+
+def _lookup_renamed(d, dotted):
+    """_lookup plus the RENAMES fallback for pre-rename baselines."""
+    v = _lookup(d, dotted)
+    if v is not None or dotted not in RENAMES:
+        return v
+    legacy_key, scale = RENAMES[dotted]
+    legacy = _lookup(d, legacy_key)
+    if legacy is None:
+        return None
+    try:
+        return float(legacy) * scale
+    except (TypeError, ValueError):
+        return None
 
 
 def gate(prev: dict, cur: dict, max_regression: float,
@@ -79,7 +114,7 @@ def gate(prev: dict, cur: dict, max_regression: float,
     """
     failures: List[str] = []
     for key, higher_better, override in gated:
-        pv, cv = _lookup(prev, key), _lookup(cur, key)
+        pv, cv = _lookup_renamed(prev, key), _lookup_renamed(cur, key)
         if pv is None or cv is None:
             print(f"perf gate: {key}: absent in prev or cur; skipping")
             continue

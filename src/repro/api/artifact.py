@@ -73,6 +73,13 @@ class QuantizedModel:
         ``quantize_kv_cache``) and later
         requests sharing a prefix restore instead of re-prefilling; see
         ``repro.serve.cache`` and docs/serving.md.
+
+        ``engine(speculative=SpecConfig(draft="self", k=4))`` turns on
+        speculative multi-token decoding: a draft proposes ``k`` tokens
+        per round and the target verifies all of them in one fused
+        dispatch, with O(1) state-snapshot rollback (greedy streams
+        stay bit-identical to vanilla decode); see ``repro.serve.spec``
+        and the speculative-decoding section of docs/serving.md.
         """
         from repro.serve.engine import LLMEngine  # local: avoid cycle
         return LLMEngine(self.params, self.cfg, qctx=self.qctx(), **kw)

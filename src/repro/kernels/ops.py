@@ -22,7 +22,8 @@ from repro.kernels.causal_conv1d import causal_conv1d
 from repro.kernels.hadamard_quant import hadamard_quant
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.rmsnorm_quant import rmsnorm_quant
-from repro.kernels.scan_step import selective_scan_step
+from repro.kernels.scan_step import (selective_scan_step,
+                                     selective_scan_verify)
 from repro.kernels.selective_scan import selective_scan
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -34,5 +35,6 @@ def _interpret() -> bool:
 
 __all__ = [
     "int8_matmul", "rmsnorm_quant", "hadamard_quant", "causal_conv1d",
-    "selective_scan", "selective_scan_step", "ssd_scan", "ref",
+    "selective_scan", "selective_scan_step", "selective_scan_verify",
+    "ssd_scan", "ref",
 ]

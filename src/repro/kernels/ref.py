@@ -107,6 +107,67 @@ def selective_scan_seq_ref(u: jax.Array, dt: jax.Array, A: jax.Array,
     return y, h_last
 
 
+def selective_scan_states_ref(u: jax.Array, dt: jax.Array, A: jax.Array,
+                              B: jax.Array, C: jax.Array, D: jax.Array,
+                              z: Optional[jax.Array] = None,
+                              h0: Optional[jax.Array] = None
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential scan that keeps EVERY intermediate state.
+
+    Same per-step fp operations as :func:`selective_scan_seq_ref` (so
+    bitwise-identical outputs), but returns (y (b, L, D),
+    h_steps (b, L, D, N)) where ``h_steps[:, t]`` is the state after
+    consuming token t.  This is the oracle for the speculative-decode
+    verify path: rolling back to draft position j is a gather of
+    ``h_steps[:, j]``.  Only call with small L (k+1 speculative steps)
+    -- the stacked states are L times the decode state.
+    """
+    bsz, L, d = u.shape
+    n = A.shape[-1]
+    dtype = jnp.float32
+    h_init = (h0.astype(dtype) if h0 is not None
+              else jnp.zeros((bsz, d, n), dtype))
+    a32 = A.astype(dtype)
+
+    def step(h, t):
+        u_t, dt_t, b_t, c_t = t
+        dA = jnp.exp(dt_t.astype(dtype)[..., None] * a32)
+        dBu = (dt_t.astype(dtype) * u_t.astype(dtype))[..., None] * \
+            b_t.astype(dtype)[:, None, :]
+        h_new = dA * h + dBu
+        y_t = jnp.einsum("bdn,bn->bd", h_new, c_t.astype(dtype))
+        return h_new, (y_t, h_new)
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (u, dt, B, C))
+    _, (ys, hs) = jax.lax.scan(step, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1) + D.astype(dtype) * u.astype(dtype)
+    if z is not None:
+        y = y * jax.nn.silu(z.astype(dtype))
+    return y, jnp.moveaxis(hs, 0, 1)
+
+
+def selective_scan_verify_ref(qu: jax.Array, qdt: jax.Array,
+                              qA: jax.Array, qB: jax.Array,
+                              qC: jax.Array, scales: jax.Array,
+                              D: jax.Array, h: jax.Array,
+                              z: Optional[jax.Array] = None
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the fused multi-token verify kernel.
+
+    Mirrors ``kernels.scan_step.selective_scan_verify``: int8 operands
+    with a (5,) per-tensor scale vector (s_u, s_dt, s_A, s_B, s_C),
+    M sequential recurrence steps from state ``h``, gate applied as
+    z*sigmoid(z).  Returns (y (B, M, D), h_steps (B, M, D, N)).
+    """
+    s = jnp.asarray(scales, jnp.float32)
+    u = qu.astype(jnp.float32) * s[0]
+    dt = qdt.astype(jnp.float32) * s[1]
+    A = qA.astype(jnp.float32) * s[2]
+    B = qB.astype(jnp.float32) * s[3]
+    C = qC.astype(jnp.float32) * s[4]
+    return selective_scan_states_ref(u, dt, A, B, C, D, z=z, h0=h)
+
+
 def selective_scan_step_ref(h: jax.Array, u: jax.Array, dt: jax.Array,
                             A: jax.Array, B: jax.Array, C: jax.Array,
                             D: jax.Array, z: Optional[jax.Array] = None

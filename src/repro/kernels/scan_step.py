@@ -14,6 +14,14 @@ whole step is fused into a single pass with no intermediate HBM traffic.
 Channels (D) tile onto the 128-lane vector unit exactly as in the
 sequence kernel; the state block (bd, N) stays resident in VMEM for the
 duration of the (single) time step.
+
+``selective_scan_verify`` is the multi-token sibling used by
+speculative decoding: it unrolls M = k+1 recurrence steps inside one
+kernel launch and writes the state at EVERY step boundary, so rejecting
+draft token j is a single O(1) gather of the j-th snapshot -- no
+recompute, no KV truncation.  The per-step math is operation-for-
+operation identical to ``selective_scan_step``, which is what makes
+greedy speculative streams bit-identical to vanilla decode.
 """
 from __future__ import annotations
 
@@ -108,3 +116,91 @@ def selective_scan_step(qu: jax.Array, qdt: jax.Array, qA: jax.Array,
         interpret=resolve_interpret(interpret),
     )(qu_p, qdt_p, qA_p, qB, qC, d_p, z_p, h_p, s)
     return y[:, :d], h_new[:, :d]
+
+
+def _verify_kernel(qu_ref, qdt_ref, qA_ref, qB_ref, qC_ref, dres_ref,
+                   z_ref, h_ref, s_ref, y_ref, hsteps_ref, *,
+                   gated: bool, nsteps: int):
+    s_u, s_dt, s_A, s_B, s_C = (s_ref[0, 0], s_ref[0, 1], s_ref[0, 2],
+                                s_ref[0, 3], s_ref[0, 4])
+    a = qA_ref[...].astype(jnp.float32) * s_A         # (bd, N)
+    dres = dres_ref[...].astype(jnp.float32)          # (bd,)
+    h = h_ref[0].astype(jnp.float32)                  # (bd, N)
+    for i in range(nsteps):                           # static unroll
+        u = qu_ref[0, i].astype(jnp.float32) * s_u    # (bd,)
+        dt = qdt_ref[0, i].astype(jnp.float32) * s_dt
+        bvec = qB_ref[0, i].astype(jnp.float32) * s_B  # (N,)
+        cvec = qC_ref[0, i].astype(jnp.float32) * s_C
+        da = jnp.exp(dt[:, None] * a)
+        h = da * h + (dt * u)[:, None] * bvec[None, :]
+        y = jnp.sum(h * cvec[None, :], axis=-1)
+        y = y + dres * u
+        if gated:
+            z = z_ref[0, i].astype(jnp.float32)
+            y = y * (z * jax.nn.sigmoid(z))
+        y_ref[0, i] = y.astype(y_ref.dtype)
+        hsteps_ref[0, i] = h.astype(hsteps_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "out_dtype",
+                                             "interpret"))
+def selective_scan_verify(qu: jax.Array, qdt: jax.Array, qA: jax.Array,
+                          qB: jax.Array, qC: jax.Array,
+                          scales: jax.Array, D: jax.Array, h: jax.Array,
+                          z: Optional[jax.Array] = None, *,
+                          block_d: int = 256, out_dtype=jnp.float32,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized M-token verify step (speculative decode).
+
+    qu, qdt: (B, M, D) int8;  qA: (D, N) int8;  qB, qC: (B, M, N) int8;
+    scales: (5,) fp32 = (s_u, s_dt, s_A, s_B, s_C);  D: (D,) fp32;
+    h: (B, D, N) fp32 state BEFORE the first fed token;
+    z: optional (B, M, D) fp gate.
+    Returns (y (B, M, D) out_dtype, h_steps (B, M, D, N) fp32) where
+    ``h_steps[:, i]`` is the state AFTER consuming fed token i -- the
+    rollback snapshots.  One kernel dispatch regardless of M; each step
+    runs the exact op sequence of :func:`selective_scan_step`.
+    interpret=None auto-detects: native on TPU, interpret elsewhere.
+    """
+    bsz, m, d = qu.shape
+    n = qA.shape[-1]
+    gated = z is not None
+
+    bd = min(block_d, d)
+    dp = -(-d // bd) * bd
+    pad_d = ((0, 0), (0, 0), (0, dp - d))
+    qu_p = jnp.pad(qu, pad_d)
+    qdt_p = jnp.pad(qdt, pad_d)
+    qA_p = jnp.pad(qA, ((0, dp - d), (0, 0)))
+    d_p = jnp.pad(D.astype(jnp.float32), (0, dp - d))
+    z_p = (jnp.pad(z, pad_d) if gated
+           else jnp.zeros((bsz, m, dp), jnp.float32))
+    h_p = jnp.pad(h.astype(jnp.float32), ((0, 0), (0, dp - d), (0, 0)))
+    s = scales.astype(jnp.float32).reshape(1, 5)
+
+    y, h_steps = pl.pallas_call(
+        functools.partial(_verify_kernel, gated=gated, nsteps=m),
+        grid=(bsz, dp // bd),
+        in_specs=[
+            pl.BlockSpec((1, m, bd), lambda b, j: (b, 0, j)),   # qu
+            pl.BlockSpec((1, m, bd), lambda b, j: (b, 0, j)),   # qdt
+            pl.BlockSpec((bd, n), lambda b, j: (j, 0)),         # qA
+            pl.BlockSpec((1, m, n), lambda b, j: (b, 0, 0)),    # qB
+            pl.BlockSpec((1, m, n), lambda b, j: (b, 0, 0)),    # qC
+            pl.BlockSpec((bd,), lambda b, j: (j,)),             # D
+            pl.BlockSpec((1, m, bd), lambda b, j: (b, 0, j)),   # z
+            pl.BlockSpec((1, bd, n), lambda b, j: (b, j, 0)),   # h
+            pl.BlockSpec(memory_space=pltpu.SMEM),              # scales
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, bd), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, m, bd, n), lambda b, j: (b, 0, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, m, dp), out_dtype),
+            jax.ShapeDtypeStruct((bsz, m, dp, n), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(qu_p, qdt_p, qA_p, qB, qC, d_p, z_p, h_p, s)
+    return y[:, :, :d], h_steps[:, :, :d]

@@ -14,6 +14,16 @@ re-prefilling (watch ``prefix_cache.hit_rate`` and the hit/miss TTFT
 split in the printed summary).  ``--prefix-cache-spill-mb M`` adds the
 host-RAM spill tier behind it.
 
+``--speculative-draft self --speculative-k 4`` turns on speculative
+multi-token decoding: the draft proposes k tokens per round, the
+target verifies all of them in ONE fused dispatch, rejection is an
+O(1) state-snapshot rollback.  ``self`` drafts with the target's own
+weights (acceptance 1.0 -- pure dispatch amortization); an arch name
+(e.g. ``mamba-130m`` while serving mamba-370m) drafts with a smaller
+model (demo-initialised weights here, matching the launcher's random
+target).  Greedy output is bit-identical to vanilla decode either
+way; the summary prints acceptance rate and tokens-per-round.
+
 Load generation (``repro.serve.loadgen``):
 
   # write a replayable seeded trace
@@ -37,7 +47,7 @@ from repro import api
 from repro.configs import get_config, scale_down
 from repro.data import eval_batches
 from repro.models import init_params
-from repro.serve import SamplingParams
+from repro.serve import SamplingParams, SpecConfig
 from repro.serve.loadgen import (SLO, BurstyArrivals, RAGLongPrompt,
                                  SharedPrefixChat, Trace, WorkloadMix)
 from repro.serve.loadgen import run as loadgen_run
@@ -51,13 +61,48 @@ def _default_mix(cancel_fraction: float) -> WorkloadMix:
         cancel_fraction=cancel_fraction)
 
 
+def _spec_config(args, cfg) -> "SpecConfig | None":
+    """``--speculative-draft`` -> a ``SpecConfig`` (None when unset).
+
+    ``self`` (or the target's own arch name) shares the target's
+    weights; any other arch gets demo-initialised weights, consistent
+    with the launcher's randomly initialised target."""
+    d = args.speculative_draft
+    if not d:
+        return None
+    if d == "self" or d == cfg.name:
+        return SpecConfig(draft="self", k=args.speculative_k)
+    dc = get_config(d)
+    if args.small:
+        dc = scale_down(dc)
+    dparams = init_params(jax.random.PRNGKey(1), dc)
+    return SpecConfig(draft=dc, draft_params=dparams,
+                      k=args.speculative_k)
+
+
+def _print_spec(mj: dict) -> None:
+    sd = mj.get("spec_decode")
+    if not sd:
+        return
+    spd = sd.get("per_request_speedup") or {}
+    acc = sd.get("acceptance_rate")
+    print(f"spec decode: k={sd['k']} draft={sd['draft']}; "
+          f"acceptance {acc if acc is None else round(acc, 3)} "
+          f"({sd['accepted_tokens']}/{sd['drafted_tokens']} drafted "
+          f"accepted, {sd['rolled_back_tokens']} rolled back, "
+          f"{sd['rounds']} rounds); "
+          f"{spd.get('mean', float('nan')):.2f} tokens/round "
+          f"per request")
+
+
 def _loadgen(args, model) -> None:
     trace = Trace.load(args.loadgen)
     need = max(len(e.prompt) + e.max_tokens for e in trace.events)
     eng = model.engine(
         max_batch=4, max_len=need + 8, scheduler=args.policy,
         prefix_cache_mb=(args.prefix_cache_mb or None),
-        prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None))
+        prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None),
+        speculative=_spec_config(args, model.cfg))
     slo = SLO(ttft_p95_ms=args.slo_ttft_p95_ms,
               ttft_p99_ms=args.slo_ttft_p99_ms,
               tpot_p95_ms=args.slo_tpot_p95_ms)
@@ -81,6 +126,7 @@ def _loadgen(args, model) -> None:
               f"{occ:.2f}" if occ is not None else "")
     print(f"  replay digest {digest[:16]} "
           f"(streams+schedule, sha256)")
+    _print_spec(eng.metrics_json())
     if "slo" in report:
         verdict = "PASS" if report["slo"]["ok"] else "FAIL"
         print(f"  SLO {verdict}: {report['slo']['objectives']}")
@@ -120,6 +166,14 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=48,
                     help="length of the shared prompt head the demo "
                          "requests reuse (exercises the prefix cache)")
+    ap.add_argument("--speculative-draft", default=None,
+                    help="enable speculative decoding: 'self' drafts "
+                         "with the target's own weights; an arch name "
+                         "(e.g. mamba-130m) drafts with that model "
+                         "(demo-initialised weights)")
+    ap.add_argument("--speculative-k", type=int, default=4,
+                    help="draft tokens verified per fused round "
+                         "(>= 1; each round commits 1..k+1 tokens)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the per-request metrics JSON here")
     lg = ap.add_argument_group("load generation")
@@ -173,7 +227,8 @@ def main() -> None:
         max_batch=4, max_len=args.shared_prefix + args.max_new + 16,
         scheduler=args.policy,
         prefix_cache_mb=(args.prefix_cache_mb or None),
-        prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None))
+        prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None),
+        speculative=_spec_config(args, cfg))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, max_tokens=args.max_new)
     shared = [(7 * j + 1) % cfg.vocab_size
@@ -203,9 +258,12 @@ def main() -> None:
               f"{pc['entries']} entries; TTFT hit "
               f"{hit.get('mean', float('nan')):.1f} ms vs miss "
               f"{miss.get('mean', float('nan')):.1f} ms")
+    _print_spec(mj)
     if args.metrics_out:
-        eng.metrics.dump(args.metrics_out, eng.counters,
-                         pc if pc else None)
+        # mj already carries the engine/prefix_cache/spec_decode
+        # sections metrics.dump would rebuild
+        with open(args.metrics_out, "w") as f:
+            json.dump(mj, f, indent=1, sort_keys=True)
         print(f"metrics -> {args.metrics_out}")
 
 

@@ -2,5 +2,6 @@ from repro.models.common import param_count, cross_entropy
 from repro.models.model import (
     init_params, forward, loss_fn, init_decode_state, decode_step,
     prefill_step, supports_seq_prefill, input_specs, decode_input_specs,
-    decode_state_batch_axes,
+    decode_state_batch_axes, verify_step, select_verify_state,
+    select_scan_state, supports_verify,
 )

@@ -190,44 +190,48 @@ def attention(p: Dict, cfg: ModelConfig, x: jax.Array, *,
     new_cache = None
 
     if cache is not None and not is_cross:
-        # ---- decode: append k/v and attend over the cache ----
+        # ---- decode / chunked prefill: append k/v, attend over cache ----
         # cache_pos: per-row positions (B,) -- continuous batching keeps
-        # independent sequences at different depths in one batch.
-        assert l == 1, "decode path is single-token"
+        # independent sequences at different depths in one batch.  l may
+        # exceed 1: a chunk of l tokens lands at cache_pos..cache_pos+l-1
+        # in one dispatch (sequence prefill / speculative verify); each
+        # query row masks to its own absolute position, so the math per
+        # token matches the single-token path exactly.
         cur = (cache_pos if cache_pos.ndim == 1
                else jnp.full((b,), cache_pos, jnp.int32))
-        step_pos = cur[:, None]                           # (B, 1)
+        step_pos = cur[:, None] + jnp.arange(l)[None, :]  # (B, L)
         if use_rope:
             q = common.apply_rope(q.reshape(b, l, h, hd), step_pos,
                                   cfg.rope_theta).reshape(b, l, g, hg, hd)
             k = common.apply_rope(k, step_pos, cfg.rope_theta)
-        rows = jnp.arange(b)
+        rows = jnp.arange(b)[:, None]                     # (B, 1)
         k_pos = jnp.arange(cache["k"].shape[1])
-        mask = (k_pos[None, None, :] <= step_pos[:, :, None])  # (B,1,S)
+        mask = (k_pos[None, None, :] <= step_pos[:, :, None])  # (B,L,S)
         if cache["k"].dtype == jnp.int8:
             # int8 KV cache: quantize each new entry with its own
-            # per-(row, head) scale; scales fold into the attention
-            # scores on read (no dequantized cache copy)
-            def q_entry(store, scales, val):        # val (B, g, hd)
+            # per-(row, position, head) scale; scales fold into the
+            # attention scores on read (no dequantized cache copy)
+            def q_entry(store, scales, val):        # val (B, L, g, hd)
                 s = jnp.maximum(jnp.max(jnp.abs(val), axis=-1),
-                                1e-8) / 127.0       # (B, g)
+                                1e-8) / 127.0       # (B, L, g)
                 qv = jnp.clip(jnp.round(val / s[..., None]),
                               -127, 127).astype(jnp.int8)
-                return (store.at[rows, cur].set(qv),
-                        scales.at[rows, cur].set(s.astype(jnp.float32)))
+                return (store.at[rows, step_pos].set(qv),
+                        scales.at[rows, step_pos].set(
+                            s.astype(jnp.float32)))
 
             ck, ks = q_entry(cache["k"], cache["k_s"],
-                             k[:, 0].astype(jnp.float32))
+                             k.astype(jnp.float32))
             cv, vs = q_entry(cache["v"], cache["v_s"],
-                             v[:, 0].astype(jnp.float32))
+                             v.astype(jnp.float32))
             new_cache = {"k": ck, "v": cv, "k_s": ks, "v_s": vs}
             ctx = _attend_int8(q, ck, ks, cv, vs, mask,
                                cfg.attn_logit_softcap)
         else:
-            ck = cache["k"].at[rows, cur].set(
-                k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[rows, cur].set(
-                v[:, 0].astype(cache["v"].dtype))
+            ck = cache["k"].at[rows, step_pos].set(
+                k.astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, step_pos].set(
+                v.astype(cache["v"].dtype))
             new_cache = {"k": ck, "v": cv}
             # pass the cache in its storage dtype: _attend accumulates in
             # fp32 without materializing converted copies of the cache

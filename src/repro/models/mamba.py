@@ -407,6 +407,119 @@ def mamba_block_prefill(p: Dict, cfg: ModelConfig, x: jax.Array,
     return x + out, {"conv": new_conv, "h": h_last}
 
 
+def _conv_tails(xp: jax.Array, width: int) -> jax.Array:
+    """Per-step conv-state snapshots from the padded conv input.
+
+    xp: (B, W-1+M, D) -- previous tail followed by the M fed tokens.
+    Returns (B, M, W-1, D) where entry i is the conv state after
+    consuming fed token i (the window a subsequent decode step would
+    read), i.e. exactly what M sequential ``mamba_block_step`` calls
+    would have stored.
+    """
+    m = xp.shape[1] - (width - 1)
+    return jnp.stack([xp[:, i + 1:i + width] for i in range(m)], axis=1)
+
+
+def _mamba_kernels_verify(p: Dict, cfg: ModelConfig, x: jax.Array,
+                          state: Dict, qctx) -> Tuple[jax.Array, Dict]:
+    """Kernel-backed multi-token verify.  x (B, M, d).  One fused
+    ``selective_scan_verify`` dispatch covers all M recurrence steps and
+    emits the state at every step boundary."""
+    spec, sc, qw = qctx["spec"], qctx["scales"], qctx["qw"]
+    bsz, m, d = x.shape
+    di = cfg.d_inner
+    x2d = x.astype(jnp.float32).reshape(-1, d)
+
+    q_in, _ = kops.rmsnorm_quant(x2d, jnp.zeros_like(x2d), p["norm"],
+                                 sc["in"], eps=cfg.norm_eps)
+    lin = qw["in_proj"]
+    xz = kops.int8_matmul(q_in, lin["qw"], sc["in"], lin["s_w"])
+    xc, z = jnp.split(xz, 2, axis=-1)
+    z = z.reshape(bsz, m, di)
+
+    qxc = Q.quantize(xc, sc["conv_in"]).reshape(bsz, m, di)
+    conv_q = Q.quantize(state["conv"].astype(jnp.float32),
+                        sc["conv_in"])
+    cw = qw["conv_w"]
+    qu, _ = kops.causal_conv1d(
+        qxc, cw["qw"], p["conv_b"], sc["conv_in"], cw["s_w"],
+        s_out=sc["x"], state=conv_q, apply_silu=True)
+
+    lin = qw["x_proj"]
+    bcdt = kops.int8_matmul(qu.reshape(-1, di), lin["qw"], sc["x"],
+                            lin["s_w"])
+    qdt, qb, qc = _kernel_selection(bcdt, p, cfg, sc, qw)
+    n = cfg.d_state
+    qdt = qdt.reshape(bsz, m, di)
+    qb, qc = qb.reshape(bsz, m, n), qc.reshape(bsz, m, n)
+    qa, svec, dres = _kernel_scan_operands(p, sc, qw)
+
+    y, h_steps = kops.selective_scan_verify(qu, qdt, qa, qb, qc, svec,
+                                            dres, state["h"], z=z)
+    out = _kernel_out_proj(y.reshape(-1, di), sc, qw, spec)
+    out = x + out.reshape(bsz, m, d).astype(x.dtype)
+    # int8 conv windows dequantize to exactly what per-token stepping
+    # would have stored (quantize is idempotent on grid values)
+    xp_q = jnp.concatenate([conv_q, qxc], axis=1)
+    conv_steps = (_conv_tails(xp_q, cfg.conv_width).astype(jnp.float32)
+                  * jnp.asarray(sc["conv_in"], jnp.float32)
+                  ).astype(state["conv"].dtype)
+    return out, {"conv": conv_steps, "h": h_steps}
+
+
+def mamba_block_verify(p: Dict, cfg: ModelConfig, x: jax.Array,
+                       state: Dict, qctx=None) -> Tuple[jax.Array, Dict]:
+    """Speculative-verify forward: M tokens, state at EVERY boundary.
+
+    x: (B, M, d); state: {"conv", "h"} as in ``mamba_block_step``.
+    Returns (out (B, M, d), steps {"conv": (B, M, W-1, di),
+    "h": (B, M, di, n)}) where steps[...][:, i] is the recurrent state
+    after consuming fed token i.  Each step runs the exact op sequence
+    of ``mamba_block_step``, so accepting a prefix of the fed tokens and
+    restoring its snapshot is bit-identical to having decoded them one
+    by one -- the property speculative decoding's rollback relies on.
+    """
+    if use_kernel_backend(qctx):
+        return _mamba_kernels_verify(p, cfg, x, state, qctx)
+    aux: Dict = {}
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        h = qrecipe.act_qdq(h, qctx["scales"]["in"], qctx["spec"])
+    xz = linear(p, "in_proj", h, qctx)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        xc = qrecipe.act_qdq(xc, qctx["scales"]["conv_in"], qctx["spec"])
+
+    bsz, m, _ = xc.shape
+    width = p["conv_w"].shape[0]
+    xp = jnp.concatenate([state["conv"].astype(xc.dtype), xc], axis=1)
+    y_conv = sum(xp[:, k:k + m] * p["conv_w"][k].astype(xc.dtype)
+                 for k in range(width)) + p["conv_b"].astype(xc.dtype)
+    conv_steps = _conv_tails(xp, width)
+    xc = common.silu(y_conv)
+    xc = _quant_ssm_input(xc, qctx, aux)
+    dt, bmat, cmat = _ssm_params(p, cfg, xc, qctx, aux)
+    a = _quant_A(p, qctx)
+    y, h_steps = kref.selective_scan_states_ref(
+        xc, dt, a, bmat, cmat, p["D"].astype(jnp.float32), z=z,
+        h0=state["h"])
+    y = y.astype(x.dtype)
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        if spec.method == "dynamic":
+            y = Q.dynamic_qdq(y)
+            out = linear(p, "out_proj", y, qctx)
+        elif spec.use_hadamard:
+            yh = had_transform(y)
+            out = linear(p, "out_proj", yh, qctx, site="out_proj_had")
+        else:
+            y = qrecipe.act_qdq(y, qctx["scales"]["y"], spec)
+            out = linear(p, "out_proj", y, qctx)
+    else:
+        out = linear(p, "out_proj", y, qctx)
+    return x + out, {"conv": conv_steps, "h": h_steps}
+
+
 def mamba_block_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict,
                      qctx=None) -> Tuple[jax.Array, Dict]:
     """Single-token decode.  x: (B, d); state: {"conv", "h"}."""

@@ -27,7 +27,7 @@ from repro.models import common
 from repro.models.attention import init_kv_cache
 from repro.models.mamba import (init_mamba_block, init_mamba_state,
                                 mamba_block, mamba_block_prefill,
-                                mamba_block_step)
+                                mamba_block_step, mamba_block_verify)
 from repro.models.transformer import (decoder_layer, encoder_layer,
                                       init_decoder_layer,
                                       init_encoder_layer,
@@ -37,7 +37,8 @@ from repro.models.xlstm import (init_mlstm_block, init_mlstm_state,
                                 mlstm_block, mlstm_block_step, slstm_block,
                                 slstm_block_step)
 from repro.models.zamba import (init_mamba2_block, init_mamba2_state,
-                                mamba2_block, mamba2_block_step)
+                                mamba2_block, mamba2_block_prefill,
+                                mamba2_block_step)
 
 MOE_AUX_COEF = 0.01
 
@@ -412,6 +413,77 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     return state
 
 
+def _hybrid_stack(params: Dict, cfg: ModelConfig, state: Dict,
+                  x: jax.Array, pos: jax.Array, qctx, *, seq: bool):
+    """Walk the hybrid (Mamba-2 groups + shared attention) stack once.
+
+    seq=False: x (B, d), per-token decode via ``mamba2_block_step``.
+    seq=True:  x (B, L, d), chunked prefill via ``mamba2_block_prefill``
+    (the shared attention appends all L entries to its KV cache in one
+    dispatch).  Returns (h, new_layers, new_shared_cache).
+    """
+    groups, per, tail = _hybrid_layout(cfg)
+    gp = _group_tree(params["layers"], groups, per)
+    gs = _group_tree(state["layers"], groups, per)
+    quant = qctx is not None and qctx.get("mode") == "quant"
+    block = mamba2_block_prefill if seq else mamba2_block_step
+
+    def run_group(h, lp, ls, gq, sh_cache_g):
+        h, new_ls = _scan_blocks_cache(
+            lambda q_lp, hh, c, q: block(q_lp, cfg, hh, c, q),
+            h, lp, ls, gq, "g")
+        shq = (_layer_qctx(qctx, qctx["scales"]["shared"],
+                           qctx["qw"]["shared"]) if quant else qctx)
+        h2, _, new_cache = decoder_layer(
+            params["shared"], cfg, h if seq else h[:, None, :],
+            mask_kind="causal", cache=sh_cache_g, cache_pos=pos,
+            qctx=shq)
+        return (h2 if seq else h2[:, 0]), new_ls, new_cache
+
+    new_groups = []
+    new_sh = []
+    h = x
+    for g in range(groups):
+        lp = jax.tree.map(lambda a: a[g], gp)
+        ls = jax.tree.map(lambda a: a[g], gs)
+        sh_cache_g = jax.tree.map(lambda a: a[g],
+                                  state["shared_cache"])
+        gq = qctx
+        if quant:
+            gq = {"mode": "quant", "spec": qctx["spec"],
+                  "scales": {"g": jax.tree.map(
+                      lambda a: a[g], _group_tree(
+                          qctx["scales"]["layers"], groups, per))},
+                  "qw": {"g": jax.tree.map(
+                      lambda a: a[g], _group_tree(
+                          qctx["qw"]["layers"], groups, per))}}
+        h, new_ls, sh_cache_g = run_group(h, lp, ls, gq, sh_cache_g)
+        new_groups.append(new_ls)
+        new_sh.append(sh_cache_g)
+    if tail:
+        tp = _tail_tree(params["layers"], groups * per)
+        ts = _tail_tree(state["layers"], groups * per)
+        tq = qctx
+        if quant:
+            tq = {"mode": "quant", "spec": qctx["spec"],
+                  "scales": {"t": _tail_tree(
+                      qctx["scales"]["layers"], groups * per)},
+                  "qw": {"t": _tail_tree(qctx["qw"]["layers"],
+                                         groups * per)}}
+        h, new_ts = _scan_blocks_cache(
+            lambda q_lp, hh, c, q: block(q_lp, cfg, hh, c, q),
+            h, tp, ts, tq, "t")
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs, 0), *new_groups)
+    flat = jax.tree.map(
+        lambda a: a.reshape((groups * per,) + a.shape[2:]), stacked)
+    if tail:
+        flat = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], 0), flat, new_ts)
+    new_sh_cache = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_sh)
+    return h, flat, new_sh_cache
+
+
 def decode_step(params: Dict, cfg: ModelConfig, state: Dict,
                 tokens: jax.Array, qctx=None
                 ) -> Tuple[jax.Array, Dict]:
@@ -443,66 +515,10 @@ def decode_step(params: Dict, cfg: ModelConfig, state: Dict,
         new_state["layers"] = new_layers
     elif fam == "hybrid":
         x = _embed(params, cfg, tokens, dt)
-        groups, per, tail = _hybrid_layout(cfg)
-        gp = _group_tree(params["layers"], groups, per)
-        gs = _group_tree(state["layers"], groups, per)
-        quant = qctx is not None and qctx.get("mode") == "quant"
-
-        def run_group(h, lp, ls, gq, sh_cache_g):
-            h, new_ls = _scan_blocks_cache(
-                lambda q_lp, hh, c, q: mamba2_block_step(
-                    q_lp, cfg, hh, c, q), h, lp, ls, gq, "g")
-            shq = (_layer_qctx(qctx, qctx["scales"]["shared"],
-                               qctx["qw"]["shared"]) if quant else qctx)
-            h2, _, new_cache = decoder_layer(
-                params["shared"], cfg, h[:, None, :], mask_kind="causal",
-                cache=sh_cache_g, cache_pos=pos, qctx=shq)
-            return h2[:, 0], new_ls, new_cache
-
-        new_groups = []
-        new_sh = []
-        h = x
-        for g in range(groups):
-            lp = jax.tree.map(lambda a: a[g], gp)
-            ls = jax.tree.map(lambda a: a[g], gs)
-            sh_cache_g = jax.tree.map(lambda a: a[g],
-                                      state["shared_cache"])
-            gq = qctx
-            if quant:
-                gq = {"mode": "quant", "spec": qctx["spec"],
-                      "scales": {"g": jax.tree.map(
-                          lambda a: a[g], _group_tree(
-                              qctx["scales"]["layers"], groups, per))},
-                      "qw": {"g": jax.tree.map(
-                          lambda a: a[g], _group_tree(
-                              qctx["qw"]["layers"], groups, per))}}
-            h, new_ls, sh_cache_g = run_group(h, lp, ls, gq, sh_cache_g)
-            new_groups.append(new_ls)
-            new_sh.append(sh_cache_g)
-        if tail:
-            tp = _tail_tree(params["layers"], groups * per)
-            ts = _tail_tree(state["layers"], groups * per)
-            tq = qctx
-            if quant:
-                tq = {"mode": "quant", "spec": qctx["spec"],
-                      "scales": {"t": _tail_tree(
-                          qctx["scales"]["layers"], groups * per)},
-                      "qw": {"t": _tail_tree(qctx["qw"]["layers"],
-                                             groups * per)}}
-            h, new_ts = _scan_blocks_cache(
-                lambda q_lp, hh, c, q: mamba2_block_step(
-                    q_lp, cfg, hh, c, q), h, tp, ts, tq, "t")
-        stacked = jax.tree.map(
-            lambda *xs: jnp.stack(xs, 0), *new_groups)
-        flat = jax.tree.map(
-            lambda a: a.reshape((groups * per,) + a.shape[2:]), stacked)
-        if tail:
-            flat = jax.tree.map(
-                lambda a, b: jnp.concatenate([a, b], 0), flat, new_ts)
+        x, flat, new_sh = _hybrid_stack(params, cfg, state, x, pos,
+                                        qctx, seq=False)
         new_state["layers"] = flat
-        new_state["shared_cache"] = jax.tree.map(
-            lambda *xs: jnp.stack(xs, 0), *new_sh)
-        x = h
+        new_state["shared_cache"] = new_sh
     elif fam == "ssm":
         x = _embed(params, cfg, tokens, dt)
         groups, per = _xlstm_layout(cfg)
@@ -548,10 +564,11 @@ def decode_step(params: Dict, cfg: ModelConfig, state: Dict,
     return logits, new_state
 
 
-# families whose decode state can be advanced a whole sequence chunk at a
-# time (recurrent state + h0/h_last carry); attention families still
-# prefill through the per-token decode path for now
-SEQ_PREFILL_FAMILIES = ("mamba",)
+# families whose decode state can be advanced a whole sequence chunk at
+# a time: recurrent families carry state via h0/h_last, attention
+# families scatter a whole chunk of KV entries per dispatch, hybrid does
+# both.  audio stays per-token (cross-attention bookkeeping).
+SEQ_PREFILL_FAMILIES = ("mamba", "dense", "moe", "vlm", "hybrid")
 
 
 def supports_seq_prefill(cfg: ModelConfig) -> bool:
@@ -563,24 +580,140 @@ def prefill_step(params: Dict, cfg: ModelConfig, state: Dict,
     """Advance the decode state by a whole chunk of prompt tokens.
 
     tokens: (B, L) int32.  One dispatch replaces L ``decode_step``
-    dispatches: each layer runs its sequence forward with the recurrent
-    state carried in and out (chunked prefill).  Returns (last-position
-    logits (B, V), new state); chain calls for longer prompts.
+    dispatches: recurrent layers run their sequence forward with the
+    state carried in and out, attention layers append L KV entries at
+    the per-row positions and mask each query row to its own absolute
+    position (chunked prefill).  The per-token math is identical to
+    ``decode_step``, so streams after a chunked prefill are
+    bit-identical to per-token prefill.  Returns (last-position logits
+    (B, V), new state); chain calls for longer prompts.
     """
     if not supports_seq_prefill(cfg):
         raise NotImplementedError(
             f"sequence prefill not implemented for family {cfg.family!r}")
     dt = _dtype(cfg)
+    fam = cfg.family
     L = tokens.shape[1]
+    pos = state["pos"]
     x = _embed(params, cfg, tokens, dt)                 # (B, L, d)
     new_state = dict(state)
-    x, new_layers = _scan_blocks_cache(
-        lambda lp, h, c, q: mamba_block_prefill(lp, cfg, h, c, q),
-        x, params["layers"], state["layers"], qctx, "layers")
-    new_state["layers"] = new_layers
+    if fam == "mamba":
+        x, new_layers = _scan_blocks_cache(
+            lambda lp, h, c, q: mamba_block_prefill(lp, cfg, h, c, q),
+            x, params["layers"], state["layers"], qctx, "layers")
+        new_state["layers"] = new_layers
+    elif fam in ("dense", "moe", "vlm"):
+        def step(lp, h, cache, q):
+            h2, _, new_cache = decoder_layer(
+                lp, cfg, h, mask_kind="causal", cache=cache,
+                cache_pos=pos, qctx=q)
+            return h2, new_cache
+
+        x, new_caches = _scan_blocks_cache(
+            step, x, params["layers"], state["caches"], qctx, "layers")
+        new_state["caches"] = new_caches
+    else:                                               # hybrid
+        x, flat, new_sh = _hybrid_stack(params, cfg, state, x, pos,
+                                        qctx, seq=True)
+        new_state["layers"] = flat
+        new_state["shared_cache"] = new_sh
     new_state["pos"] = state["pos"] + L
     logits = _logits(params, cfg, x[:, -1:])
     return logits[:, 0], new_state
+
+
+# ---------------------------------------------------------------------------
+# speculative verify (multi-token decode with per-step state snapshots)
+# ---------------------------------------------------------------------------
+
+def supports_verify(cfg: ModelConfig) -> bool:
+    """True when the family has a fused multi-token verify path."""
+    return cfg.family == "mamba"
+
+
+def verify_step(params: Dict, cfg: ModelConfig, state: Dict,
+                tokens: jax.Array, qctx=None) -> Tuple[jax.Array, Dict]:
+    """Advance M tokens in ONE dispatch, keeping EVERY boundary state.
+
+    tokens: (B, M) int32 -- the next committed token followed by the
+    draft tokens.  Returns (logits (B, M, V), steps): ``logits[:, i]``
+    is the distribution after consuming ``tokens[:, i]``, and ``steps``
+    is a decode-state tree whose recurrent leaves gain a per-step axis
+    directly after their batch axis (``steps['pos']`` becomes (B, M)).
+    ``select_verify_state`` collapses it to the snapshot of any accepted
+    prefix -- the O(1) speculative-decode rollback.  Each step runs
+    ``decode_step``'s exact per-token ops, so accepting i tokens and
+    restoring snapshot i is bit-identical to having decoded them one by
+    one.
+    """
+    if not supports_verify(cfg):
+        raise NotImplementedError(
+            f"verify_step not implemented for family {cfg.family!r}")
+    dt = _dtype(cfg)
+    m = tokens.shape[1]
+    x = _embed(params, cfg, tokens, dt)                 # (B, M, d)
+    x, step_layers = _scan_blocks_cache(
+        lambda lp, h, c, q: mamba_block_verify(lp, cfg, h, c, q),
+        x, params["layers"], state["layers"], qctx, "layers")
+    steps = dict(state)
+    steps["layers"] = step_layers
+    steps["pos"] = state["pos"][:, None] + 1 + jnp.arange(m)[None, :]
+    return _logits(params, cfg, x), steps
+
+
+def select_verify_state(cfg: ModelConfig, steps: Dict,
+                        idx: jax.Array) -> Dict:
+    """Collapse ``verify_step``'s per-step axis to one snapshot per row.
+
+    idx: (B,) int32 -- for row b keep the state after fed token
+    ``idx[b]`` (0-based).  Returns a regular decode state; this gather
+    IS the speculative rollback: O(1) in tokens, no recompute.
+    """
+    axes = _batch_axis_map(cfg)
+    out = dict(steps)
+    out["pos"] = jnp.take_along_axis(
+        steps["pos"], idx.astype(jnp.int32)[:, None], axis=1)[:, 0]
+    for key, axis in axes.items():
+        if key == "pos" or key not in steps:
+            continue
+
+        def one(a, axis=axis):
+            # step axis sits directly after the leaf's batch axis
+            shape = [1] * a.ndim
+            shape[axis] = idx.shape[0]
+            ix = idx.astype(jnp.int32).reshape(shape)
+            return jnp.squeeze(
+                jnp.take_along_axis(a, ix, axis=axis + 1), axis=axis + 1)
+
+        out[key] = jax.tree.map(one, steps[key])
+    return out
+
+
+def select_scan_state(cfg: ModelConfig, stacked: Dict,
+                      idx: jax.Array) -> Dict:
+    """Collapse a ``lax.scan``-stacked decode-state tree (per-step axis
+    LEADING, ahead of every batch axis) to one snapshot per row.
+
+    The speculative drafter emits one such tree per round (its scan ys
+    are the full decode state after each draft step); idx: (B,) -- row
+    ``b`` keeps scan step ``idx[b]``.  Counterpart of
+    :func:`select_verify_state`, whose step axis sits after each leaf's
+    batch axis instead.
+    """
+    axes = _batch_axis_map(cfg)
+    out = {}
+    for key, axis in axes.items():
+        if key not in stacked:
+            continue
+
+        def one(a, axis=axis):
+            shape = [1] * a.ndim
+            shape[axis + 1] = idx.shape[0]
+            ix = idx.astype(jnp.int32).reshape(shape)
+            return jnp.squeeze(jnp.take_along_axis(a, ix, axis=0), axis=0)
+
+        out[key] = jax.tree.map(one, stacked[key])
+    return out
 
 
 # ---------------------------------------------------------------------------

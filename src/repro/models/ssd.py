@@ -98,6 +98,35 @@ def ssd_step(s: jax.Array, x: jax.Array, dt: jax.Array, a_head: jax.Array,
     return y, s_new
 
 
+def ssd_seq(x: jax.Array, dt: jax.Array, a_head: jax.Array,
+            bmat: jax.Array, cmat: jax.Array, d_head: jax.Array,
+            h0: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (lax.scan over time) SSD; always returns (y, s_last).
+
+    Same semantics as ``ssd_chunked(..., return_state=True)`` but the
+    recurrence runs strictly in time order with the exact fp operations
+    of :func:`ssd_step` -- so a chunked prefill through this path is
+    bitwise-identical to stepping token by token (the chunkwise
+    einsum form of ``ssd_chunked`` is NOT: it reassociates the decay
+    products).  The serving engine's prefill->decode handoff for the
+    hybrid family relies on this.
+    """
+    b, L, h, hd = x.shape
+    n = bmat.shape[-1]
+    s0 = (h0.astype(jnp.float32) if h0 is not None
+          else jnp.zeros((b, h, n, hd), jnp.float32))
+
+    def body(s, t):
+        x_t, dt_t, b_t, c_t = t
+        y_t, s_new = ssd_step(s, x_t, dt_t, a_head, b_t, c_t, d_head)
+        return s_new, y_t
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, bmat, cmat))
+    s_last, ys = jax.lax.scan(body, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_last
+
+
 def ssd_reference(x, dt, a_head, bmat, cmat, d_head, h0=None):
     """Slow sequential oracle for tests."""
     b, L, h, hd = x.shape

@@ -19,7 +19,7 @@ from repro.configs.base import ModelConfig
 from repro.models import common
 from repro.models.common import is_calib, is_quant, linear
 from repro.models.mamba import _depthwise_conv_silu
-from repro.models.ssd import ssd_chunked, ssd_step
+from repro.models.ssd import ssd_chunked, ssd_seq, ssd_step
 from repro.quant.hadamard import had_transform
 from repro.quant.observers import observe
 from repro.quant import quantizers as Q
@@ -113,6 +113,48 @@ def init_mamba2_state(cfg: ModelConfig, batch: int) -> Dict:
                           jnp.float32),
         "h": jnp.zeros((batch, heads, n, hd), jnp.float32),
     }
+
+
+def mamba2_block_prefill(p: Dict, cfg: ModelConfig, x: jax.Array,
+                         state: Dict, qctx=None
+                         ) -> Tuple[jax.Array, Dict]:
+    """Sequence forward with recurrent-state carry (chunked prefill).
+
+    x: (B, L, d); state: {"conv", "h"} from ``init_mamba2_state``.  One
+    dispatch advances the whole chunk; the conv tail and SSD state carry
+    across chunks.  The recurrence runs through :func:`ssd_seq` (strict
+    time order, ``ssd_step``'s exact ops), so chunked prefill followed
+    by ``mamba2_block_step`` decode matches per-token stepping bitwise
+    -- ``ssd_chunked`` would not (it reassociates decay products).
+    """
+    aux: Dict = {}
+    b, L, d = x.shape
+    di, n, heads = cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    hd = di // heads
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    # mirror mamba2_block_step's site handling exactly (parity contract);
+    # dynamic-method scales recompute per call, so chunked prefill only
+    # approximates per-token stepping there -- the engine keeps the
+    # per-token path for dynamic specs
+    if is_quant(qctx) and qctx["spec"].method != "dynamic":
+        h = qrecipe.act_qdq(h, qctx["scales"]["in"], qctx["spec"])
+    z, xi, bmat, cmat, dt = _split_in_proj(
+        cfg, linear(p, "in_proj", h, qctx))
+    xbc, conv_new = _depthwise_conv_silu(
+        jnp.concatenate([xi, bmat, cmat], -1), p["conv_w"], p["conv_b"],
+        state=state["conv"])
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    if is_quant(qctx):
+        spec = qctx["spec"]
+        xi = (Q.dynamic_qdq(xi) if spec.method == "dynamic"
+              else qrecipe.ssm_input_qdq(xi, qctx["scales"]["x"], spec))
+    dt = common.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_head = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_new = ssd_seq(xi.reshape(b, L, heads, hd), dt, a_head,
+                       bmat, cmat, p["D"], h0=state["h"])
+    y = y.reshape(b, L, di).astype(x.dtype)
+    out = _gated_out(p, cfg, y, z, x, qctx, aux)
+    return out, {"conv": conv_new, "h": h_new}
 
 
 def mamba2_block_step(p: Dict, cfg: ModelConfig, x: jax.Array,

@@ -11,6 +11,7 @@ from repro.serve.sampler import apply_top_k_top_p, sample, sample_batched
 from repro.serve.scheduler import (CacheAwareScheduler, FCFSScheduler,
                                    PriorityScheduler, Scheduler,
                                    make_scheduler)
+from repro.serve.spec import SpecConfig
 
 __all__ = [
     "CacheEntry", "StateCache",
@@ -22,4 +23,5 @@ __all__ = [
     "apply_top_k_top_p", "sample", "sample_batched",
     "CacheAwareScheduler", "FCFSScheduler", "PriorityScheduler",
     "Scheduler", "make_scheduler",
+    "SpecConfig",
 ]

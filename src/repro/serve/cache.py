@@ -22,6 +22,17 @@ Design:
   int8 or fp leaves exactly as the artifact's backend laid them out.
   jax arrays are immutable, so a snapshot is a tree of references, not
   a copy; eviction just drops the references.
+* **Copy-on-write snapshot sharing** is a hard contract, not an
+  accident of implementation: ``insert`` stores the caller's tree by
+  reference, ``lookup`` returns THE cached tree (never a copy), and
+  every consumer (``EngineCore.restore_slot`` -> ``write_slot``) reads
+  it into a fresh batched state without touching the original.  N
+  concurrent requests restoring the same cached prefix therefore share
+  ONE set of device buffers -- zero per-restore copies, one
+  ``device_put`` total even when the entry has to be promoted from the
+  spill tier first.  The flip side binds callers: cached trees are
+  read-only; advancing a restored slot must build new arrays (which
+  every jax op does) rather than mutate leaves in place.
 * **Eviction** is LRU under a byte budget (plus an entry-count cap).
   ``lookup`` refreshes recency; inserting past the budget evicts the
   least recently used entries.
@@ -193,7 +204,13 @@ class StateCache:
         A *full* hit covers ``len(prompt) - 1`` tokens: the request can
         go straight to decoding.  A match in the spill tier is promoted
         back to the device tier first, so the returned ``.state`` is
-        always device-resident and shared across concurrent restores."""
+        always device-resident.
+
+        Copy-on-write: the returned ``.state`` is the cached tree
+        itself, by reference -- repeated lookups of the same prefix
+        hand out the SAME leaves, concurrent restores share them, and
+        a promotion pays its one ``device_put`` only once.  Callers
+        must treat the tree as read-only (see the module docstring)."""
         e, spilled = self._match(prompt)
         if e is None:
             self.misses += 1

@@ -24,7 +24,7 @@ extra host syncs.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -32,19 +32,26 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_decode_state, prefill_step, \
-    supports_seq_prefill
+    select_scan_state, select_verify_state, supports_seq_prefill, \
+    supports_verify, verify_step
 from repro.models.model import merge_slot, reset_slot, slice_slot, \
     write_slot
 from repro.quant.recipe import prefill_chunk_safe
 from repro.serve.params import SamplingParams
-from repro.serve.sampler import sample_batched
+from repro.serve.sampler import apply_top_k_top_p, sample_batched
+from repro.serve.spec import SpecConfig, resolve_draft, spec_acceptance
+
+# per-slot draft PRNG keys fork off the slot key with a fixed salt, so
+# draft sampling never consumes (or perturbs) the target's key stream
+_DRAFT_KEY_SALT = 0x5bec
 
 
 class EngineCore:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 2048, qctx=None, seed: int = 0,
                  cache_dtype=None, prefill_chunk: int = 128,
-                 shard: Optional[bool] = None):
+                 shard: Optional[bool] = None,
+                 speculative: Optional[SpecConfig] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if prefill_chunk < 1:
@@ -122,6 +129,38 @@ class EngineCore:
         self.counters: Dict[str, int] = {"prefill_dispatches": 0,
                                          "decode_steps": 0,
                                          "prefix_restores": 0}
+        # speculative decoding (repro.serve.spec): a draft model state
+        # rides alongside the target's, same slot layout
+        self.spec: Optional[SpecConfig] = speculative
+        if speculative is not None:
+            self._init_spec(speculative)
+
+    def _init_spec(self, spec: SpecConfig) -> None:
+        if not supports_verify(self.cfg):
+            raise ValueError(
+                "speculative decoding needs a fused multi-token verify "
+                f"path; family {self.cfg.family!r} has none "
+                "(models.supports_verify)")
+        dc, dp, dq, is_self = resolve_draft(spec, self.cfg, self.params,
+                                            self.qctx)
+        self.draft_cfg, self.draft_params, self.draft_qctx = dc, dp, dq
+        self._draft_is_self = is_self
+        self.draft_state = init_decode_state(dc, self.max_batch,
+                                             self.max_len)
+        self._draft_keys = jax.random.split(
+            jax.random.fold_in(self._base_key, _DRAFT_KEY_SALT),
+            self.max_batch)
+        self._spec_fn = jax.jit(self._one_spec_round,
+                                static_argnames="truncate")
+        dspec = dq.get("spec") if isinstance(dq, dict) else None
+        self._draft_prefill_fn = (jax.jit(self._one_draft_prefill)
+                                  if supports_seq_prefill(dc)
+                                  and prefill_chunk_safe(dspec) else None)
+        self._draft_step_fn = jax.jit(self._one_draft_step)
+        self.counters.update({"spec_rounds": 0, "drafted_tokens": 0,
+                              "accepted_tokens": 0,
+                              "rolled_back_tokens": 0,
+                              "draft_prefill_dispatches": 0})
 
     # -- jitted cores -----------------------------------------------------
     def _one_step(self, params, state, tokens, keys, temps, top_k, top_p,
@@ -137,6 +176,60 @@ class EngineCore:
         _, new_state = prefill_step(params, self.cfg, slot_state, tokens,
                                     qctx=self.qctx)
         return new_state
+
+    def _one_draft_prefill(self, dparams, slot_state, tokens):
+        _, new_state = prefill_step(dparams, self.draft_cfg, slot_state,
+                                    tokens, qctx=self.draft_qctx)
+        return new_state
+
+    def _one_draft_step(self, dparams, slot_state, tok):
+        _, new_state = decode_step(dparams, self.draft_cfg, slot_state,
+                                   tok, qctx=self.draft_qctx)
+        return new_state
+
+    def _one_spec_round(self, params, dparams, state, dstate, t0, keys,
+                        dkeys, temps, top_k, top_p, truncate):
+        """One fused speculative round, a single dispatch end to end:
+        draft ``k`` tokens (lax.scan of per-token draft steps, sampling
+        on device), verify all of them through ``verify_step``'s
+        multi-token kernel, run the acceptance math, and roll BOTH
+        models back to each row's last accepted position via O(1)
+        per-step snapshot selects."""
+        k = self.spec.k
+
+        def body(carry, _):
+            st, tok, ks = carry
+            logits, st = decode_step(dparams, self.draft_cfg, st, tok,
+                                     qctx=self.draft_qctx)
+            ks2 = jax.vmap(jax.random.split)(ks)
+            # q is the exact distribution this sample is drawn from
+            # (sample_batched's pipeline); acceptance needs the pair
+            scaled = logits / jnp.maximum(temps, 1e-4)[:, None]
+            masked = (apply_top_k_top_p(scaled, top_k, top_p)
+                      if truncate else scaled)
+            q = jax.nn.softmax(masked, axis=-1)
+            nxt = jnp.where(
+                temps <= 0.0, jnp.argmax(logits, axis=-1),
+                jax.vmap(jax.random.categorical)(ks2[:, 1], masked)
+            ).astype(jnp.int32)
+            return (st, nxt, ks2[:, 0]), (nxt, q, st)
+
+        # k+1 draft steps: the last one advances the draft past its own
+        # final token so EVERY rollback target j in [0, k] has a
+        # snapshot (the draft never lags the target between rounds)
+        (_, _, dkeys), (toks, qs, dsteps) = jax.lax.scan(
+            body, (dstate, t0, dkeys), None, length=k + 1)
+        drafts = jnp.moveaxis(toks[:k], 0, 1)          # (B, k) d_1..d_k
+        qprobs = jnp.moveaxis(qs[:k], 0, 1)            # (B, k, V)
+
+        fed = jnp.concatenate([t0[:, None], drafts], axis=1)
+        logits, steps = verify_step(params, self.cfg, state, fed,
+                                    qctx=self.qctx)
+        n_acc, extra, keys = spec_acceptance(
+            logits, drafts, qprobs, keys, temps, top_k, top_p, truncate)
+        new_state = select_verify_state(self.cfg, steps, n_acc)
+        new_dstate = select_scan_state(self.draft_cfg, dsteps, n_acc)
+        return drafts, n_acc, extra, keys, dkeys, new_state, new_dstate
 
     # -- slot management --------------------------------------------------
     @staticmethod
@@ -185,8 +278,48 @@ class EngineCore:
         key = (jax.random.PRNGKey(sp.seed) if sp.seed is not None
                else jax.random.fold_in(self._base_key, salt))
         self._keys_dev = self._keys_dev.at[i].set(key)
+        if self.spec is not None:
+            self._draft_keys = self._draft_keys.at[i].set(
+                jax.random.fold_in(key, _DRAFT_KEY_SALT))
         self._dirty = True
         self._prefill(i, prompt, start=prefix_len, on_prefix=on_prefix)
+        if self.spec is not None:
+            self._seat_draft(i, prompt)
+
+    def _seat_draft(self, i: int, prompt: Sequence[int]) -> None:
+        """Bring the draft model's slot ``i`` to the same consumed
+        prefix as the target (everything up to, not including, the last
+        prompt token).  A "self" draft shares the target's weights and
+        state layout, so the just-prefilled target slot IS the draft
+        state: one reference-shared slice, no recompute -- and a
+        prefix-cache restore on the target transfers to the draft for
+        free.  A distinct draft prefills the prompt through its own
+        path (chunked when its family and qctx allow)."""
+        if self._draft_is_self:
+            self.draft_state = write_slot(
+                self.draft_cfg, self.draft_state,
+                slice_slot(self.cfg, self.state, i), i)
+            return
+        self.draft_state = reset_slot(self.draft_cfg, self.draft_state, i)
+        toks = list(prompt[:-1])
+        if not toks:
+            return
+        slot = slice_slot(self.draft_cfg, self.draft_state, i)
+        if self._draft_prefill_fn is not None:
+            c0 = 0
+            for size in self._chunk_plan(len(toks), self.prefill_chunk):
+                chunk = jnp.asarray([toks[c0:c0 + size]], jnp.int32)
+                c0 += size
+                slot = self._draft_prefill_fn(self.draft_params, slot,
+                                              chunk)
+                self.counters["draft_prefill_dispatches"] += 1
+        else:
+            for t in toks:
+                slot = self._draft_step_fn(self.draft_params, slot,
+                                           jnp.asarray([t], jnp.int32))
+                self.counters["draft_prefill_dispatches"] += 1
+        self.draft_state = write_slot(self.draft_cfg, self.draft_state,
+                                      slot, i)
 
     # -- prefix-cache state movement (device-side; jax arrays are
     # immutable so a snapshot is a tree of references, not a copy) ------
@@ -305,3 +438,37 @@ class EngineCore:
         self._next_dev = toks
         self._next_host[:] = toks_host
         return toks_host
+
+    def decode_spec(self, live_slots: Sequence[int]
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One fused speculative round for ALL slots (one dispatch).
+
+        Returns host arrays ``(drafts (B, k), n_acc (B,), extra (B,))``:
+        slot ``i`` commits ``drafts[i, :n_acc[i]]`` followed by
+        ``extra[i]`` -- always ``n_acc[i] + 1`` tokens.  Greedy slots
+        accept a draft token iff it equals the target argmax, so their
+        streams are bit-identical to vanilla :meth:`decode`; sampled
+        slots use Leviathan rejection sampling over the same processed
+        distributions ``sample_batched`` draws from, so their streams
+        are distribution-identical.  ``live_slots`` scopes the
+        acceptance counters to occupied slots (free slots still compute
+        -- their results are discarded like vanilla decode's)."""
+        self._sync_device_inputs()
+        k = self.spec.k
+        (drafts, n_acc, extra, self._keys_dev, self._draft_keys,
+         self.state, self.draft_state) = self._spec_fn(
+            self.params, self.draft_params, self.state, self.draft_state,
+            self._next_dev, self._keys_dev, self._draft_keys,
+            self._temps_dev, self._topk_dev, self._topp_dev,
+            truncate=self._truncate)
+        self.counters["decode_steps"] += 1
+        self.counters["spec_rounds"] += 1
+        drafts_h, n_h, extra_h = (
+            np.asarray(a) for a in jax.device_get((drafts, n_acc, extra)))
+        for i in live_slots:
+            self.counters["drafted_tokens"] += k
+            self.counters["accepted_tokens"] += int(n_h[i])
+            self.counters["rolled_back_tokens"] += k - int(n_h[i])
+        self._next_dev = extra
+        self._next_host[:] = extra_h
+        return drafts_h, n_h, extra_h

@@ -40,6 +40,7 @@ from repro.serve.request import (FinishReason, Request, RequestOutput,
                                  RequestState, RequestStatus,
                                  RequestStream)
 from repro.serve.scheduler import Scheduler, make_scheduler
+from repro.serve.spec import SpecConfig
 
 
 class StepBudgetExhausted(RuntimeError):
@@ -60,11 +61,13 @@ class LLMEngine:
                  scheduler: Union[str, Scheduler, None] = None,
                  prefix_cache_mb: Optional[float] = None,
                  prefix_cache_spill_mb: Optional[float] = None,
+                 speculative: Optional[SpecConfig] = None,
                  clock=time.monotonic):
         self.core = EngineCore(params, cfg, max_batch=max_batch,
                                max_len=max_len, qctx=qctx, seed=seed,
                                cache_dtype=cache_dtype,
-                               prefill_chunk=prefill_chunk, shard=shard)
+                               prefill_chunk=prefill_chunk, shard=shard,
+                               speculative=speculative)
         self.prefix_cache: Optional[StateCache] = None
         if prefix_cache_mb is not None and prefix_cache_mb > 0:
             spill_mb = prefix_cache_spill_mb or 0
@@ -216,6 +219,8 @@ class LLMEngine:
         live = self.scheduler.live()
         if not live:
             return []
+        if self.core.spec is not None:
+            return self._spec_step(live)
         toks = self.core.decode()
         self.metrics.on_step(self.scheduler.queue_depth, len(live),
                              self.core.max_batch)
@@ -225,26 +230,64 @@ class LLMEngine:
                 # cancelled reentrantly by an earlier slot's on_token
                 # callback this very step: its token is dropped
                 continue
-            tok = int(toks[slot])
-            state.request.output.append(tok)
-            t = self.metrics.on_token(state.request_id)
-            if state.first_token_time is None:
-                state.first_token_time = t
-            state.stream.put(tok)          # may reenter cancel()
+            emitted = self._emit(state, int(toks[slot]))
+            outputs.append(state.snapshot(emitted))
+        return outputs
+
+    def _emit(self, state: RequestState, tok: int) -> tuple:
+        """Deliver one decoded token to a request: stream it, update
+        metrics, and apply the stop / max_tokens finish rules.  Returns
+        the tokens actually committed (empty when a reentrant cancel
+        from an earlier stream callback already finished the request
+        this step)."""
+        if state.finished:
+            return ()
+        state.request.output.append(tok)
+        t = self.metrics.on_token(state.request_id)
+        if state.first_token_time is None:
+            state.first_token_time = t
+        state.stream.put(tok)          # may reenter cancel()
+        if state.finished:
+            return (tok,)
+        sp = state.request.params
+        reason = None
+        if tok in sp.stop_token_ids:
+            reason = FinishReason.STOP
+        elif len(state.request.output) >= sp.max_tokens:
+            reason = FinishReason.LENGTH
+        if reason is not None:
+            freed = self.scheduler.release(state)
+            self.core.clear_slot(freed)
+            self._finish(state, reason)
+        return (tok,)
+
+    def _spec_step(self, live) -> List[RequestOutput]:
+        """One speculative round: every live slot commits between 1 and
+        ``k + 1`` tokens (its accepted draft prefix plus the
+        replacement/bonus token).  A stop token, max_tokens, or a
+        reentrant cancel inside the block drops the block's remaining
+        tokens -- the slot is released at that boundary, exactly as a
+        vanilla step would at its single token."""
+        k = self.core.spec.k
+        drafts, n_acc, extra = self.core.decode_spec(
+            [slot for slot, _ in live])
+        self.metrics.on_step(self.scheduler.queue_depth, len(live),
+                             self.core.max_batch)
+        outputs: List[RequestOutput] = []
+        for slot, state in live:
             if state.finished:
-                outputs.append(state.snapshot((tok,)))
                 continue
-            sp = state.request.params
-            reason = None
-            if tok in sp.stop_token_ids:
-                reason = FinishReason.STOP
-            elif len(state.request.output) >= sp.max_tokens:
-                reason = FinishReason.LENGTH
-            if reason is not None:
-                freed = self.scheduler.release(state)
-                self.core.clear_slot(freed)
-                self._finish(state, reason)
-            outputs.append(state.snapshot((tok,)))
+            n = int(n_acc[slot])
+            block = [int(t) for t in drafts[slot, :n]] + [int(extra[slot])]
+            emitted: List[int] = []
+            for tok in block:
+                out = self._emit(state, tok)
+                emitted.extend(out)
+                if state.finished or not out:
+                    break
+            self.metrics.on_spec_round(state.request_id, drafted=k,
+                                       accepted=n)
+            outputs.append(state.snapshot(tuple(emitted)))
         return outputs
 
     def has_unfinished(self) -> bool:
@@ -292,11 +335,30 @@ class LLMEngine:
         """Per-request TTFT/TPOT/queue-time + engine tokens/s,
         occupancy, queue-depth series, dispatch counts, and (when the
         prefix cache is on) its hit-rate/bytes/TTFT-split, as one
-        JSON-safe dict."""
+        JSON-safe dict.  With speculative decoding on, a
+        ``spec_decode`` section carries the acceptance rate, the
+        drafted/accepted/rolled-back token counters, and the
+        per-request tokens-per-round speedup distribution."""
+        spec = None
+        if self.core.spec is not None:
+            c = self.core.counters
+            spec = {
+                "k": self.core.spec.k,
+                "draft": ("self" if self.core._draft_is_self
+                          else self.core.draft_cfg.name),
+                "rounds": c["spec_rounds"],
+                "drafted_tokens": c["drafted_tokens"],
+                "accepted_tokens": c["accepted_tokens"],
+                "rolled_back_tokens": c["rolled_back_tokens"],
+                "acceptance_rate": (c["accepted_tokens"]
+                                    / c["drafted_tokens"]
+                                    if c["drafted_tokens"] else None),
+            }
         return self.metrics.to_json(
             extra_counters=self.core.counters,
             prefix_cache=(self.prefix_cache.stats()
-                          if self.prefix_cache is not None else None))
+                          if self.prefix_cache is not None else None),
+            spec_decode=spec)
 
 
 def generate(params, cfg: ModelConfig, prompts: Sequence[Sequence[int]],

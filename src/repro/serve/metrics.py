@@ -59,6 +59,19 @@ class RequestMetrics:
     finish_time: Optional[float] = None
     generated: int = 0
     finish_reason: Optional[str] = None
+    # speculative decoding (zero when the engine runs vanilla decode)
+    spec_rounds: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+
+    @property
+    def spec_speedup(self) -> Optional[float]:
+        """Tokens committed per dispatch round (vanilla decode == 1.0):
+        the per-request speculative speedup in the dispatch-bound
+        regime."""
+        if self.spec_rounds == 0:
+            return None
+        return self.generated / self.spec_rounds
 
     @property
     def queue_time_s(self) -> Optional[float]:
@@ -92,6 +105,10 @@ class RequestMetrics:
             "queue_time_ms": ms(self.queue_time_s),
             "ttft_ms": ms(self.ttft_s),
             "tpot_ms": ms(self.tpot_s),
+            "spec_rounds": self.spec_rounds,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_speedup": self.spec_speedup,
         }
 
 
@@ -108,8 +125,9 @@ def _percentile(sorted_vals: List[float], q: float) -> float:
     return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
 
 
-def _stats_ms(vals_s: List[float]) -> Optional[Dict[str, float]]:
-    vals = sorted(v * 1e3 for v in vals_s)
+def _stats(vals: List[float]) -> Optional[Dict[str, float]]:
+    """mean/p50/p95/p99/max/n summary of raw (unitless) samples."""
+    vals = sorted(vals)
     if not vals:
         return None
     return {
@@ -120,6 +138,10 @@ def _stats_ms(vals_s: List[float]) -> Optional[Dict[str, float]]:
         "max": vals[-1],
         "n": len(vals),
     }
+
+
+def _stats_ms(vals_s: List[float]) -> Optional[Dict[str, float]]:
+    return _stats([v * 1e3 for v in vals_s])
 
 
 def stats_ms(vals_s: List[float]) -> Optional[Dict[str, float]]:
@@ -195,6 +217,19 @@ class Metrics:
                        lambda rm: rm.finish_time is not None)
         return t
 
+    def on_spec_round(self, request_id: str, drafted: int,
+                      accepted: int) -> None:
+        """Record one speculative round for a request (``drafted`` =
+        the round's k, ``accepted`` = draft tokens that survived
+        verification; the committed tokens themselves flow through
+        ``on_token`` as usual)."""
+        m = self.requests.get(request_id)
+        if m is None:
+            return
+        m.spec_rounds += 1
+        m.spec_drafted += drafted
+        m.spec_accepted += accepted
+
     # -- engine events ----------------------------------------------------
     def on_step(self, queue_depth: int, live: int, max_batch: int) -> None:
         self.decode_steps += 1
@@ -206,12 +241,16 @@ class Metrics:
         return self.requests[request_id].to_dict()
 
     def to_json(self, extra_counters: Optional[Dict[str, int]] = None,
-                prefix_cache: Optional[Dict] = None) -> Dict:
+                prefix_cache: Optional[Dict] = None,
+                spec_decode: Optional[Dict] = None) -> Dict:
         """One JSON-safe dict: per-request, summary, engine sections --
         plus a ``prefix_cache`` section (hit-rate/bytes from the
         ``StateCache`` counters passed in, TTFT split by whether the
         request's prefix was cached) when ``prefix_cache`` stats are
-        provided."""
+        provided, and a ``spec_decode`` section (acceptance rate,
+        drafted/accepted/rolled-back counters from the engine plus the
+        per-request tokens-per-round speedup distribution) when
+        ``spec_decode`` counters are provided."""
         elapsed = None
         if (self._start_time is not None
                 and self._last_token_time is not None):
@@ -259,12 +298,23 @@ class Metrics:
                                         if m.ttft_s is not None
                                         and m.cached_tokens == 0]),
             )
+        if spec_decode is not None:
+            # per_request_speedup is tokens-per-dispatch-round, so 1.0
+            # is vanilla decode and k+1 is a fully-accepted round
+            out["spec_decode"] = dict(
+                spec_decode,
+                per_request_speedup=_stats(
+                    [m.spec_speedup for m in ms
+                     if m.spec_speedup is not None]),
+            )
         return out
 
     def dump(self, path: str,
              extra_counters: Optional[Dict[str, int]] = None,
-             prefix_cache: Optional[Dict] = None) -> str:
+             prefix_cache: Optional[Dict] = None,
+             spec_decode: Optional[Dict] = None) -> str:
         with open(path, "w") as f:
-            json.dump(self.to_json(extra_counters, prefix_cache), f,
+            json.dump(self.to_json(extra_counters, prefix_cache,
+                                   spec_decode), f,
                       indent=1, sort_keys=True)
         return path

@@ -1,0 +1,194 @@
+"""Speculative draft-and-verify decoding for selective-scan models.
+
+A small *draft* model proposes ``k`` tokens per round; the target model
+checks all of them in ONE multi-token dispatch (``models.verify_step``
+riding the fused ``kernels.scan_step.selective_scan_verify`` Pallas
+kernel, which emits the recurrent state at every step boundary).
+Rejection is where SSMs shine: rolling back to the last accepted
+position is a single O(1) per-step snapshot select
+(``select_verify_state``), not a KV-cache truncation -- the same
+state-is-tiny property the prefix cache exploits.
+
+Acceptance is ``SamplingParams``-exact:
+
+* **Greedy rows** (``temperature == 0``) accept a draft token iff it
+  equals the target argmax, and the replacement/bonus token IS the
+  target argmax -- so speculative greedy streams are *bit-identical* to
+  vanilla decode (``verify_step`` runs ``decode_step``'s exact per-token
+  ops).
+* **Sampled rows** run Leviathan-style rejection sampling: draft token
+  ``d ~ q`` is accepted with probability ``min(1, p(d)/q(d))``; on
+  rejection the replacement is drawn from the residual
+  ``norm(max(p - q, 0))``, and a full accept earns a bonus token from
+  the last verified distribution.  Both ``p`` and ``q`` are the SAME
+  processed distributions ``sample_batched`` draws from (temperature
+  scaling + top-k/top-p masking + softmax), so the emitted stream is
+  *distribution-identical* to vanilla decoding -- token by token, for
+  any acceptance rate.
+
+The per-round bookkeeping (per-slot draft state, counters, multi-token
+emission) lives in ``repro.serve.core.EngineCore`` / ``LLMEngine``;
+this module holds the config surface and the sampling math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.serve.sampler import apply_top_k_top_p
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs for ``LLMEngine(speculative=...)``.
+
+    draft: which model proposes tokens --
+
+      * ``"self"``: the target model drafts for itself.  Acceptance is
+        1.0 by construction, so every round turns ``k + 1`` sequential
+        decode dispatches into one fused draft-scan + one verify
+        dispatch: pure dispatch-overhead amortization (the regime CPU
+        smoke runs and small models live in).
+      * an architecture name (e.g. ``"mamba-130m"``): resolved via the
+        config registry.  When it names the *target's own* config it
+        degenerates to ``"self"``; otherwise ``draft_params`` must
+        carry the draft weights (the engine never loads checkpoints).
+      * a ``ModelConfig``: explicit draft config, ``draft_params``
+        required.
+
+    k: draft tokens per round (>= 1).  Each round emits between 1 and
+    ``k + 1`` tokens per slot; higher ``k`` pays off only while the
+    acceptance rate stays high (see docs/serving.md).
+
+    draft_params / draft_qctx: weights and quantization context for a
+    distinct draft model.  ``draft_qctx=None`` with a distinct draft
+    runs it in floating point; a "self" draft inherits the target qctx
+    so both sides share the int8 kernel path.
+    """
+
+    draft: Union[str, ModelConfig] = "self"
+    k: int = 4
+    draft_params: Optional[dict] = None
+    draft_qctx: Optional[dict] = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"SpecConfig.k must be >= 1, got {self.k}")
+
+
+def resolve_draft(spec: SpecConfig, cfg: ModelConfig, params, qctx
+                  ) -> Tuple[ModelConfig, dict, Optional[dict], bool]:
+    """Resolve ``spec.draft`` against the target model.
+
+    Returns ``(draft_cfg, draft_params, draft_qctx, is_self)``;
+    ``is_self`` means the draft shares the target's weights AND state
+    layout, so the engine can seed draft slots by reference from the
+    target's prefilled state (no draft prefill at all).
+    """
+    d = spec.draft
+    if isinstance(d, str):
+        if d == "self" or d == cfg.name:
+            if spec.draft_params is not None:
+                raise ValueError(
+                    f"draft {d!r} resolves to the target model itself; "
+                    "draft_params must be None (the target's weights are "
+                    "used)")
+            dq = (qctx if spec.draft_qctx is None else spec.draft_qctx)
+            return cfg, params, dq, True
+        if spec.draft_params is None:
+            raise ValueError(
+                f"draft {d!r} names a different model than the target "
+                f"({cfg.name!r}); pass SpecConfig(draft_params=...) with "
+                "its weights -- the engine never loads checkpoints")
+        from repro.configs.registry import get_config
+        dc = get_config(d)
+    else:
+        dc = d
+        if spec.draft_params is None:
+            raise ValueError(
+                "SpecConfig with a ModelConfig draft needs draft_params")
+    if dc.vocab_size != cfg.vocab_size:
+        raise ValueError(
+            f"draft vocab ({dc.vocab_size}) must match the target vocab "
+            f"({cfg.vocab_size}): acceptance compares distributions "
+            "token id by token id")
+    return dc, spec.draft_params, spec.draft_qctx, False
+
+
+def processed_probs(logits: jax.Array, temps: jax.Array,
+                    top_k: jax.Array, top_p: jax.Array,
+                    truncate: bool) -> jax.Array:
+    """The distribution ``sample_batched`` actually draws from.
+
+    logits: (B, V) raw model logits; returns (B, V) probabilities after
+    temperature scaling and (when ``truncate``) top-k/top-p masking --
+    the exact pipeline in ``repro.serve.sampler``, so acceptance tests
+    p and q on the same footing as vanilla sampling.
+    """
+    scaled = logits / jnp.maximum(temps, 1e-4)[:, None]
+    if truncate:
+        scaled = apply_top_k_top_p(scaled, top_k, top_p)
+    return jax.nn.softmax(scaled, axis=-1)
+
+
+def spec_acceptance(logits: jax.Array, drafts: jax.Array,
+                    qprobs: jax.Array, keys: jax.Array, temps: jax.Array,
+                    top_k: jax.Array, top_p: jax.Array, truncate: bool
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One verify round's acceptance decision, fully batched.
+
+    logits: (B, k+1, V) target logits over the fed tokens
+    ``[t0, d_1..d_k]`` (``logits[:, i]`` = distribution after consuming
+    fed token ``i``); drafts: (B, k); qprobs: (B, k, V) the PROCESSED
+    draft distributions each ``d_{i+1}`` was sampled from.
+
+    Returns ``(n_acc, extra, new_keys)``: row ``b`` commits
+    ``drafts[b, :n_acc[b]]`` followed by ``extra[b]`` -- the residual
+    replacement at the first rejection, or the bonus token after a full
+    accept.  Always ``n_acc + 1`` tokens per row per round.
+    """
+    b, m, v = logits.shape
+    k = m - 1
+    rows = jnp.arange(b)
+    greedy_tok = jnp.argmax(logits, axis=-1)                  # (B, M)
+    flat = processed_probs(
+        logits.reshape(b * m, v), jnp.repeat(temps, m),
+        jnp.repeat(top_k, m), jnp.repeat(top_p, m), truncate)
+    p = flat.reshape(b, m, v)                                 # (B, M, V)
+
+    ks = jax.vmap(lambda key: jax.random.split(key, 3))(keys)
+    new_keys = ks[:, 0]
+    u = jax.vmap(lambda key: jax.random.uniform(key, (k,)))(ks[:, 1])
+
+    p_d = jnp.take_along_axis(p[:, :k], drafts[..., None],
+                              axis=-1)[..., 0]                # (B, k)
+    q_d = jnp.take_along_axis(qprobs, drafts[..., None],
+                              axis=-1)[..., 0]
+    # u < p/q without the division; u in [0, 1) so p == q always accepts
+    acc_sample = u * q_d < p_d
+    acc_greedy = drafts == greedy_tok[:, :k]
+    acc = jnp.where((temps <= 0.0)[:, None], acc_greedy, acc_sample)
+    # number of leading accepts: cumprod turns the first reject into 0s
+    n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+
+    # replacement (reject at j < k: residual of p_j vs q_j) and bonus
+    # (full accept: plain sample from p_k) unify via q_k := 0
+    p_j = p[rows, n_acc]                                      # (B, V)
+    q_pad = jnp.concatenate(
+        [qprobs, jnp.zeros((b, 1, v), qprobs.dtype)], axis=1)
+    resid = jnp.maximum(p_j - q_pad[rows, n_acc], 0.0)
+    rsum = jnp.sum(resid, axis=-1, keepdims=True)
+    # p == q exactly leaves an empty residual; rejection then had
+    # probability 0, so the fallback to p_j is unreachable in
+    # distribution (it only guards the sampler against NaNs)
+    resid = jnp.where(rsum > 0.0, resid / rsum, p_j)
+    resid_logits = jnp.where(resid > 0.0, jnp.log(resid), -jnp.inf)
+    extra_sampled = jax.vmap(jax.random.categorical)(ks[:, 2],
+                                                     resid_logits)
+    extra = jnp.where(temps <= 0.0, greedy_tok[rows, n_acc],
+                      extra_sampled).astype(jnp.int32)
+    return n_acc.astype(jnp.int32), extra, new_keys

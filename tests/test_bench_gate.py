@@ -7,11 +7,13 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
                                 "scripts"))
-from compare_bench import GATED, gate  # noqa: E402
+from compare_bench import GATED, RENAMES, gate  # noqa: E402
 
 pytestmark = pytest.mark.serve
 
 BASE = {
+    "tpot_quamba_kernels_ms": 0.1,
+    # deprecated alias kept by the producer for one release
     "tpot_quamba_kernels_us": 100.0,
     "prefill_chunked_tokens_per_s": 5000.0,
     "engine_prefill": {"prefill_dispatches": 8},
@@ -19,6 +21,8 @@ BASE = {
               "prefix_cache": {"ttft_ms_hit": {"mean": 10.0},
                                "ttft_ms_miss": {"mean": 40.0},
                                "hit_rate": 0.8},
+              "spec_decode": {"tokens_per_s": 200.0,
+                              "acceptance_rate": 0.95},
               "loadgen": {"ttft_ms": {"p99": 500.0},
                           "goodput_requests": 11}},
 }
@@ -39,7 +43,7 @@ def test_unknown_and_extra_keys_ignored():
 
 
 def test_missing_metric_skips_not_raises():
-    prev = {"tpot_quamba_kernels_us": 100.0}   # pre-PR-4 artifact: no
+    prev = {"tpot_quamba_kernels_ms": 0.1}     # pre-PR-4 artifact: no
     cur = dict(BASE)                           # serve section at all
     assert gate(prev, cur, 0.25) == []
     assert gate({}, cur, 0.25) == []
@@ -47,17 +51,20 @@ def test_missing_metric_skips_not_raises():
 
 
 def test_non_numeric_values_skip():
-    prev = dict(BASE, tpot_quamba_kernels_us="fast")
+    prev = dict(BASE, tpot_quamba_kernels_ms="fast")
     cur = dict(BASE, serve={"ttft_ms": {"mean": None}})
     assert gate(prev, cur, 0.25) == []
     # a dict where a float is expected (schema drift) also skips
-    cur2 = dict(BASE, tpot_quamba_kernels_us={"mean": 100.0})
+    cur2 = dict(BASE, tpot_quamba_kernels_ms={"mean": 100.0})
     assert gate(BASE, cur2, 0.25) == []
+    # a non-numeric LEGACY value behind the rename fallback also skips
+    old = {"tpot_quamba_kernels_us": "fast"}
+    assert gate(old, BASE, 0.25) == []
 
 
 def test_regression_detected_and_improvement_passes():
     worse = {
-        "tpot_quamba_kernels_us": 140.0,             # +40% (lower better)
+        "tpot_quamba_kernels_ms": 0.14,              # +40% (lower better)
         "prefill_chunked_tokens_per_s": 3000.0,      # -40% (higher better)
         "engine_prefill": {"prefill_dispatches": 9},  # any increase fails
         "serve": {"ttft_ms": {"mean": 60.0},          # +50%
@@ -71,7 +78,7 @@ def test_regression_detected_and_improvement_passes():
     assert any("serve.prefix_cache.ttft_ms_hit.mean" in f
                for f in failures)
     better = {
-        "tpot_quamba_kernels_us": 50.0,
+        "tpot_quamba_kernels_ms": 0.05,
         "prefill_chunked_tokens_per_s": 9000.0,
         "engine_prefill": {"prefill_dispatches": 3},
         "serve": {"ttft_ms": {"mean": 10.0},
@@ -81,12 +88,54 @@ def test_regression_detected_and_improvement_passes():
 
 
 def test_small_wobble_within_tolerance_passes():
-    cur = dict(BASE, tpot_quamba_kernels_us=120.0,
+    cur = dict(BASE, tpot_quamba_kernels_ms=0.12,
                serve={"ttft_ms": {"mean": 48.0},     # 20% < 25%
                       # 2x on the ms-scale hit TTFT is runner wobble,
                       # not a cache regression: within its 100% band
                       "prefix_cache": {"ttft_ms_hit": {"mean": 19.9}}})
     assert gate(BASE, cur, 0.25) == []
+
+
+def test_tpot_rename_fallback_bridges_old_baselines():
+    """PR-7 renamed tpot_quamba_kernels_us -> _ms: a pre-rename
+    baseline (only *_us, microseconds) must still gate against a
+    post-rename artifact (only *_ms) -- compared in ms via RENAMES."""
+    assert RENAMES["tpot_quamba_kernels_ms"] == (
+        "tpot_quamba_kernels_us", 1e-3)
+    old = {"tpot_quamba_kernels_us": 100.0}          # 0.1 ms
+    new = {"tpot_quamba_kernels_ms": 0.1}
+    assert gate(old, new, 0.25) == []                # same speed: clean
+    assert gate(new, old, 0.25) == []                # rollback direction
+    slow = {"tpot_quamba_kernels_ms": 0.2}           # +100% across rename
+    failures = gate(old, slow, 0.25)
+    assert len(failures) == 1
+    assert "tpot_quamba_kernels_ms" in failures[0]
+    # the canonical key wins when both are present (alias is ignored)
+    both = {"tpot_quamba_kernels_ms": 0.1,
+            "tpot_quamba_kernels_us": 999999.0}
+    assert gate(both, new, 0.25) == []
+
+
+def test_spec_decode_throughput_gated():
+    """PR-7: serve.spec_decode.tokens_per_s is gated (higher is
+    better) with a 50% threshold -- higher-is-better regressions cap
+    at 100%, so the usual loose 100% band could never fire.  A >2x
+    throughput collapse (the fused verify path silently falling back
+    to per-token decode) fails the gate; 2x runner wobble passes."""
+    by_key = {k: (hb, ov) for k, hb, ov in GATED}
+    assert by_key["serve.spec_decode.tokens_per_s"] == (True, 0.5)
+    collapsed = dict(BASE, serve=dict(
+        BASE["serve"], spec_decode={"tokens_per_s": 40.0}))
+    failures = gate(BASE, collapsed, 0.25)
+    assert len(failures) == 1
+    assert "serve.spec_decode.tokens_per_s" in failures[0]
+    wobble = dict(BASE, serve=dict(
+        BASE["serve"], spec_decode={"tokens_per_s": 101.0}))
+    assert gate(BASE, wobble, 0.25) == []
+    # pre-PR-7 baseline without the section skips cleanly
+    pre = dict(BASE, serve={"ttft_ms": {"mean": 40.0}})
+    assert gate(pre, BASE, 0.25) == []
+    assert gate(BASE, pre, 0.25) == []
 
 
 def test_dispatch_count_zero_tolerance():

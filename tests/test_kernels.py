@@ -249,6 +249,66 @@ def test_scan_step_matches_sequence_kernel_l1():
                                rtol=1e-5, atol=1e-5)
 
 
+
+@pytest.mark.parametrize("b,d,n,k", [(1, 32, 8, 1), (2, 64, 8, 4),
+                                     (2, 96, 16, 8)])
+def test_scan_verify_matches_k_sequential_steps(b, d, n, k):
+    """The multi-token verify kernel == k sequential step-kernel calls,
+    and its per-step state snapshots are the rollback points (PR-7
+    acceptance bar: parity <= 1e-6)."""
+    from repro.kernels.scan_step import (selective_scan_step,
+                                         selective_scan_verify)
+    rng = np.random.default_rng(d + k)
+    arrs = {
+        "u": rng.normal(size=(b, k, d)).astype(np.float32) * 0.5,
+        "dt": np.abs(rng.normal(size=(b, k, d))).astype(np.float32) * 0.1,
+        "A": -np.abs(rng.normal(size=(d, n))).astype(np.float32),
+        "B": rng.normal(size=(b, k, n)).astype(np.float32),
+        "C": rng.normal(size=(b, k, n)).astype(np.float32),
+    }
+    qs, sc = {}, {}
+    for name, a in arrs.items():
+        s = float(Q.symmetric_scale(jnp.asarray(a)))
+        sc[name] = s
+        qs[name] = Q.quantize(jnp.asarray(a), s)
+    svec = jnp.asarray([sc[name] for name in ("u", "dt", "A", "B", "C")],
+                       jnp.float32)
+    dres = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(b, k, d)).astype(np.float32))
+    h0 = jnp.asarray(rng.normal(size=(b, d, n)).astype(np.float32))
+
+    y_v, h_steps = selective_scan_verify(qs["u"], qs["dt"], qs["A"],
+                                         qs["B"], qs["C"], svec, dres,
+                                         h0, z=z, block_d=64)
+    assert y_v.shape == (b, k, d) and h_steps.shape == (b, k, d, n)
+    h = h0
+    for i in range(k):
+        y_i, h = selective_scan_step(qs["u"][:, i], qs["dt"][:, i],
+                                     qs["A"], qs["B"][:, i], qs["C"][:, i],
+                                     svec, dres, h, z=z[:, i], block_d=64)
+        np.testing.assert_allclose(np.asarray(y_v[:, i]), np.asarray(y_i),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(h_steps[:, i]),
+                                   np.asarray(h), rtol=1e-6, atol=1e-6)
+
+
+def test_scan_verify_m1_equals_step():
+    """M=1 verify degenerates to the single-token step kernel exactly."""
+    from repro.kernels.scan_step import (selective_scan_step,
+                                         selective_scan_verify)
+    qs, scales, svec, dr, z = _scan_inputs(2, 1, 64, 8, seed=42)
+    h0 = jnp.asarray(np.random.default_rng(1).normal(
+        size=(2, 64, 8)).astype(np.float32))
+    y_v, h_v = selective_scan_verify(qs["u"], qs["dt"], qs["A"], qs["B"],
+                                     qs["C"], svec, dr, h0, z=z,
+                                     block_d=64)
+    y_s, h_s = selective_scan_step(qs["u"][:, 0], qs["dt"][:, 0], qs["A"],
+                                   qs["B"][:, 0], qs["C"][:, 0], svec, dr,
+                                   h0, z=z[:, 0], block_d=64)
+    np.testing.assert_array_equal(np.asarray(y_v[:, 0]), np.asarray(y_s))
+    np.testing.assert_array_equal(np.asarray(h_v[:, 0]), np.asarray(h_s))
+
+
 # ---------------------------------------------------------------------------
 # quantized SSD scan (Mamba-2 kernel, MXU-matmul formulation)
 # ---------------------------------------------------------------------------

@@ -263,3 +263,81 @@ def test_partial_hit_resumes_and_extends_prefix_chain(setup):
     eng.run()                              # ...and is itself a full hit
     assert eng.prefix_cache.stats()["hits"] >= 1
     assert st.cached_len == 12
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write snapshot sharing (PR-7): concurrent restores of one
+# cached prefix must share device buffers, never deep-copy them
+# ---------------------------------------------------------------------------
+
+def test_lookup_returns_the_cached_tree_by_reference():
+    """Repeated lookups hand out the SAME leaves -- the COW contract's
+    cache-side half (insert stores by reference, lookup never copies)."""
+    c = StateCache(byte_budget=1 << 20)
+    tree = _state(8)
+    c.insert([1, 2, 3], tree)
+    e1 = c.lookup([1, 2, 3, 9])
+    e2 = c.lookup([1, 2, 3, 7])
+    assert e1 is e2
+    assert e1.state["h"] is tree["h"]      # stored by reference
+    assert e2.state["h"] is e1.state["h"]  # shared across lookups
+
+
+def test_promotion_pays_one_device_put_across_concurrent_hits():
+    """A spilled prefix hit by N concurrent requests crosses the
+    host->device boundary ONCE; every later hit shares the promoted
+    tree by reference."""
+    moves = {"to_host": 0, "to_device": 0}
+
+    def to_host(t):
+        moves["to_host"] += 1
+        return t
+
+    def to_device(t):
+        moves["to_device"] += 1
+        return t
+
+    c = StateCache(byte_budget=2 * 32, spill_byte_budget=1 << 20,
+                   to_host=to_host, to_device=to_device)
+    c.insert([1, 1], _state(8))            # 32 B each: budget fits 2
+    c.insert([2, 2], _state(8))
+    c.insert([3, 3], _state(8))            # evicts+spills [1, 1]
+    assert moves["to_host"] == 1 and c.stats()["spills"] == 1
+
+    entries = [c.lookup([1, 1, i]) for i in range(4)]
+    assert all(e is not None for e in entries)
+    assert moves["to_device"] == 1          # one promotion, not four
+    assert c.stats()["promotions"] == 1
+    first = entries[0]
+    assert all(e is first for e in entries)
+    assert all(e.state["h"] is first.state["h"] for e in entries)
+
+
+def test_concurrent_restores_share_state_and_leave_entry_intact(setup):
+    """Engine-level COW: a batch of same-prefix requests restores the
+    one cached snapshot N times, decodes past it, and the cached entry
+    still replays bit-identically afterwards (restores read the shared
+    tree; advancing a slot builds new arrays)."""
+    cfg, params = setup
+    shared = [(3 * i + 1) % cfg.vocab_size for i in range(9)]
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=64,
+                    prefill_chunk=4, prefix_cache_mb=64)
+    cold = eng.add_request(shared + [5], SamplingParams(max_tokens=4))
+    eng.run()
+    entry = eng.prefix_cache.lookup(shared + [5])
+    assert entry is not None and entry.tokens == tuple(shared)
+    leaves_before = jax.tree.leaves(entry.state)
+
+    hot = [eng.add_request(shared + [5], SamplingParams(max_tokens=4),
+                           request_id=f"hot{i}") for i in range(3)]
+    eng.run()
+    # every hot request restored the SAME tree (no per-restore copy):
+    # the entry still holds the exact leaf objects from before...
+    leaves_after = jax.tree.leaves(
+        eng.prefix_cache.lookup(shared + [5]).state)
+    assert all(a is b for a, b in zip(leaves_before, leaves_after))
+    # ...and decoding from the shared snapshot never corrupted it:
+    # streams are bit-identical to the cold request's
+    assert all(list(h.token_ids) == list(cold.token_ids) for h in hot)
+    assert eng.counters["prefix_restores"] == 3      # one per hot seat
+    assert eng.prefix_cache.stats()["promotions"] == 0

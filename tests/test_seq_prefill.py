@@ -1,0 +1,119 @@
+"""Universal sequence prefill (PR-7): ``models.prefill_step`` covers
+every serving family -- mamba, dense (llama3), moe (qwen3-moe), and
+hybrid (zamba2) -- with chunked prefill that is bit-identical to
+per-token decoding and costs O(num_chunks) dispatches, not O(tokens).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytestmark = pytest.mark.serve
+
+from repro.configs import get_config, scale_down
+from repro.models import (decode_step, init_decode_state, init_params,
+                          prefill_step, supports_seq_prefill)
+from repro.models.model import SEQ_PREFILL_FAMILIES
+from repro.serve import LLMEngine, SamplingParams
+from repro.serve.core import EngineCore
+
+jax.config.update("jax_platform_name", "cpu")
+
+# one representative architecture per serving family the issue names
+ARCHS = ["mamba-130m", "llama3-8b", "qwen3-moe-30b-a3b", "zamba2-1.2b"]
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def fam_setup(request):
+    cfg = scale_down(get_config(request.param))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_families_cover_the_serving_archs():
+    fams = {scale_down(get_config(a)).family for a in ARCHS}
+    assert fams == {"mamba", "dense", "moe", "hybrid"}
+    assert all(f in SEQ_PREFILL_FAMILIES for f in fams)
+    assert all(supports_seq_prefill(scale_down(get_config(a)))
+               for a in ARCHS)
+
+
+def test_chunked_prefill_bitwise_matches_per_token(fam_setup):
+    """State after prefilling L tokens is bit-identical however the
+    tokens were chunked -- including one-token chunks, i.e. the decode
+    path itself."""
+    cfg, params = fam_setup
+    L = 13
+    toks = np.random.default_rng(cfg.n_layers + L).integers(
+        0, cfg.vocab_size, (1, L))
+    probe = jnp.asarray([toks[0, -1]], jnp.int32)
+
+    def run(chunks):
+        state = init_decode_state(cfg, 1, 48)
+        c0 = 0
+        for c in chunks:
+            _, state = prefill_step(
+                params, cfg, state, jnp.asarray(toks[:, c0:c0 + c],
+                                                jnp.int32))
+            c0 += c
+        assert c0 == L
+        # the probe decode exercises the state end to end (logits see
+        # every leaf, incl. caches/conv taps the tree compare may
+        # reorder)
+        lg, state = decode_step(params, cfg, state, probe)
+        return lg, state
+
+    # the hybrid family's Mamba-2 (SSD) blocks batch their intra-chunk
+    # matmuls, which reassociates fp adds vs the per-token recurrence:
+    # ~1 ULP on raw tensors (greedy token STREAMS are still bit-equal
+    # across chunkings -- asserted at engine level below); the other
+    # families replay the exact per-token op sequence, so they must be
+    # bitwise
+    exact = cfg.family != "hybrid"
+
+    def check(a, b):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=1e-6)
+
+    lg_tok, st_tok = run([1] * L)
+    for chunks in ([L], [5, 5, 3], [4, 1, 8]):
+        lg, st = run(chunks)
+        check(lg, lg_tok)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st_tok)):
+            check(a, b)
+
+
+def test_engine_prefill_dispatches_scale_with_chunks(fam_setup):
+    """prefill_dispatches == len(chunk_plan), for every family: the
+    engine prefills 16 prompt tokens in 4 chunks of 4, not 16 steps."""
+    cfg, params = fam_setup
+    prompt = [int(t) for t in np.arange(17) % cfg.vocab_size]
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=48,
+                    prefill_chunk=4)
+    eng.add_request(prompt, SamplingParams(max_tokens=2))
+    eng.run()
+    assert eng.counters["prefill_dispatches"] == \
+        len(EngineCore._chunk_plan(16, 4)) == 4
+
+
+def test_engine_streams_invariant_to_prefill_chunking(fam_setup):
+    """Greedy streams are bit-identical across prefill chunk sizes
+    (1-token chunks == the per-token path)."""
+    cfg, params = fam_setup
+    prompts = [[(3 * i + j) % cfg.vocab_size for j in range(7 + i)]
+               for i in range(3)]
+
+    def run(chunk):
+        eng = LLMEngine(params, cfg, max_batch=2, max_len=48,
+                        prefill_chunk=chunk)
+        sts = [eng.add_request(list(p), SamplingParams(max_tokens=6))
+               for p in prompts]
+        eng.run()
+        return [list(s.token_ids) for s in sts]
+
+    per_token = run(1)
+    for chunk in (4, 8, 64):
+        assert run(chunk) == per_token

@@ -1,0 +1,341 @@
+"""Speculative draft-and-verify decoding (``repro.serve.spec`` +
+``EngineCore.decode_spec`` + ``LLMEngine._spec_step``): greedy streams
+bit-identical to vanilla for any draft, Leviathan rejection sampling
+distribution-identical to target sampling, O(1) rollback parity,
+mid-verify cancellation, prefix-cache interaction, and the
+``SpecConfig`` validation surface."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytestmark = pytest.mark.serve
+
+from repro.configs import get_config, scale_down
+from repro.configs.base import ModelConfig
+from repro.models import (decode_step, init_decode_state, init_params,
+                          select_verify_state, supports_verify,
+                          verify_step)
+from repro.serve import LLMEngine, SamplingParams, SpecConfig
+from repro.serve.spec import resolve_draft, spec_acceptance
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scale_down(get_config("mamba-130m"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def draft_setup(setup):
+    """A genuinely different (smaller, randomly initialised) draft."""
+    cfg, _ = setup
+    dc = scale_down(get_config("mamba-130m"), layers=1, width=32,
+                    vocab=cfg.vocab_size)
+    dparams = init_params(jax.random.PRNGKey(7), dc)
+    return dc, dparams
+
+
+def _streams(cfg, params, spec, prompts, sps, **kw):
+    eng = LLMEngine(params, cfg, max_batch=4, max_len=96,
+                    prefill_chunk=8, speculative=spec, **kw)
+    sts = [eng.add_request(list(p), sp, request_id=f"r{i}")
+           for i, (p, sp) in enumerate(zip(prompts, sps))]
+    eng.run()
+    return [list(s.token_ids) for s in sts], eng
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_spec_config_validation(setup, draft_setup):
+    cfg, params = setup
+    dc, dparams = draft_setup
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        SpecConfig(k=0)
+    # self-draft with explicit weights is a contradiction
+    with pytest.raises(ValueError, match="draft_params must be None"):
+        resolve_draft(SpecConfig(draft="self", draft_params={}),
+                      cfg, params, None)
+    # a *named* draft that resolves to the target degenerates to self
+    dcfg, dp, _, is_self = resolve_draft(
+        SpecConfig(draft=cfg.name), cfg, params, None)
+    assert is_self and dcfg is cfg and dp is params
+    # a different model needs weights (the engine never loads ckpts)
+    with pytest.raises(ValueError, match="draft_params"):
+        resolve_draft(SpecConfig(draft="mamba-370m"), cfg, params, None)
+    with pytest.raises(ValueError, match="draft_params"):
+        resolve_draft(SpecConfig(draft=dc), cfg, params, None)
+    # vocab mismatch can never verify token-by-token
+    bad = scale_down(get_config("mamba-130m"), layers=1, width=32,
+                     vocab=cfg.vocab_size * 2)
+    with pytest.raises(ValueError, match="vocab"):
+        resolve_draft(SpecConfig(draft=bad, draft_params=dparams),
+                      cfg, params, None)
+
+
+def test_unsupported_family_raises():
+    cfg = scale_down(get_config("llama3-8b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    assert not supports_verify(cfg)
+    with pytest.raises(ValueError, match="speculative"):
+        LLMEngine(params, cfg, max_batch=2, max_len=64,
+                  speculative=SpecConfig(k=2))
+
+
+# ---------------------------------------------------------------------------
+# greedy bit-identity: spec streams == vanilla streams, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_greedy_bit_identity_self_draft(setup, k):
+    cfg, params = setup
+    prompts = [[(3 * i + j) % cfg.vocab_size for j in range(5 + i)]
+               for i in range(3)]
+    sps = [SamplingParams(max_tokens=12)] * 3
+    van, _ = _streams(cfg, params, None, prompts, sps)
+    spec, eng = _streams(cfg, params, SpecConfig(draft="self", k=k),
+                         prompts, sps)
+    assert spec == van
+    sd = eng.metrics_json()["spec_decode"]
+    assert sd["acceptance_rate"] == pytest.approx(1.0)
+    assert sd["k"] == k and sd["draft"] == "self"
+    # self-draft accepts everything: 12 tokens in ceil(12 / (k+1)) rounds
+    assert eng.counters["spec_rounds"] <= -(-12 // (k + 1)) + 1
+
+
+def test_greedy_bit_identity_distinct_draft(setup, draft_setup):
+    """Greedy verification guarantees the emitted stream for ANY draft
+    -- even an untrained one that disagrees most of the time."""
+    cfg, params = setup
+    dc, dparams = draft_setup
+    prompts = [[(5 * i + j) % cfg.vocab_size for j in range(6)]
+               for i in range(2)]
+    sps = [SamplingParams(max_tokens=10)] * 2
+    van, _ = _streams(cfg, params, None, prompts, sps)
+    spec, eng = _streams(
+        cfg, params, SpecConfig(draft=dc, draft_params=dparams, k=4),
+        prompts, sps)
+    assert spec == van
+    sd = eng.metrics_json()["spec_decode"]
+    assert 0.0 <= sd["acceptance_rate"] <= 1.0
+    assert sd["rolled_back_tokens"] == \
+        sd["drafted_tokens"] - sd["accepted_tokens"]
+    # the distinct draft prefilled through its own path
+    assert eng.counters["draft_prefill_dispatches"] > 0
+
+
+def test_mixed_greedy_and_sampled_batch(setup):
+    """Greedy and sampled rows coexist in one verify round; the greedy
+    rows still match vanilla bit for bit."""
+    cfg, params = setup
+    prompts = [[1 + i, 2, 3, 4] for i in range(4)]
+    sps = [SamplingParams(max_tokens=8),
+           SamplingParams(max_tokens=8, temperature=0.9, top_k=16,
+                          seed=3),
+           SamplingParams(max_tokens=8),
+           SamplingParams(max_tokens=8, temperature=1.2, top_p=0.9,
+                          seed=11)]
+    van, _ = _streams(cfg, params, None, prompts, sps)
+    spec, eng = _streams(cfg, params, SpecConfig(draft="self", k=3),
+                         prompts, sps)
+    assert spec[0] == van[0] and spec[2] == van[2]   # greedy rows
+    assert all(len(s) == 8 for s in spec)            # sampled: right len
+    sd = eng.metrics_json()["spec_decode"]
+    assert 0.0 < sd["acceptance_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# distribution identity: the emitted marginal IS the target distribution
+# ---------------------------------------------------------------------------
+
+def test_rejection_sampling_marginal_matches_target():
+    """Leviathan acceptance: for draft d ~ q accepted iff
+    u*q(d) < p(d), else resampled from norm(max(p-q, 0)), the marginal
+    of the emitted token is exactly p.  Checked empirically against the
+    true p with many trials batched down the B axis (k=1)."""
+    v = 8
+    rng = np.random.default_rng(0)
+    p = rng.dirichlet(np.ones(v)).astype(np.float32)
+    q = rng.dirichlet(np.ones(v)).astype(np.float32)
+    n = 20_000
+    logits = jnp.asarray(np.log(p))[None, None, :].repeat(n, 0)
+    logits = jnp.concatenate([logits, logits], axis=1)  # (n, 2, v): k=1
+    drafts = jnp.asarray(rng.choice(v, size=(n, 1), p=q))
+    qprobs = jnp.asarray(q)[None, None, :].repeat(n, 0)
+    keys = jax.random.split(jax.random.PRNGKey(42), n)
+    temps = jnp.ones((n,), jnp.float32)
+    n_acc, extra, _ = spec_acceptance(
+        logits, drafts.astype(jnp.int32), qprobs, keys, temps,
+        jnp.zeros((n,), jnp.int32), jnp.ones((n,), jnp.float32),
+        truncate=False)
+    emitted = np.where(np.asarray(n_acc) == 1,
+                       np.asarray(drafts)[:, 0], np.asarray(extra))
+    emp = np.bincount(emitted, minlength=v) / n
+    # total-variation distance ~ O(1/sqrt(n)) for a faithful sampler
+    assert 0.5 * np.abs(emp - p).sum() < 0.02
+    # sanity: acceptance rate == sum(min(p, q)) in expectation
+    acc = float(np.mean(np.asarray(n_acc)))
+    assert acc == pytest.approx(np.minimum(p, q).sum(), abs=0.02)
+
+
+def test_identical_p_q_always_accepts_and_bonus_flows():
+    """p == q accepts every draft (u in [0,1) and u*q < p never fails)
+    and the full-accept bonus samples from the last distribution."""
+    v, n, k = 6, 4_000, 3
+    rng = np.random.default_rng(1)
+    p = rng.dirichlet(np.ones(v)).astype(np.float32)
+    logits = jnp.asarray(np.log(p))[None, None, :].repeat(n, 0) \
+        .repeat(k + 1, 1)
+    drafts = jnp.asarray(rng.choice(v, size=(n, k), p=p), jnp.int32)
+    qprobs = jnp.asarray(p)[None, None, :].repeat(n, 0).repeat(k, 1)
+    keys = jax.random.split(jax.random.PRNGKey(5), n)
+    n_acc, extra, _ = spec_acceptance(
+        logits, drafts, qprobs, keys, jnp.ones((n,), jnp.float32),
+        jnp.zeros((n,), jnp.int32), jnp.ones((n,), jnp.float32),
+        truncate=False)
+    assert np.all(np.asarray(n_acc) == k)
+    emp = np.bincount(np.asarray(extra), minlength=v) / n
+    assert 0.5 * np.abs(emp - p).sum() < 0.03
+
+
+def test_seeded_sampled_spec_streams_are_reproducible(setup):
+    """Same seeds => identical spec streams run to run (the draft and
+    target PRNG lanes are deterministic); different draft k changes
+    rounds, not determinism."""
+    cfg, params = setup
+    prompts = [[2, 4, 6, 8]] * 2
+    sps = [SamplingParams(max_tokens=10, temperature=0.8, seed=s)
+           for s in (0, 1)]
+    a, _ = _streams(cfg, params, SpecConfig(draft="self", k=4),
+                    prompts, sps)
+    b, _ = _streams(cfg, params, SpecConfig(draft="self", k=4),
+                    prompts, sps)
+    assert a == b
+    assert a[0] != a[1]          # different seeds actually differ
+
+
+# ---------------------------------------------------------------------------
+# rollback: select_verify_state(j) == j+1 sequential decode steps
+# ---------------------------------------------------------------------------
+
+def test_rollback_snapshots_match_sequential_decode(setup):
+    cfg, params = setup
+    b, m = 2, 5
+    fed = jnp.asarray(
+        np.random.default_rng(3).integers(0, cfg.vocab_size, (b, m)),
+        jnp.int32)
+    state0 = init_decode_state(cfg, b, 64)
+    logits_v, steps = verify_step(params, cfg, state0, fed)
+    state = state0
+    for j in range(m):
+        lg, state = decode_step(params, cfg, state, fed[:, j])
+        np.testing.assert_array_equal(np.asarray(logits_v[:, j]),
+                                      np.asarray(lg))
+        snap = select_verify_state(cfg, steps,
+                                   jnp.full((b,), j, jnp.int32))
+        for a, bb in zip(jax.tree.leaves(snap), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+# ---------------------------------------------------------------------------
+# engine semantics: cancellation, prefix cache, metrics
+# ---------------------------------------------------------------------------
+
+def test_mid_verify_cancellation_drops_block_remainder(setup):
+    """A cancel fired from an on_token callback in the middle of a
+    committed block stops emission at that token; the engine stays
+    consistent and later requests are unaffected."""
+    cfg, params = setup
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=96,
+                    prefill_chunk=8,
+                    speculative=SpecConfig(draft="self", k=4))
+    got = []
+
+    def on_token(tok):
+        got.append(tok)
+        if len(got) == 2:                    # mid-block (k+1 == 5)
+            eng.cancel("victim")
+
+    st = eng.add_request([1, 2, 3], SamplingParams(max_tokens=50),
+                         request_id="victim", on_token=on_token)
+    eng.run()
+    assert st.finished and st.finish_reason.value == "cancelled"
+    assert list(st.token_ids) == got and len(got) == 2
+    # the slot is free and a fresh request decodes normally
+    st2 = eng.add_request([1, 2, 3], SamplingParams(max_tokens=6),
+                          request_id="after")
+    eng.run()
+    assert len(st2.token_ids) == 6
+    mj = eng.metrics_json()
+    assert mj["engine"]["requests_cancelled"] == 1
+    assert mj["requests"]["victim"]["generated"] == 2
+
+
+def test_stop_token_truncates_block(setup):
+    """A stop token inside a multi-token block finishes the request at
+    the stop token; tokens after it in the block are dropped."""
+    cfg, params = setup
+    van, _ = _streams(cfg, params, None, [[3, 1, 4]],
+                      [SamplingParams(max_tokens=40)])
+    stop = van[0][2]                         # appears inside any block
+    sps = [SamplingParams(max_tokens=40, stop_token_ids=(stop,))]
+    van_stop, _ = _streams(cfg, params, None, [[3, 1, 4]], sps)
+    spec, _ = _streams(cfg, params, SpecConfig(draft="self", k=7),
+                       [[3, 1, 4]], sps)
+    assert spec[0] == van_stop[0]            # truncated identically
+    assert spec[0][-1] == stop
+    assert len(spec[0]) < len(van[0])        # the block really truncated
+
+
+def test_spec_with_prefix_cache_streams_identical(setup):
+    """Speculative decode composes with the prefix cache: restored
+    prefixes feed the verify path (and the self-draft's shared slot)
+    with bit-identical results."""
+    cfg, params = setup
+    shared = [(2 * j + 1) % cfg.vocab_size for j in range(9)]
+    prompts = [shared + [5], shared + [5], shared + [9]]
+    sps = [SamplingParams(max_tokens=8)] * 3
+    spec = SpecConfig(draft="self", k=4)
+    off, _ = _streams(cfg, params, spec, prompts, sps)
+    on, eng = _streams(cfg, params, spec, prompts, sps,
+                       prefix_cache_mb=64)
+    assert on == off
+    s = eng.prefix_cache.stats()
+    assert s["hits"] + s["partial_hits"] >= 1
+    # and both match vanilla (greedy), cache or not
+    van, _ = _streams(cfg, params, None, prompts, sps)
+    assert on == van
+
+
+def test_spec_metrics_json_section(setup):
+    cfg, params = setup
+    prompts = [[1, 2, 3], [4, 5, 6, 7]]
+    sps = [SamplingParams(max_tokens=9),
+           SamplingParams(max_tokens=9, temperature=0.7, seed=2)]
+    _, eng = _streams(cfg, params, SpecConfig(draft="self", k=4),
+                      prompts, sps)
+    sd = eng.metrics_json()["spec_decode"]
+    assert sd["k"] == 4 and sd["draft"] == "self"
+    assert sd["rounds"] == eng.counters["spec_rounds"] > 0
+    assert sd["drafted_tokens"] == sd["accepted_tokens"] \
+        + sd["rolled_back_tokens"]
+    assert 0.0 < sd["acceptance_rate"] <= 1.0
+    spd = sd["per_request_speedup"]
+    assert spd["n"] == 2 and spd["mean"] > 1.0   # self-draft: > 1 tok/round
+    rm = eng.metrics_json()["requests"]["r0"]
+    assert rm["spec_rounds"] > 0
+    assert rm["spec_speedup"] == pytest.approx(
+        rm["generated"] / rm["spec_rounds"])
+
+
+def test_vanilla_engine_has_no_spec_section(setup):
+    cfg, params = setup
+    _, eng = _streams(cfg, params, None, [[1, 2]],
+                      [SamplingParams(max_tokens=2)])
+    assert "spec_decode" not in eng.metrics_json()
+    assert "spec_rounds" not in eng.counters
