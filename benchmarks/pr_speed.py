@@ -1,4 +1,6 @@
-"""PR perf trajectory: decode TPOT (fp vs quamba-qdq vs quamba+kernels),
+"""PR perf trajectory: decode TPOT (fp vs quamba-qdq vs quamba+kernels
+vs quamba-w4a8 on the int4-matmul kernels backend, with the nibble-packed
+matmul weight bytes next to the int8 figure),
 chunked-prefill throughput/dispatch counts, bytes moved, the
 request-lifecycle serving metrics (per-request TTFT/TPOT/queue-time,
 queue-depth and occupancy series through the scheduler), and the
@@ -22,6 +24,7 @@ hardware-independent.
 """
 from __future__ import annotations
 
+import dataclasses
 import datetime
 import json
 import os
@@ -35,6 +38,7 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.kernels._backend import default_interpret
+from repro.quant.recipe import get_spec
 from repro.models import (decode_step, init_decode_state, param_count,
                           prefill_step)
 from repro.serve import LLMEngine, SamplingParams, SpecConfig
@@ -215,6 +219,48 @@ def _spec_decode_workload(cfg, qm, smoke: bool) -> dict:
         "accepted_tokens": sd["accepted_tokens"],
         "rolled_back_tokens": sd["rolled_back_tokens"],
         "per_request_speedup": sd["per_request_speedup"],
+    }
+
+
+def _matmul_weight_bytes(q4_tree, q8_tree):
+    """(int4 bytes, int8 bytes) over the matmul weight sites.
+
+    Walks the nibble-packed W4A8 qdata next to the W8A8 qdata of the
+    SAME model: every ``{"qw4"}`` leaf stores two weights per byte while
+    its int8 counterpart stores one, so the ratio is a measured storage
+    fact, not an assumed 0.5 (odd contraction dims pad a nibble row).
+    Non-matmul sites (conv taps, the A matrix) are excluded on both
+    sides -- they stay int8 under W4A8 by design.
+    """
+    b4 = b8 = 0
+    if isinstance(q4_tree, dict):
+        if "qw4" in q4_tree:
+            b4 += int(q4_tree["qw4"].size)          # int8 leaf: 1 B/elem
+            b8 += int(q8_tree["qw"].size)
+        elif "s_w" not in q4_tree:                  # group node: recurse
+            for k, v in q4_tree.items():
+                s4, s8 = _matmul_weight_bytes(v, q8_tree[k])
+                b4, b8 = b4 + s4, b8 + s8
+    return b4, b8
+
+
+def _w4a8_section(cfg, params, stats, qm_int8, iters: int) -> dict:
+    """W4A8 on the real kernels backend (PR 8): ``quamba-w4a8`` routes
+    every matmul site through the nibble-packed ``int4_matmul`` Pallas
+    kernel -- no qdq fallback -- so the TPOT here is an executed-kernel
+    number and the weight-bytes figure reflects the packed storage."""
+    spec = dataclasses.replace(get_spec("quamba-w4a8"), backend="kernels")
+    qm4 = common.quantized_model(cfg, params, stats, spec)
+    desc = qm4.describe()
+    b4, b8 = _matmul_weight_bytes(qm4.qdata["qw"], qm_int8.qdata["qw"])
+    return {
+        "preset": "quamba-w4a8",
+        "effective_backend": desc["effective_backend"],
+        "backend_fallback_reason": desc["backend_fallback_reason"],
+        "tpot_kernels_ms": _tpot(cfg, qm4.params, qm4.qctx(), iters) / 1e3,
+        "matmul_weight_bytes_int4": b4,
+        "matmul_weight_bytes_int8": b8,
+        "matmul_weight_bytes_ratio": b4 / b8,
     }
 
 
@@ -415,6 +461,16 @@ def run() -> dict:
     common.emit("pr_speed/tpot_quamba_kernels",
                 out["tpot_quamba_kernels_us"],
                 "decode_step(int8 Pallas kernels; interpret mode off-TPU)")
+
+    out["w4a8"] = _w4a8_section(cfg, params, stats, qm, iters)
+    w4 = out["w4a8"]
+    common.emit(
+        "pr_speed/tpot_w4a8_kernels", w4["tpot_kernels_ms"] * 1e3,
+        f"decode_step(int4 matmul kernels, backend="
+        f"{w4['effective_backend']}); matmul weights "
+        f"{w4['matmul_weight_bytes_int4']} B vs int8 "
+        f"{w4['matmul_weight_bytes_int8']} B "
+        f"({w4['matmul_weight_bytes_ratio']:.3f}x)")
 
     ch_tps, tok_tps = _prefill_rate(cfg, qm.params, qm.qctx(), p_iters)
     out["prefill_chunked_tokens_per_s"] = ch_tps

@@ -32,6 +32,13 @@ scheduler's request-latency behavior):
     threshold: the failure mode it guards against -- the cache
     silently stops hitting and requests re-prefill -- is a ~100x
     regression, far above any timer wobble.
+  * ``w4a8.tpot_kernels_ms`` -- lower is better (decode TPOT of the
+    ``quamba-w4a8`` preset executing the nibble-packed ``int4_matmul``
+    kernel, i.e. the real kernels backend, not the qdq oracle).
+  * ``w4a8.matmul_weight_bytes_ratio`` -- lower is better and
+    deterministic (packed int4 bytes / int8 bytes over the matmul
+    weight sites, ~0.5 by construction), so it gets the zero-tolerance
+    threshold: any growth means nibble packing silently stopped.
   * ``serve.ttft_ms.p95`` and ``serve.loadgen.ttft_ms.p99`` -- lower is
     better (TAIL latency: the mean hides convoy effects and bursty
     queueing that the p95/p99 expose; the loadgen p99 comes from the
@@ -69,6 +76,12 @@ GATED = (
     # worse than half the baseline throughput fails
     ("serve.spec_decode.tokens_per_s", True, 0.5),
     ("serve.loadgen.ttft_ms.p99", False, 1.0),
+    # W4A8 on the int4-matmul kernels backend (PR 8).  The byte ratio
+    # is a deterministic storage fact (nibble packing halves matmul
+    # weight bytes), so like the dispatch count it gets zero tolerance:
+    # any growth means packing silently stopped happening.
+    ("w4a8.tpot_kernels_ms", False, None),
+    ("w4a8.matmul_weight_bytes_ratio", False, 0.0),
 )
 
 # renamed metrics: canonical key -> (legacy key, scale legacy by).

@@ -23,7 +23,11 @@ from repro.configs.base import ModelConfig
 from repro.models import forward, loss_fn
 from repro.quant.recipe import QuantSpec
 
-_FORMAT_VERSION = 1
+# 1 -- original layout (all weights one value per byte)
+# 2 -- 4-bit matmul weights stored nibble-packed ({"qw4", "s_w"} leaves)
+#      + effective-backend metadata; v1 artifacts still load (their
+#      unpacked w4 sites simply keep the qdq oracle, with a warning)
+_FORMAT_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -94,6 +98,31 @@ class QuantizedModel:
                         temperature=temperature, qctx=self.qctx(),
                         max_len=max_len)
 
+    def describe(self) -> Dict[str, Any]:
+        """Structured summary: method/bits/family plus the *effective*
+        execution backend -- "kernels" only when the spec AND the qdata
+        can actually feed the Pallas kernels; otherwise "qdq" with the
+        fallback reason spelled out (the same reason the one-shot
+        ``BackendFallbackWarning`` carries)."""
+        if self.spec is None:
+            return {"method": "fp", "w_bits": None, "a_bits": None,
+                    "family": self.cfg.family, "model": self.cfg.name,
+                    "requested_backend": None, "effective_backend": "fp",
+                    "backend_fallback_reason": None,
+                    "format_version": _FORMAT_VERSION}
+        from repro.models.quantize import backend_fallback_reason
+        requested = self.spec.backend
+        reason = (backend_fallback_reason(self.spec, self.qdata)
+                  if requested == "kernels" else None)
+        effective = ("kernels" if requested == "kernels" and reason is None
+                     else "qdq")
+        return {"method": self.spec.method, "w_bits": self.spec.w_bits,
+                "a_bits": self.spec.a_bits, "family": self.cfg.family,
+                "model": self.cfg.name, "requested_backend": requested,
+                "effective_backend": effective,
+                "backend_fallback_reason": reason,
+                "format_version": _FORMAT_VERSION}
+
     # -- persistence ------------------------------------------------------
     def save(self, path: str) -> str:
         """Atomic: arrays + metadata are staged together and committed
@@ -110,11 +139,16 @@ class QuantizedModel:
         if self.qdata is not None:
             trees["qdata"] = self.qdata
         ckpt.save_tree(os.path.join(stage, "arrays"), trees)
+        desc = self.describe()
         meta = {
             "format_version": _FORMAT_VERSION,
             "spec": (dataclasses.asdict(self.spec)
                      if self.spec is not None else None),
             "cfg": dataclasses.asdict(self.cfg),
+            # effective backend at save time, so a served artifact's
+            # execution path is auditable without loading the arrays
+            "effective_backend": desc["effective_backend"],
+            "backend_fallback_reason": desc["backend_fallback_reason"],
         }
         with open(os.path.join(stage, "quantized_model.json"), "w") as f:
             json.dump(meta, f, indent=1)

@@ -1,0 +1,124 @@
+"""W4A8 tiled matmul Pallas kernel (Table 8 low-bit configuration).
+
+Same dataflow as ``int8_matmul`` -- int8 activations, int32 VMEM
+accumulation, fused dequant/bias/SiLU/requant epilogue on the last K step
+-- but the weight arrives nibble-packed: two int4 values (two's
+complement, range [-8, 7]) per int8 byte along the contraction axis, the
+layout written by ``repro.quant.recipe.pack_int4``.  The kernel unpacks
+each (bk/2, bn) byte tile to a (bk, bn) int8 tile in VMEM right before
+the MXU dot, so HBM traffic for weights is halved while the arithmetic
+stays the int8 path whose numerics the qdq oracle certifies.
+
+Sign extension happens in int32 (``(p << 28) >> 28`` for the low nibble,
+``(p << 24) >> 28`` for the high) -- arithmetic right-shift on a widened
+value is well-defined on every backend, unlike int8 bit-twiddling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._backend import resolve_interpret
+
+
+def _unpack_tile(packed: jax.Array) -> jax.Array:
+    """(bk/2, bn) packed bytes -> (bk, bn) int8 in [-8, 7].
+
+    Row 2i comes from byte i's low nibble, row 2i+1 from its high nibble
+    (the ``pack_int4`` layout), so the stack/reshape interleaves them back
+    into contraction order.
+    """
+    p32 = packed.astype(jnp.int32)
+    lo = (p32 << 28) >> 28
+    hi = (p32 << 24) >> 28
+    bkp, bn = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * bkp, bn).astype(jnp.int8)
+
+
+def _mm_kernel(qx_ref, qw4_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+               apply_silu: bool, out_is_int8: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        qx_ref[...], _unpack_tile(qw4_ref[...]), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _epilogue():
+        s_in = scale_ref[0, 0]       # s_x * s_w
+        s_out = scale_ref[0, 1]      # output quant scale (if int8 out)
+        y = acc_ref[...].astype(jnp.float32) * s_in
+        y = y + bias_ref[...].astype(jnp.float32)
+        if apply_silu:
+            y = y * jax.nn.sigmoid(y)
+        if out_is_int8:
+            o_ref[...] = jnp.clip(jnp.round(y / s_out), -128, 127
+                                  ).astype(jnp.int8)
+        else:
+            o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("apply_silu", "out_dtype", "bm", "bn", "bk",
+                     "interpret"))
+def int4_matmul(qx: jax.Array, qw4: jax.Array, s_x: jax.Array,
+                s_w: jax.Array, bias: Optional[jax.Array] = None,
+                s_out: Optional[jax.Array] = None, *,
+                apply_silu: bool = False, out_dtype=jnp.float32,
+                bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """qx (M,K) int8 @ packed qw4 (ceil(K/2),N) -> (M,N) out (int8 if s_out).
+
+    K is recovered from the activation, never stored with the weight (a
+    stored constant would not survive ``vmap`` over stacked layers); for
+    odd K the pack-time zero nibble multiplies qx's zero pad column, so
+    padding stays exact.  interpret=None auto-detects: native on TPU,
+    interpret elsewhere.
+    """
+    interpret = resolve_interpret(interpret)
+    if bk % 2:
+        raise ValueError(f"bk must be even to split packed tiles, got {bk}")
+    m, k = qx.shape
+    k2p, n = qw4.shape
+    if k2p != -(-k // 2):
+        raise ValueError(f"packed rows {k2p} != ceil({k}/2): wrong layout?")
+    out_is_int8 = s_out is not None
+
+    mp, np_, kp = (-(-m // bm) * bm), (-(-n // bn) * bn), (-(-k // bk) * bk)
+    qx = jnp.pad(qx, ((0, mp - m), (0, kp - k)))
+    qw4 = jnp.pad(qw4, ((0, kp // 2 - k2p), (0, np_ - n)))
+    bias_f = jnp.zeros((np_,), jnp.float32) if bias is None else jnp.pad(
+        bias.astype(jnp.float32), (0, np_ - n))
+    scale = jnp.stack([
+        jnp.asarray(s_x, jnp.float32) * jnp.asarray(s_w, jnp.float32),
+        jnp.asarray(s_out if out_is_int8 else 1.0, jnp.float32),
+    ]).reshape(1, 2)
+
+    kern = functools.partial(_mm_kernel, apply_silu=apply_silu,
+                             out_is_int8=out_is_int8)
+    out = pl.pallas_call(
+        kern,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (mp, np_), jnp.int8 if out_is_int8 else out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(qx, qw4, scale, bias_f)
+    return out[:m, :n]

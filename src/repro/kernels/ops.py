@@ -20,6 +20,7 @@ from repro.kernels import ref
 from repro.kernels._backend import default_interpret
 from repro.kernels.causal_conv1d import causal_conv1d
 from repro.kernels.hadamard_quant import hadamard_quant
+from repro.kernels.int4_matmul import int4_matmul
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.rmsnorm_quant import rmsnorm_quant
 from repro.kernels.scan_step import (selective_scan_step,
@@ -34,7 +35,8 @@ def _interpret() -> bool:
 
 
 __all__ = [
-    "int8_matmul", "rmsnorm_quant", "hadamard_quant", "causal_conv1d",
+    "int8_matmul", "int4_matmul", "rmsnorm_quant", "hadamard_quant",
+    "causal_conv1d",
     "selective_scan", "selective_scan_step", "selective_scan_verify",
     "ssd_scan", "ref",
 ]

@@ -44,9 +44,11 @@ def linear(p: dict, name: str, x: jax.Array, qctx=None,
             and site in qctx.get("qw", {}):
         from repro.quant import qlinear  # local import to avoid cycle
         s_x = qctx["scales"].get(site)
+        qlin = qctx["qw"][site]
+        int_stored = ("qw4" in qlin            # nibble-packed int4 (PR 8)
+                      or qlin["qw"].dtype == jnp.int8)
         if qctx.get("int8_compute") and s_x is not None \
-                and qctx["qw"][site]["qw"].dtype == jnp.int8 \
-                and qctx["qw"][site]["s_w"].ndim == 0:
+                and int_stored and qlin["s_w"].ndim == 0:
             # true integer path: int8 x int8 -> int32 on the MXU; weights
             # are read at 1 byte/elem with no dequantized copy (§Perf C3)
             return qlinear.apply_int8(x, s_x, qctx["qw"][site],

@@ -36,17 +36,34 @@ from repro.kernels import ref as kref
 
 
 def use_kernel_backend(qctx) -> bool:
-    """True when this qctx routes the block through the int8 Pallas
-    kernels (``QuantSpec.backend == "kernels"``) instead of the qdq
-    fake-quant oracle.  Requires int8 conv taps in the qdata (absent in
-    artifacts quantized before the kernel backend existed -> fall back)."""
+    """True when this qctx routes the block through the Pallas kernels
+    (``QuantSpec.backend == "kernels"``) instead of the qdq fake-quant
+    oracle.  Requires int8 conv taps in the qdata (absent in artifacts
+    quantized before the kernel backend existed -> fall back); 4-bit
+    specs additionally require nibble-packed matmul sites (absent in
+    pre-v2 artifacts, which stored w4 unpacked and ran qdq-only)."""
     if not is_quant(qctx):
         return False
     if not qrecipe.uses_kernel_backend(qctx["spec"]):
         return False
     # the fused conv kernel needs the int8 taps ("conv_w" in the block's
     # qw dict) -- absent in pre-backend artifacts, which keep the oracle
-    return "conv_w" in qctx.get("qw", {})
+    qw = qctx.get("qw", {})
+    if "conv_w" not in qw:
+        return False
+    if qctx["spec"].w_bits == 4 and "qw4" not in qw.get("in_proj", {}):
+        return False
+    return True
+
+
+def _matmul(qx: jax.Array, lin: Dict, s_x) -> jax.Array:
+    """One quantized projection on the kernel backend: ``int4_matmul``
+    when the site is nibble-packed ({"qw4", "s_w"}, W4A8), ``int8_matmul``
+    otherwise.  Dispatch goes through the ``kops`` module attributes so
+    routing tests can monkeypatch and count per-kernel calls."""
+    if "qw4" in lin:
+        return kops.int4_matmul(qx, lin["qw4"], s_x, lin["s_w"])
+    return kops.int8_matmul(qx, lin["qw"], s_x, lin["s_w"])
 
 
 def init_mamba_block(key: jax.Array, cfg: ModelConfig) -> Dict:
@@ -165,11 +182,9 @@ def _kernel_out_proj(y2d: jax.Array, sc: Dict, qw: Dict,
     W_out) or plain static quantize, then one int8 matmul."""
     if spec.use_hadamard:
         q_y = kops.hadamard_quant(y2d, sc["y_had"])
-        lin = qw["out_proj_had"]
-        return kops.int8_matmul(q_y, lin["qw"], sc["y_had"], lin["s_w"])
+        return _matmul(q_y, qw["out_proj_had"], sc["y_had"])
     q_y = Q.quantize(y2d, sc["y"])
-    lin = qw["out_proj"]
-    return kops.int8_matmul(q_y, lin["qw"], sc["y"], lin["s_w"])
+    return _matmul(q_y, qw["out_proj"], sc["y"])
 
 
 def _kernel_selection(bcdt: jax.Array, p: Dict, cfg: ModelConfig,
@@ -178,8 +193,7 @@ def _kernel_selection(bcdt: jax.Array, p: Dict, cfg: ModelConfig,
     dtr, n = cfg.resolved_dt_rank, cfg.d_state
     dt_low, bmat, cmat = jnp.split(bcdt, [dtr, dtr + n], axis=-1)
     q_dt_low = Q.quantize(dt_low, sc["dt_low"])
-    lin = qw["dt_proj"]
-    dt = kops.int8_matmul(q_dt_low, lin["qw"], sc["dt_low"], lin["s_w"])
+    dt = _matmul(q_dt_low, qw["dt_proj"], sc["dt_low"])
     dt = common.softplus(dt + p["dt_bias"].astype(jnp.float32))
     return (Q.quantize(dt, sc["dt"]), Q.quantize(bmat, sc["B"]),
             Q.quantize(cmat, sc["C"]))
@@ -217,8 +231,7 @@ def _mamba_kernels_seq(p: Dict, cfg: ModelConfig, x: jax.Array, qctx,
     # residual on return (the layer scan owns the stream).
     q_in, _ = kops.rmsnorm_quant(x2d, jnp.zeros_like(x2d), p["norm"],
                                  sc["in"], eps=cfg.norm_eps)
-    lin = qw["in_proj"]
-    xz = kops.int8_matmul(q_in, lin["qw"], sc["in"], lin["s_w"])
+    xz = _matmul(q_in, qw["in_proj"], sc["in"])
     xc, z = jnp.split(xz, 2, axis=-1)
     z = z.reshape(bsz, L, di)
 
@@ -234,9 +247,7 @@ def _mamba_kernels_seq(p: Dict, cfg: ModelConfig, x: jax.Array, qctx,
         s_out=sc["x"], state=conv_state, apply_silu=True)
 
     # selection parameters from the already-int8 SSM input
-    lin = qw["x_proj"]
-    bcdt = kops.int8_matmul(qu.reshape(-1, di), lin["qw"], sc["x"],
-                            lin["s_w"])
+    bcdt = _matmul(qu.reshape(-1, di), qw["x_proj"], sc["x"])
     qdt, qb, qc = _kernel_selection(bcdt, p, cfg, sc, qw)
     n = cfg.d_state
     qdt = qdt.reshape(bsz, L, di)
@@ -265,8 +276,7 @@ def _mamba_kernels_step(p: Dict, cfg: ModelConfig, x: jax.Array,
 
     q_in, _ = kops.rmsnorm_quant(x2d, jnp.zeros_like(x2d), p["norm"],
                                  sc["in"], eps=cfg.norm_eps)
-    lin = qw["in_proj"]
-    xz = kops.int8_matmul(q_in, lin["qw"], sc["in"], lin["s_w"])
+    xz = _matmul(q_in, qw["in_proj"], sc["in"])
     xc, z = jnp.split(xz, 2, axis=-1)
 
     qxc = Q.quantize(xc, sc["conv_in"])[:, None, :]       # (B, 1, di)
@@ -277,8 +287,7 @@ def _mamba_kernels_step(p: Dict, cfg: ModelConfig, x: jax.Array,
         s_out=sc["x"], state=conv_q, apply_silu=True)
     qu = qu3[:, 0]                                        # (B, di)
 
-    lin = qw["x_proj"]
-    bcdt = kops.int8_matmul(qu, lin["qw"], sc["x"], lin["s_w"])
+    bcdt = _matmul(qu, qw["x_proj"], sc["x"])
     qdt, qb, qc = _kernel_selection(bcdt, p, cfg, sc, qw)
     qa, svec, dres = _kernel_scan_operands(p, sc, qw)
 
@@ -432,8 +441,7 @@ def _mamba_kernels_verify(p: Dict, cfg: ModelConfig, x: jax.Array,
 
     q_in, _ = kops.rmsnorm_quant(x2d, jnp.zeros_like(x2d), p["norm"],
                                  sc["in"], eps=cfg.norm_eps)
-    lin = qw["in_proj"]
-    xz = kops.int8_matmul(q_in, lin["qw"], sc["in"], lin["s_w"])
+    xz = _matmul(q_in, qw["in_proj"], sc["in"])
     xc, z = jnp.split(xz, 2, axis=-1)
     z = z.reshape(bsz, m, di)
 
@@ -445,9 +453,7 @@ def _mamba_kernels_verify(p: Dict, cfg: ModelConfig, x: jax.Array,
         qxc, cw["qw"], p["conv_b"], sc["conv_in"], cw["s_w"],
         s_out=sc["x"], state=conv_q, apply_silu=True)
 
-    lin = qw["x_proj"]
-    bcdt = kops.int8_matmul(qu.reshape(-1, di), lin["qw"], sc["x"],
-                            lin["s_w"])
+    bcdt = _matmul(qu.reshape(-1, di), qw["x_proj"], sc["x"])
     qdt, qb, qc = _kernel_selection(bcdt, p, cfg, sc, qw)
     n = cfg.d_state
     qdt = qdt.reshape(bsz, m, di)

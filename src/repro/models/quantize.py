@@ -26,10 +26,12 @@ backward compatibility, but the supported entry point is ``repro.api``
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.quant import recipe as qrecipe
+from repro.quant.recipe import BackendFallbackWarning
 from repro.quant.sitemap import (
     PCT_NEVER, PCT_X, PCT_X_UNLESS_QUAROT, AliasScale, BlockSites,
     ComputedScale, FakeQuantSite, Group, QuantizedTensor, ScaleSite,
@@ -38,15 +40,62 @@ from repro.quant.sitemap import (
 )
 
 
+def _section_fallback_reason(sec: Dict, spec: qrecipe.QuantSpec
+                             ) -> Optional[str]:
+    """Artifact-level kernel prerequisites of one qw section (recursive
+    over Group sub-dicts).  Mirrors ``repro.models.mamba.use_kernel_backend``
+    so the warning names the reason the block-level check will trip on."""
+    if "in_proj" in sec and "x_proj" in sec and "conv_w" not in sec:
+        return ("artifact predates int8 conv taps -- re-quantize to "
+                "refresh the qdata")
+    for name, lin in sec.items():
+        if not isinstance(lin, dict):
+            continue
+        if "s_w" not in lin:          # Group sub-dict (attn/mlp/...)
+            reason = _section_fallback_reason(lin, spec)
+            if reason:
+                return reason
+        elif (spec.w_bits == 4 and name != "conv_w"
+                and "qw4" not in lin):
+            return (f"site {name!r} stores unpacked 4-bit weights "
+                    "(pre-v2 artifact) -- re-quantize to nibble-pack")
+    return None
+
+
+def backend_fallback_reason(spec: Optional[qrecipe.QuantSpec],
+                            qdata: Optional[Dict]) -> Optional[str]:
+    """Why a kernels-backend request would execute on the qdq oracle,
+    or None when the kernels path is fully honored.  Checks the spec
+    (static scales, supported bit-widths, ...) and the artifact's qdata
+    (conv taps present, w4 sites nibble-packed)."""
+    reason = qrecipe.kernel_backend_fallback_reason(spec)
+    if reason is not None:
+        return reason
+    for sec in ((qdata or {}).get("qw") or {}).values():
+        if isinstance(sec, dict):
+            reason = _section_fallback_reason(sec, spec)
+            if reason:
+                return reason
+    return None
+
+
 def make_qctx(spec: qrecipe.QuantSpec, qdata: Dict,
               int8_compute: bool = False,
               backend: Optional[str] = None) -> Dict:
     """Assemble a forward-pass quant context.  ``backend`` overrides
-    ``spec.backend`` ("qdq" oracle vs "kernels" int8 execution) without
-    re-quantizing -- the qdata is shared between the two."""
+    ``spec.backend`` ("qdq" oracle vs "kernels" int8/int4 execution)
+    without re-quantizing -- the qdata is shared between the two.
+
+    A kernels request the spec/qdata cannot honor emits one structured
+    ``BackendFallbackWarning`` naming the reason (never silent)."""
     if backend is not None and backend != spec.backend:
         spec = dataclasses.replace(spec, backend=backend)
         spec.validate()
+    if spec.backend == "kernels":
+        reason = backend_fallback_reason(spec, qdata)
+        if reason is not None:
+            warnings.warn(BackendFallbackWarning("kernels", "qdq", reason),
+                          stacklevel=2)
     out = {"mode": "quant", "spec": spec, **qdata}
     if int8_compute:
         out["int8_compute"] = True
@@ -93,7 +142,10 @@ MAMBA_BLOCK = BlockSites(
         # int8 taps + scale for the fused conv kernel (backend="kernels");
         # the in-place fake-quant below keeps the qdq oracle identical
         # (same symmetric scale, so qw * s_w == the fake-quantized taps).
-        WeightSite("conv_w"),
+        # dtype="int8" pins one-value-per-byte storage even under w4 --
+        # the conv kernel reads int8 taps; values still sit on the 4-bit
+        # grid, so conv numerics match the oracle bit-for-bit either way.
+        WeightSite("conv_w", dtype="int8"),
     ),
     # A = -exp(A_log) quantized once with the ComputedScale "A" above, so
     # the kernel backend's decode step never re-derives it per token

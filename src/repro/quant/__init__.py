@@ -8,7 +8,11 @@ from repro.quant.hadamard import (
 from repro.quant.observers import (
     observe, observe_none, merge_stats, stats_scale, PERCENTILES,
 )
-from repro.quant.recipe import QuantSpec, PRESETS, get_spec, quantize_weight
+from repro.quant.recipe import (
+    QuantSpec, PRESETS, get_spec, quantize_weight, pack_int4, unpack_int4,
+    kernel_backend_fallback_reason, uses_kernel_backend,
+    BackendFallbackWarning,
+)
 from repro.quant.calibrate import run_calibration
 from repro.quant.sitemap import (
     SiteMap, register_site_map, get_site_map, registered_families,

@@ -22,6 +22,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.quant import quantizers as Q
+from repro.quant.recipe import unpack_int4
+
+
+def _stored_qw(x: jax.Array, qlin: dict) -> jax.Array:
+    """The integer weight, unpacking the int4 nibble layout if present.
+
+    ``{"qw4", ...}`` stores two 4-bit values per byte along the
+    contraction axis (PR 8); K is recovered from the activation's last
+    dim -- never stored, so the dict stays vmap/scan-transparent.
+    """
+    if "qw" in qlin:
+        return qlin["qw"]
+    return unpack_int4(qlin["qw4"], x.shape[-1])
 
 
 def apply_int8(x: jax.Array, s_x: jax.Array, qlin: dict,
@@ -34,7 +47,7 @@ def apply_int8(x: jax.Array, s_x: jax.Array, qlin: dict,
     """
     qx = Q.quantize(x, jnp.asarray(s_x, x.dtype))
     acc = jax.lax.dot_general(
-        qx, qlin["qw"],
+        qx, _stored_qw(x, qlin),
         dimension_numbers=(((qx.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
@@ -52,7 +65,7 @@ def apply_qdq(x: jax.Array, s_x: Optional[jax.Array], qlin: dict,
     out_dtype = out_dtype or x.dtype
     if s_x is not None:
         x = Q.qdq(x, jnp.asarray(s_x, x.dtype))
-    w = qlin["qw"].astype(x.dtype) * qlin["s_w"].astype(x.dtype)
+    w = _stored_qw(x, qlin).astype(x.dtype) * qlin["s_w"].astype(x.dtype)
     y = x @ w
     if "b" in qlin and qlin["b"] is not None:
         y = y + qlin["b"].astype(x.dtype)

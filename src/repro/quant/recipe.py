@@ -45,12 +45,16 @@ class QuantSpec:
     quantize_kv_cache: bool = False     # beyond-paper: int8 KV cache
     input_quant: str = "sym_percentile"  # Table 9 variants:
     # sym_percentile | sym_minmax | asym_percentile | log2 | dynamic
+    soft_edge: float = 0.0              # Quamba-SE soft-edge activation
+    # policy: blend the percentile clip toward the calibrated abs-max,
+    # s = (1-lambda) * s_pct + lambda * s_amax.  0.0 keeps the paper's
+    # hard percentile clip; 1.0 degenerates to plain min-max.
     backend: str = "qdq"                # execution backend:
     # qdq     -- fake-quant simulation over the fp reference ops (oracle)
     # kernels -- activations quantized once to int8 and fed to the Pallas
-    #            kernels (int8 matmul / conv / scan / hadamard / rmsnorm);
-    #            the paper's deployed dataflow.  Falls back to qdq where
-    #            unsupported (dynamic scales, non-8-bit, quarot).
+    #            kernels (int8/int4 matmul / conv / scan / hadamard /
+    #            rmsnorm); the paper's deployed dataflow.  Falls back to
+    #            qdq where unsupported (dynamic scales, quarot, ...).
 
     @property
     def use_percentile(self) -> bool:
@@ -79,6 +83,9 @@ class QuantSpec:
         if self.backend not in ("qdq", "kernels"):
             raise ValueError(
                 f"backend must be 'qdq' or 'kernels', got {self.backend!r}")
+        if not 0.0 <= self.soft_edge <= 1.0:
+            raise ValueError(
+                f"soft_edge must be in [0, 1], got {self.soft_edge}")
 
 
 PRESETS = {
@@ -91,6 +98,7 @@ PRESETS = {
     "in_per": QuantSpec(method="in_per"),
     "out_had": QuantSpec(method="out_had"),
     "quamba-w4a8": QuantSpec(method="quamba", w_bits=4),
+    "quamba-w4a8-se": QuantSpec(method="quamba", w_bits=4, soft_edge=0.25),
     "quamba-pc": QuantSpec(method="quamba", per_channel_w=True),
     "quamba-kv8": QuantSpec(method="quamba", quantize_kv_cache=True),
     "quamba-kernels": QuantSpec(method="quamba", backend="kernels"),
@@ -104,14 +112,56 @@ KERNEL_BACKEND_METHODS = ("quamba", "static", "in_per", "out_had",
                           "smoothquant")
 
 
+class BackendFallbackWarning(UserWarning):
+    """Raised (once per process per reason) when ``backend="kernels"`` was
+    requested but execution falls back to the qdq oracle.  Structured:
+    ``.requested`` / ``.effective`` / ``.reason`` are machine-readable,
+    mirroring the ``describe()`` fields of the artifact."""
+
+    def __init__(self, requested: str, effective: str, reason: str):
+        self.requested = requested
+        self.effective = effective
+        self.reason = reason
+        super().__init__(
+            f"backend={requested!r} requested but executing on "
+            f"{effective!r}: {reason}")
+
+
 def uses_kernel_backend(spec: Optional["QuantSpec"]) -> bool:
-    """True when ``spec`` selects the int8 Pallas-kernel execution path."""
-    return (spec is not None
-            and getattr(spec, "backend", "qdq") == "kernels"
-            and spec.method in KERNEL_BACKEND_METHODS
-            and spec.w_bits == 8 and spec.a_bits == 8
-            and not spec.per_channel_w
-            and spec.input_quant in ("sym_percentile", "sym_minmax"))
+    """True when ``spec`` selects the Pallas-kernel execution path.
+
+    w_bits=8 routes matmul sites to ``int8_matmul``; w_bits=4 routes them
+    to ``int4_matmul`` (nibble-packed weights).  Activations must be int8
+    either way -- the kernels quantize them once with static scales.
+    """
+    return kernel_backend_fallback_reason(spec) is None
+
+
+def kernel_backend_fallback_reason(spec: Optional["QuantSpec"]
+                                   ) -> Optional[str]:
+    """Why ``backend="kernels"`` cannot be honored, or None if it can.
+
+    The reasons mirror the fallback rules documented in README.md; the
+    string is surfaced verbatim in the one-shot ``BackendFallbackWarning``
+    and in ``QuantizedModel.describe()``.
+    """
+    if spec is None:
+        return "fp spec has no quantized data"
+    if getattr(spec, "backend", "qdq") != "kernels":
+        return "backend='qdq' requested"
+    if spec.method not in KERNEL_BACKEND_METHODS:
+        return (f"method {spec.method!r} needs per-call scales or a "
+                "rotate-back the int8 kernels cannot express")
+    if spec.w_bits not in (4, 8):
+        return f"w_bits={spec.w_bits} has no kernel (only 4 and 8)"
+    if spec.a_bits != 8:
+        return f"a_bits={spec.a_bits}: kernels consume int8 activations"
+    if spec.per_channel_w:
+        return "per-channel weight scales (kernels fuse per-tensor scales)"
+    if spec.input_quant not in ("sym_percentile", "sym_minmax"):
+        return (f"input_quant={spec.input_quant!r} recomputes scales "
+                "per call")
+    return None
 
 
 def prefill_chunk_safe(spec: Optional["QuantSpec"]) -> bool:
@@ -142,16 +192,56 @@ def get_spec(name: str) -> Optional[QuantSpec]:
 # weights
 # ---------------------------------------------------------------------------
 
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int4 values (int8 storage, range [-8, 7]) two per byte.
+
+    Packing runs along axis 0 -- the contraction axis of a (K, N) weight:
+    byte ``i`` holds row ``2i`` in its low nibble and row ``2i+1`` in its
+    high nibble (two's complement).  Odd K is zero-padded; a zero row
+    contributes nothing to a matmul, so consumers recover K from the
+    activation's last dim rather than a stored constant (which would not
+    survive ``jax.vmap`` over stacked layers).
+    """
+    k = q.shape[0]
+    if k % 2:
+        q = jnp.pad(q, ((0, 1),) + ((0, 0),) * (q.ndim - 1))
+    lo = q[0::2].astype(jnp.int32) & 0xF
+    hi = q[1::2].astype(jnp.int32) & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array, k: Optional[int] = None) -> jax.Array:
+    """Inverse of :func:`pack_int4`: (ceil(K/2), ...) bytes -> (K, ...) int8.
+
+    ``k`` drops the zero pad row of an odd-K weight (None keeps it --
+    harmless for matmuls, where the matching activation column is absent).
+    Nibbles are sign-extended via int32 shifts (arithmetic >> on a widened
+    value is well-defined everywhere; bit-twiddling int8 directly is not).
+    """
+    p32 = packed.astype(jnp.int32)
+    lo = (p32 << 28) >> 28
+    hi = (p32 << 24) >> 28
+    q = jnp.stack([lo, hi], axis=1).reshape((-1,) + packed.shape[1:])
+    return q[:k].astype(jnp.int8)
+
+
 def quantize_weight(w: jax.Array, spec: QuantSpec, *,
                     fold_hadamard_axis: Optional[int] = None,
-                    out_axis: int = -1) -> dict:
+                    out_axis: int = -1, storage: str = "auto") -> dict:
     """Quantize one weight matrix to a QLinear params dict.
 
     fold_hadamard_axis: if set, fold the normalized Hadamard rotation into
     this (input) axis before quantizing -- this is the W_out^H = H W_out
     fusion of paper §4.2 that makes the rotated output quantization free at
     inference time.
+
+    storage: "auto" packs 4-bit weights two-nibbles-per-byte along the
+    contraction axis (``{"qw4", "s_w"}``, consumed by ``int4_matmul``);
+    "int8" keeps one value per byte regardless of w_bits (conv taps, whose
+    kernel reads int8 -- the values still sit on the 4-bit grid).
     """
+    if storage not in ("auto", "int8"):
+        raise ValueError(f"storage must be 'auto' or 'int8', got {storage!r}")
     if fold_hadamard_axis is not None:
         w = fold_hadamard_into_weight(w, axis=fold_hadamard_axis)
     if spec.per_channel_w:
@@ -160,11 +250,15 @@ def quantize_weight(w: jax.Array, spec: QuantSpec, *,
     else:
         s_w = Q.symmetric_scale(w, bits=spec.w_bits)
     qw = Q.quantize(w, s_w, bits=spec.w_bits)
+    if storage == "auto" and spec.w_bits == 4:
+        return {"qw4": pack_int4(qw), "s_w": jnp.asarray(s_w, jnp.float32)}
     return {"qw": qw, "s_w": jnp.asarray(s_w, jnp.float32)}
 
 
-def dequantize_weight(qlin: dict, dtype=jnp.float32) -> jax.Array:
-    return qlin["qw"].astype(dtype) * qlin["s_w"].astype(dtype)
+def dequantize_weight(qlin: dict, dtype=jnp.float32, k: Optional[int] = None
+                      ) -> jax.Array:
+    qw = qlin["qw"] if "qw" in qlin else unpack_int4(qlin["qw4"], k)
+    return qw.astype(dtype) * qlin["s_w"].astype(dtype)
 
 
 # ---------------------------------------------------------------------------

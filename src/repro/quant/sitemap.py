@@ -72,6 +72,10 @@ class WeightSite:
     name: str
     param: Optional[str] = None     # param entry; defaults to ``name``
     fold_hadamard: bool = False     # W^H = H W fusion of §4.2
+    dtype: str = "auto"             # storage: "auto" nibble-packs 4-bit
+    # weights ({"qw4", "s_w"}, fed to int4_matmul); "int8" pins one value
+    # per byte (conv taps -- the int8 conv kernel reads them directly,
+    # values still on the w_bits grid)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,9 +198,11 @@ def _percentile_of(spec: qrecipe.QuantSpec, mode: str) -> float:
     raise ValueError(f"unknown percentile policy {mode!r}")
 
 
-def _qw(w, spec, fold_had: bool = False, stacked: bool = True):
+def _qw(w, spec, fold_had: bool = False, stacked: bool = True,
+        storage: str = "auto"):
     fn = lambda wi: qrecipe.quantize_weight(
-        wi, spec, fold_hadamard_axis=0 if fold_had else None)
+        wi, spec, fold_hadamard_axis=0 if fold_had else None,
+        storage=storage)
     return jax.vmap(fn)(w) if stacked else fn(w)
 
 
@@ -265,9 +271,16 @@ def _scale_sites(sites, stats_l, spec, p, stacked, pre: Dict) -> Dict:
                 scales[site.name] = pre[site.name]
                 continue
             stat = site.stat or site.name
-            scales[site.name] = stats_scale(
-                stats_l[stat],
-                percentile=_percentile_of(spec, site.percentile))
+            pct = _percentile_of(spec, site.percentile)
+            s = stats_scale(stats_l[stat], percentile=pct)
+            if spec.soft_edge > 0.0 and pct < 100.0:
+                # Quamba-SE soft edge: instead of the hard percentile
+                # clip, pull the scale toward the observed abs-max so
+                # rare outliers are softly covered -- the accuracy hedge
+                # the W4A8 preset leans on (PAPERS.md, Quamba-SE).
+                s_max = stats_scale(stats_l[stat], percentile=100.0)
+                s = (1.0 - spec.soft_edge) * s + spec.soft_edge * s_max
+            scales[site.name] = s
         elif isinstance(site, ComputedScale):
             fn = _COMPUTED_SCALE_FNS[site.fn]
             arr = p[site.param]
@@ -283,7 +296,8 @@ def _weight_sites(sites, p_src, spec, stacked) -> Dict:
     for site in sites:
         param = site.param or site.name
         qw[site.name] = _qw(p_src[param], spec,
-                            fold_had=site.fold_hadamard, stacked=stacked)
+                            fold_had=site.fold_hadamard, stacked=stacked,
+                            storage=site.dtype)
     return qw
 
 

@@ -80,10 +80,19 @@ def _reference_mamba_quantize(params, stats, spec):
     from repro.quant.observers import stats_scale
 
     stats_l = stats["layers"]
-    _scale = lambda site, pct=100.0: stats_scale(stats_l[site],
-                                                 percentile=pct)
-    _qw = lambda w, fold=False: jax.vmap(lambda wi: qrecipe.quantize_weight(
-        wi, spec, fold_hadamard_axis=0 if fold else None))(w)
+
+    def _scale(site, pct=100.0):
+        s = stats_scale(stats_l[site], percentile=pct)
+        if spec.soft_edge > 0.0 and pct < 100.0:
+            # Quamba-SE soft edge: blend the clip toward the abs-max
+            s_max = stats_scale(stats_l[site])
+            s = (1.0 - spec.soft_edge) * s + spec.soft_edge * s_max
+        return s
+
+    _qw = lambda w, fold=False, storage="auto": jax.vmap(
+        lambda wi: qrecipe.quantize_weight(
+            wi, spec, fold_hadamard_axis=0 if fold else None,
+            storage=storage))(w)
 
     p = dict(params["layers"])
     if spec.method == "smoothquant":
@@ -116,8 +125,9 @@ def _reference_mamba_quantize(params, stats, spec):
         "out_proj_had": _qw(p["out_proj"], fold=True),
         # int8 taps for the fused conv kernel (backend="kernels"), taken
         # from the *original* weights (the in-place fake-quant below uses
-        # the same symmetric scale, so qw * s_w == the fake-quant taps)
-        "conv_w": _qw(p["conv_w"]),
+        # the same symmetric scale, so qw * s_w == the fake-quant taps);
+        # storage stays one-value-per-byte even under w4 (conv reads int8)
+        "conv_w": _qw(p["conv_w"], storage="int8"),
         # A = -exp(A_log) quantized once for the int8 scan kernels
         "A": {"qw": jax.vmap(lambda a, s: Q.quantize(-jnp.exp(a), s))(
             p["A_log"], scales["A"])},

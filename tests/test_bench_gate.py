@@ -200,3 +200,23 @@ def test_prefix_cache_keys_tolerated_by_old_and_new_gates():
                          "brand_new_counter": [1, 2]}})
     assert gate(BASE, no_hits, 0.25) == []
     assert gate(no_hits, BASE, 0.25) == []
+
+
+def test_w4a8_keys_gated_and_ratio_zero_tolerance():
+    """PR 8: the w4a8 kernels TPOT is gated at the default band and the
+    matmul weight-bytes ratio -- a deterministic storage fact -- fails
+    on ANY growth; pre-PR-8 baselines without the section skip."""
+    by_key = {k: (hb, ov) for k, hb, ov in GATED}
+    assert by_key["w4a8.tpot_kernels_ms"] == (False, None)
+    assert by_key["w4a8.matmul_weight_bytes_ratio"] == (False, 0.0)
+    prev = dict(BASE, w4a8={"tpot_kernels_ms": 5.0,
+                            "matmul_weight_bytes_ratio": 0.5})
+    same = dict(BASE, w4a8={"tpot_kernels_ms": 5.0,
+                            "matmul_weight_bytes_ratio": 0.5})
+    assert gate(prev, same, 0.25) == []
+    unpacked = dict(BASE, w4a8={"tpot_kernels_ms": 5.0,
+                                "matmul_weight_bytes_ratio": 0.51})
+    failures = gate(prev, unpacked, 0.25)
+    assert any("matmul_weight_bytes_ratio" in f for f in failures)
+    assert gate(BASE, prev, 0.25) == []          # pre-PR-8 baseline
+    assert gate(prev, BASE, 0.25) == []          # rollback direction

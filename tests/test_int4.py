@@ -1,0 +1,400 @@
+"""W4A8 int4 path (PR 8): nibble pack/unpack round-trip, ``int4_matmul``
+parity against the qdq oracle across every family's matmul sites, the
+kernels-backend routing for ``quamba-w4a8``, the structured backend
+fallback warning, and pre-v2 (unpacked) artifact load compatibility."""
+import dataclasses
+import json
+import os
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.configs import get_config, scale_down
+from repro.data import eval_batches
+from repro.kernels import ops as kops
+from repro.models import forward, init_params
+from repro.models.mamba import use_kernel_backend
+from repro.models.quantize import backend_fallback_reason, make_qctx
+from repro.quant.recipe import (BackendFallbackWarning, get_spec,
+                                pack_int4, quantize_weight, unpack_int4,
+                                uses_kernel_backend)
+
+jax.config.update("jax_platform_name", "cpu")
+
+# one representative arch per registered family
+FAMILY_ARCHS = {
+    "mamba": "mamba-130m",
+    "dense": "llama3-8b",
+    "moe": "qwen3-moe-30b-a3b",
+    "hybrid": "zamba2-1.2b",
+    "ssm": "xlstm-1.3b",
+    "audio": "whisper-medium",
+    "vlm": "paligemma-3b",
+}
+
+W4_KERNELS = dataclasses.replace(get_spec("quamba-w4a8"),
+                                 backend="kernels")
+
+
+def _calib_batches(cfg, b=2, l=32, n=2, seed=7):
+    if cfg.family == "audio":
+        key = jax.random.PRNGKey(seed)
+        return [{"frames": jax.random.normal(key, (b, 24, cfg.d_model)),
+                 "tokens": jax.random.randint(key, (b, 8), 0,
+                                              cfg.vocab_size)}
+                for _ in range(n)]
+    if cfg.family == "vlm":
+        key = jax.random.PRNGKey(seed)
+        return [{"patches": jax.random.normal(
+                     key, (b, cfg.prefix_len, cfg.d_model)),
+                 "tokens": jax.random.randint(key, (b, l - cfg.prefix_len),
+                                              0, cfg.vocab_size)}
+                for _ in range(n)]
+    return list(eval_batches(cfg.vocab_size, b, l, n, seed=seed))
+
+
+def _w4_artifact(arch, spec=None):
+    cfg = scale_down(get_config(arch), layers=2, width=64, vocab=128)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calib = _calib_batches(cfg)
+    spec = spec or get_spec("quamba-w4a8")
+    return cfg, api.Quantizer(cfg, spec).calibrate(calib).quantize(params)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 3), (2, 2), (7, 5), (64, 48),
+                                   (129, 257), (5,), (8,)])
+def test_pack_unpack_round_trip(shape):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.integers(-8, 8, size=shape).astype(np.int8))
+    packed = pack_int4(q)
+    assert packed.dtype == jnp.int8
+    assert packed.shape == (-(-shape[0] // 2),) + shape[1:]
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(packed, shape[0])), np.asarray(q))
+
+
+def test_pack_layout_low_nibble_is_even_row():
+    q = jnp.asarray([[-8], [7], [3]], jnp.int8)        # odd K: zero pad
+    packed = np.asarray(pack_int4(q))
+    assert packed.shape == (2, 1)
+    assert packed[0, 0] & 0xF == (-8) & 0xF            # byte0 lo = row 0
+    assert (packed[0, 0] >> 4) & 0xF == 7              # byte0 hi = row 1
+    assert packed[1, 0] & 0xF == 3                     # byte1 lo = row 2
+    assert (packed[1, 0] >> 4) & 0xF == 0              # pad nibble is 0
+    # unpadded unpack keeps the zero row (harmless for matmul)
+    assert np.asarray(unpack_int4(pack_int4(q))).shape == (4, 1)
+
+
+def test_pack_unpack_vmaps_over_stacked_layers():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.integers(-8, 8, size=(3, 65, 10)).astype(np.int8))
+    packed = jax.vmap(pack_int4)(q)
+    got = jax.vmap(lambda p: unpack_int4(p, 65))(packed)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(q))
+
+
+def test_quantize_weight_storage_contract():
+    w = jax.random.normal(jax.random.PRNGKey(2), (33, 17))
+    w4 = get_spec("quamba-w4a8")
+    packed = quantize_weight(w, w4)
+    assert set(packed) == {"qw4", "s_w"} and packed["qw4"].shape == (17, 17)
+    pinned = quantize_weight(w, w4, storage="int8")
+    assert set(pinned) == {"qw", "s_w"}
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(packed["qw4"], 33)), np.asarray(pinned["qw"]))
+    # int8 specs never pack
+    assert "qw" in quantize_weight(w, get_spec("quamba"))
+    with pytest.raises(ValueError, match="storage"):
+        quantize_weight(w, w4, storage="int4")
+
+
+# ---------------------------------------------------------------------------
+# int4_matmul: bit-exact vs int8_matmul on the unpacked values
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mkn", [(3, 7, 5), (16, 64, 48), (5, 129, 33)])
+def test_int4_matmul_matches_int8_matmul_bit_exact(mkn):
+    m, k, n = mkn
+    rng = np.random.default_rng(3)
+    qx = jnp.asarray(rng.integers(-128, 128, (m, k)).astype(np.int8))
+    q = jnp.asarray(rng.integers(-8, 8, (k, n)).astype(np.int8))
+    bias = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    packed = pack_int4(q)
+    for kw in ({}, {"apply_silu": True}, {"s_out": 0.05}):
+        y4 = kops.int4_matmul(qx, packed, 0.01, 0.1, bias, **kw)
+        y8 = kops.int8_matmul(qx, q, 0.01, 0.1, bias, **kw)
+        np.testing.assert_array_equal(np.asarray(y4), np.asarray(y8))
+
+
+def test_int4_matmul_rejects_wrong_layout():
+    qx = jnp.zeros((2, 8), jnp.int8)
+    with pytest.raises(ValueError, match="packed rows"):
+        kops.int4_matmul(qx, jnp.zeros((8, 3), jnp.int8), 1.0, 1.0)
+    with pytest.raises(ValueError, match="bk must be even"):
+        kops.int4_matmul(qx, jnp.zeros((4, 3), jnp.int8), 1.0, 1.0, bk=3)
+
+
+def _packed_sites(tree, path=""):
+    """Yield (path, leaf) for every nibble-packed weight-site dict."""
+    if isinstance(tree, dict):
+        if "qw4" in tree:
+            yield path, tree
+        else:
+            for k, v in tree.items():
+                yield from _packed_sites(v, f"{path}/{k}")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_int4_matmul_parity_vs_qdq_all_family_sites(family):
+    """Every packed matmul site of every family: the Pallas kernel on the
+    packed bytes matches the dequantize-then-fp-matmul oracle <= 1e-6."""
+    _, qm = _w4_artifact(FAMILY_ARCHS[family])
+    sites = list(_packed_sites(qm.qdata["qw"]))
+    assert sites, f"{family}: no packed matmul sites?"
+    rng = np.random.default_rng(4)
+    for path, lin in sites:
+        packed = np.asarray(lin["qw4"])
+        packed2d = jnp.asarray(packed.reshape((-1,) + packed.shape[-2:])[0])
+        s_w = float(np.asarray(lin["s_w"]).reshape(-1)[0])
+        kp, n = packed2d.shape
+        qx = jnp.asarray(rng.integers(-128, 128, (4, 2 * kp))
+                         .astype(np.int8))
+        s_x = 0.02
+        got = np.asarray(kops.int4_matmul(qx, packed2d, s_x, s_w))
+        dq = np.asarray(unpack_int4(packed2d)).astype(np.float32) * s_w
+        want = (np.asarray(qx).astype(np.float32) * s_x) @ dq
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
+                                   err_msg=f"{family}{path}")
+
+
+# ---------------------------------------------------------------------------
+# qdq execution with packed weights (all families)
+# ---------------------------------------------------------------------------
+
+def _unpack_qdata(qdata):
+    """Rewrite every {"qw4"} leaf to the equivalent unpacked {"qw"}."""
+    def walk(tree):
+        if isinstance(tree, dict):
+            if "qw4" in tree:
+                packed = tree["qw4"]
+                flat = packed.reshape((-1,) + packed.shape[-2:])
+                qw = jax.vmap(unpack_int4)(flat).reshape(
+                    packed.shape[:-2] + (2 * packed.shape[-2],
+                                         packed.shape[-1]))
+                return {"qw": qw, "s_w": tree["s_w"]}
+            return {k: walk(v) for k, v in tree.items()}
+        return tree
+    return walk(qdata)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_w4a8_qdq_forward_identical_packed_vs_unpacked(family):
+    """The packed storage is execution-transparent: the qdq forward over
+    {"qw4"} leaves is bit-identical to the same qdata unpacked (the
+    pre-v2 layout), for every architecture family."""
+    cfg, qm = _w4_artifact(FAMILY_ARCHS[family])
+    batch = _calib_batches(cfg, seed=21)[0]
+    lg_packed, _ = forward(qm.params, cfg, batch, qctx=qm.qctx())
+    legacy = _unpack_qdata(qm.qdata)
+    # padded rows unpack to zeros beyond the true K; trim to match params
+    qctx_legacy = make_qctx(qm.spec, legacy)
+    lg_unpacked, _ = forward(qm.params, cfg, batch, qctx=qctx_legacy)
+    np.testing.assert_array_equal(np.asarray(lg_packed),
+                                  np.asarray(lg_unpacked))
+
+
+# ---------------------------------------------------------------------------
+# kernels-backend routing + parity (the PR-8 acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def w4_kernels_setup():
+    return _w4_artifact("mamba-130m", spec=W4_KERNELS)
+
+
+def test_w4a8_spec_uses_kernel_backend():
+    assert uses_kernel_backend(W4_KERNELS)
+    assert backend_fallback_reason(W4_KERNELS, None) is None
+
+
+def test_w4a8_kernels_matches_qdq_oracle_1e6(w4_kernels_setup):
+    cfg, qm = w4_kernels_setup
+    assert qm.describe()["effective_backend"] == "kernels"
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (2, 32),
+                                          0, cfg.vocab_size)}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", BackendFallbackWarning)
+        lg_k, _ = forward(qm.params, cfg, batch, qctx=qm.qctx())
+        lg_q, _ = forward(qm.params, cfg, batch,
+                          qctx=qm.qctx(backend="qdq"))
+    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_q),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_w4a8_routes_matmuls_to_int4_kernel(w4_kernels_setup, monkeypatch):
+    cfg, qm = w4_kernels_setup
+    counts = {"int4_matmul": 0, "int8_matmul": 0}
+    for name in counts:
+        orig = getattr(kops, name)
+
+        def wrap(*a, __o=orig, __n=name, **kw):
+            counts[__n] += 1
+            return __o(*a, **kw)
+
+        monkeypatch.setattr(kops, name, wrap)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(6), (2, 16),
+                                          0, cfg.vocab_size)}
+    forward(qm.params, cfg, batch, qctx=qm.qctx())
+    # no qdq fallback and no int8 matmul for matmul sites: W4A8 means
+    # every projection runs on the nibble-packed kernel
+    assert counts["int4_matmul"] > 0
+    assert counts["int8_matmul"] == 0, counts
+
+
+def test_w4a8_weight_bytes_halved(w4_kernels_setup):
+    _, qm = w4_kernels_setup
+    lay = qm.qdata["qw"]["layers"]
+    for site in ("in_proj", "x_proj", "dt_proj", "out_proj"):
+        packed = np.asarray(lay[site]["qw4"])
+        k = qm.params["layers"][site].shape[-2]
+        assert packed.shape[-2] == -(-k // 2)
+
+
+# ---------------------------------------------------------------------------
+# structured fallback warning + describe()
+# ---------------------------------------------------------------------------
+
+def test_fallback_warning_names_reason_and_is_structured(w4_kernels_setup):
+    cfg, qm = w4_kernels_setup
+    legacy = _unpack_qdata(qm.qdata)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        make_qctx(qm.spec, legacy)
+    assert len(rec) == 1
+    w = rec[0].message
+    assert isinstance(w, BackendFallbackWarning)
+    assert w.requested == "kernels" and w.effective == "qdq"
+    assert "unpacked 4-bit" in w.reason
+    # block-level routing agrees with the warning
+    ctx = make_qctx(qm.spec, legacy)
+    lay = {"mode": "quant", "spec": ctx["spec"],
+           "scales": jax.tree.map(lambda a: a[0], ctx["scales"]["layers"]),
+           "qw": jax.tree.map(lambda a: a[0], ctx["qw"]["layers"])}
+    assert not use_kernel_backend(lay)
+
+
+def test_no_warning_when_kernels_request_is_honored(w4_kernels_setup):
+    _, qm = w4_kernels_setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", BackendFallbackWarning)
+        qm.qctx()                                   # packed: no fallback
+        qm.qctx(backend="qdq")                      # qdq request: silent
+
+
+def test_describe_surfaces_effective_backend(w4_kernels_setup):
+    _, qm = w4_kernels_setup
+    d = qm.describe()
+    assert d["requested_backend"] == "kernels"
+    assert d["effective_backend"] == "kernels"
+    assert d["backend_fallback_reason"] is None
+    assert d["w_bits"] == 4 and d["a_bits"] == 8
+    # a qdq-backend spec reports qdq with the request reason
+    cfg, qm_qdq = _w4_artifact("mamba-130m")
+    d2 = qm_qdq.describe()
+    assert d2["effective_backend"] == "qdq"
+    # quarot can never feed the kernels
+    quarot = dataclasses.replace(get_spec("quarot"), backend="kernels")
+    assert "quarot" in backend_fallback_reason(quarot, None)
+
+
+# ---------------------------------------------------------------------------
+# pre-PR-8 (format v1, unpacked) artifact compatibility
+# ---------------------------------------------------------------------------
+
+def _write_v1_artifact(tmp_path, qm):
+    """A faithful pre-PR-8 artifact: unpacked w4 leaves, format v1 meta
+    without the v2 backend fields or the soft_edge spec knob."""
+    legacy = dataclasses.replace(qm, qdata=_unpack_qdata(qm.qdata))
+    path = os.path.join(str(tmp_path), "legacy")
+    legacy.save(path)
+    meta_p = os.path.join(path, "quantized_model.json")
+    meta = json.load(open(meta_p))
+    meta["format_version"] = 1
+    meta["spec"].pop("soft_edge", None)
+    for key in ("effective_backend", "backend_fallback_reason"):
+        meta.pop(key, None)
+    json.dump(meta, open(meta_p, "w"))
+    return path
+
+
+def test_pre_pr8_artifact_loads_and_runs_on_qdq(tmp_path, w4_kernels_setup):
+    cfg, qm = w4_kernels_setup
+    path = _write_v1_artifact(tmp_path, qm)
+    qm2 = api.load(path)
+    assert "qw" in qm2.qdata["qw"]["layers"]["in_proj"]   # unpacked
+    d = qm2.describe()
+    assert d["effective_backend"] == "qdq"
+    assert "unpacked 4-bit" in d["backend_fallback_reason"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", BackendFallbackWarning)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(7),
+                                              (2, 16), 0, cfg.vocab_size)}
+        lg_old, _ = forward(qm2.params, cfg, batch, qctx=qm2.qctx())
+    # and its numerics equal the packed artifact's qdq oracle
+    lg_new, _ = forward(qm.params, cfg, batch, qctx=qm.qctx(backend="qdq"))
+    np.testing.assert_array_equal(np.asarray(lg_old), np.asarray(lg_new))
+
+
+def test_future_format_version_refused(tmp_path, w4_kernels_setup):
+    _, qm = w4_kernels_setup
+    path = os.path.join(str(tmp_path), "future")
+    qm.save(path)
+    meta_p = os.path.join(path, "quantized_model.json")
+    meta = json.load(open(meta_p))
+    meta["format_version"] = 99
+    json.dump(meta, open(meta_p, "w"))
+    with pytest.raises(ValueError, match="format_version"):
+        api.load(path)
+
+
+# ---------------------------------------------------------------------------
+# Quamba-SE soft-edge activation policy
+# ---------------------------------------------------------------------------
+
+def test_soft_edge_scale_sits_between_percentile_and_amax():
+    cfg = scale_down(get_config("mamba-130m"), layers=2, width=64,
+                     vocab=128)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calib = _calib_batches(cfg)
+    stats = api.calibration_stats(cfg, params, calib)
+    base = get_spec("quamba-w4a8")
+    se = get_spec("quamba-w4a8-se")
+    assert se.soft_edge == 0.25
+    q_hard = api.Quantizer(cfg, base).with_stats(stats).quantize(params)
+    q_soft = api.Quantizer(cfg, se).with_stats(stats).quantize(params)
+    s_hard = np.asarray(q_hard.qdata["scales"]["layers"]["x"])
+    s_soft = np.asarray(q_soft.qdata["scales"]["layers"]["x"])
+    from repro.quant.observers import stats_scale
+    s_amax = np.asarray(stats_scale(stats["layers"]["x"]))
+    assert np.all(s_soft >= s_hard - 1e-12)
+    assert np.all(s_soft <= s_amax + 1e-12)
+    np.testing.assert_allclose(s_soft, 0.75 * s_hard + 0.25 * s_amax,
+                               rtol=1e-6)
+    # non-percentile sites are untouched by the policy
+    np.testing.assert_array_equal(
+        np.asarray(q_hard.qdata["scales"]["layers"]["in"]),
+        np.asarray(q_soft.qdata["scales"]["layers"]["in"]))
+
+
+def test_soft_edge_validation():
+    with pytest.raises(ValueError, match="soft_edge"):
+        dataclasses.replace(get_spec("quamba"), soft_edge=1.5).validate()
+    dataclasses.replace(get_spec("quamba"), soft_edge=1.0).validate()

@@ -52,13 +52,18 @@ def _count_ops(monkeypatch):
 # ---------------------------------------------------------------------------
 
 def test_backend_flag_validation_and_preset():
+    import dataclasses
     spec = get_spec("quamba-kernels")
     assert spec.backend == "kernels" and uses_kernel_backend(spec)
     assert not uses_kernel_backend(get_spec("quamba"))
     assert not uses_kernel_backend(get_spec("dynamic"))   # dynamic scales
     assert not uses_kernel_backend(get_spec("quarot"))    # rotate-back
-    assert not uses_kernel_backend(get_spec("quamba-w4a8"))
-    import dataclasses
+    # w4a8 runs on the kernel backend since PR 8 (int4_matmul); a3 and
+    # per-channel weights still keep the oracle
+    w4 = dataclasses.replace(get_spec("quamba-w4a8"), backend="kernels")
+    assert uses_kernel_backend(w4)
+    assert not uses_kernel_backend(
+        dataclasses.replace(w4, per_channel_w=True))
     bad = dataclasses.replace(spec, backend="nope")
     with pytest.raises(ValueError):
         bad.validate()
