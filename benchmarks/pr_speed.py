@@ -10,7 +10,9 @@ vs miss-path TTFT, hit rate, bytes), the speculative-decoding workload
 kernel backend, acceptance rate, greedy bit-identity), and the
 trace-driven open-loop load test (``serve.loadgen``: p99 TTFT,
 goodput, async-pump vs sync time-weighted occupancy, prefix-cache
-spill-tier counters).  The file
+spill-tier counters), and the disaggregated prefill/decode workload
+(``serve.disagg``: p95 TTFT through split worker pools, snapshot
+transfer bytes/latency, stream-identity control).  The file
 carries a top-level ``run_meta`` provenance stamp (git commit,
 timestamp, jax backend/device) which the perf gate ignores.
 
@@ -42,6 +44,7 @@ from repro.quant.recipe import get_spec
 from repro.models import (decode_step, init_decode_state, param_count,
                           prefill_step)
 from repro.serve import LLMEngine, SamplingParams, SpecConfig
+from repro.serve.disagg import DisaggEngine
 from repro.serve.loadgen import (SLO, ClusteredArrivals, RAGLongPrompt,
                                  SharedPrefixChat, WorkloadMix)
 from repro.serve.loadgen import run as loadgen_run
@@ -372,6 +375,53 @@ def _loadgen_workload(cfg, params, qctx, smoke: bool) -> dict:
     }
 
 
+def _disagg_workload(cfg, params, qctx, smoke: bool) -> dict:
+    """Disaggregated prefill/decode serving (``repro.serve.disagg``):
+    a clustered-burst chat+RAG trace through a DisaggEngine (1 prefill
+    + 2 decode workers, thread mode) and through the single-process
+    control on the same knobs.  Streams must match bit for bit; the
+    disagg-only costs -- snapshot transfer bytes/latency and per-role
+    occupancy -- ride next to the TTFT tail the CI gate watches
+    (``serve.disagg.ttft_ms.p95``)."""
+    n_clusters = 2 if smoke else 4
+    n = n_clusters * 4
+    mix = WorkloadMix(
+        [(3, SharedPrefixChat(n_prefixes=4, prefix_len=24,
+                              suffix_len=(1, 4), max_tokens=(4, 8))),
+         (1, RAGLongPrompt(prompt_len=(32, 56), max_tokens=(2, 4)))])
+    trace = mix.build(
+        n_requests=n, vocab_size=cfg.vocab_size, seed=4321,
+        arrivals=ClusteredArrivals(n_clusters=n_clusters, gap_s=1.0,
+                                   spread_s=0.002))
+    mono = LLMEngine(params, cfg, max_batch=4, max_len=96, qctx=qctx,
+                     prefill_chunk=32)
+    rep_m = loadgen_run(mono, trace, pump="sync", time_scale=0.0)
+    with DisaggEngine(params, cfg, prefill_workers=1, decode_workers=2,
+                      max_batch=2, max_len=96, qctx=qctx,
+                      prefill_chunk=32) as eng:
+        rep_d = loadgen_run(eng, trace, pump="sync", time_scale=0.0)
+        mj = eng.metrics_json()
+    d = mj["disagg"]
+    return {
+        "prefill_workers": 1,
+        "decode_workers": 2,
+        "requests": n,
+        "ttft_ms": rep_d["ttft_ms"],
+        "tpot_ms": rep_d["tpot_ms"],
+        "goodput_requests": rep_d["goodput_requests"],
+        "streams_match_single_process": (rep_d["token_streams"]
+                                         == rep_m["token_streams"]),
+        "transfers": d["transport"]["transfers"],
+        "transfer_bytes": d["transport"]["bytes"],
+        "transfer_latency_ms": d["transport"]["latency_ms"],
+        "direct_admits": d["transport"]["direct_admits"],
+        "prefill_occupancy": d["prefill"]["occupancy"],
+        "decode_occupancy_mean": d["decode"]["occupancy_mean"],
+        "snapshot_restores": d["decode"]["snapshot_restores"],
+        "admission_suggested": d["admission"]["suggested"],
+    }
+
+
 def _spill_workload(cfg, params, qctx, smoke: bool) -> dict:
     """Host-RAM spill tier under real eviction pressure: the device
     budget holds ~1.6 state snapshots while the workload cycles more
@@ -445,21 +495,11 @@ def run() -> dict:
     out["tpot_quamba_kernels_ms"] = _tpot(cfg, qm.params,
                                           qm.qctx(backend="kernels"),
                                           iters) / 1e3
-    # DEPRECATED alias (one release): the kernel-backend TPOT was
-    # always a milliseconds-scale number, so the canonical key is now
-    # *_ms; the old *_us key carries the same measurement in
-    # microseconds until downstream baselines have rolled over.
-    out["tpot_quamba_kernels_us"] = out["tpot_quamba_kernels_ms"] * 1e3
-    out["deprecations"] = {
-        "tpot_quamba_kernels_us":
-            "renamed to tpot_quamba_kernels_ms (same measurement, "
-            "milliseconds); this alias will be dropped next release",
-    }
     common.emit("pr_speed/tpot_fp", out["tpot_fp_us"], "decode_step")
     common.emit("pr_speed/tpot_quamba_qdq", out["tpot_quamba_qdq_us"],
                 "decode_step(fake-quant oracle)")
     common.emit("pr_speed/tpot_quamba_kernels",
-                out["tpot_quamba_kernels_us"],
+                out["tpot_quamba_kernels_ms"] * 1e3,
                 "decode_step(int8 Pallas kernels; interpret mode off-TPU)")
 
     out["w4a8"] = _w4a8_section(cfg, params, stats, qm, iters)
@@ -524,6 +564,16 @@ def run() -> dict:
         f"{lg['spill']['spills']} spills / "
         f"{lg['spill']['promotions']} promotions, streams match "
         f"cache-off: {lg['spill']['streams_match_cache_off']}")
+
+    dg = _disagg_workload(cfg, qm.params, qm.qctx(), smoke)
+    out["serve"]["disagg"] = dg
+    common.emit(
+        "pr_speed/serve_disagg_ttft_p95", dg["ttft_ms"]["p95"] * 1e3,
+        f"p95 TTFT through {dg['prefill_workers']} prefill + "
+        f"{dg['decode_workers']} decode workers "
+        f"({dg['transfers']} snapshot transfers, "
+        f"{dg['transfer_bytes']} B, streams match: "
+        f"{dg['streams_match_single_process']})")
 
     # bytes moved per decode step: weights read once per token (the
     # memory-bound regime the paper's 1.7x rides on) + recurrent state

@@ -44,6 +44,15 @@ scheduler's request-latency behavior):
     queueing that the p95/p99 expose; the loadgen p99 comes from the
     trace-driven open-loop run).  Small-sample percentiles on shared
     runners get the same loose 100% threshold as the cache TTFT.
+  * ``serve.disagg.ttft_ms.p95`` -- lower is better (TTFT tail through
+    the disaggregated prefill/decode split; this path pays the
+    snapshot pack/ship/restore on admission, so transport bloat or a
+    broken zero-prefill restore surfaces here first).
+
+The ``tpot_quamba_kernels_us`` producing alias is gone (one release
+after the rename, as promised); ``RENAMES`` still bridges baselines
+that predate the rename and is dropped once no archived baseline
+carries the legacy key.
 
 Forward compatibility is deliberate: the gate reads ONLY the dotted
 keys above and ignores everything else in either file, so a newer
@@ -76,6 +85,10 @@ GATED = (
     # worse than half the baseline throughput fails
     ("serve.spec_decode.tokens_per_s", True, 0.5),
     ("serve.loadgen.ttft_ms.p99", False, 1.0),
+    # disaggregated serving TTFT tail: includes the snapshot transfer
+    # on the admission path, so a transport regression shows up here;
+    # small-sample percentile -> the loose 100% threshold
+    ("serve.disagg.ttft_ms.p95", False, 1.0),
     # W4A8 on the int4-matmul kernels backend (PR 8).  The byte ratio
     # is a deterministic storage fact (nibble packing halves matmul
     # weight bytes), so like the dispatch count it gets zero tolerance:

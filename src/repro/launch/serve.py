@@ -24,6 +24,16 @@ model (demo-initialised weights here, matching the launcher's random
 target).  Greedy output is bit-identical to vanilla decode either
 way; the summary prints acceptance rate and tokens-per-round.
 
+``--disagg --prefill-workers N --decode-workers M`` serves through the
+disaggregated split (``repro.serve.disagg``): prefill workers turn
+prompts into packed SSM-state snapshots, decode workers restore them
+into zero-prefill seats, and the frontend keeps the exact LLMEngine
+surface -- token streams stay bit-identical to single-process serving
+and the summary gains a ``disagg`` section (snapshot transfer
+bytes/latency, per-role occupancy, the admission controller's
+suggested worker split).  ``--disagg-mode process`` runs each worker
+in its own spawned process instead of in-process threads.
+
 Load generation (``repro.serve.loadgen``):
 
   # write a replayable seeded trace
@@ -95,14 +105,61 @@ def _print_spec(mj: dict) -> None:
           f"per request")
 
 
+def _disagg_engine(args, model, max_len: int):
+    """A ``DisaggEngine`` over the quantized artifact (``--disagg``)."""
+    from repro.serve.disagg import DisaggEngine
+    if args.speculative_draft:
+        raise SystemExit("--disagg does not compose with "
+                         "--speculative-draft: the decode workers run "
+                         "vanilla decode")
+    if args.policy:
+        raise SystemExit("--disagg admits via the roofline controller; "
+                         "drop --policy")
+    # the decode workers' prefix cache IS the admission mechanism, so
+    # it cannot be disabled -- --prefix-cache-mb only grows it
+    return DisaggEngine(
+        model.params, model.cfg, qctx=model.qctx(),
+        prefill_workers=args.prefill_workers,
+        decode_workers=args.decode_workers,
+        max_batch=4, max_len=max_len, mode=args.disagg_mode,
+        prefix_cache_mb=max(args.prefix_cache_mb, 64.0))
+
+
+def _print_disagg(mj: dict) -> None:
+    d = mj.get("disagg")
+    if not d:
+        return
+    tr = d["transport"]
+    print(f"disagg: {d['prefill']['workers']} prefill + "
+          f"{d['decode']['workers']} decode workers ({d['mode']} "
+          f"mode); {tr['transfers']} snapshot transfers, "
+          f"{tr['bytes'] / 1e6:.2f} MB shipped, "
+          f"{tr['direct_admits']} direct admits")
+    lat = tr["latency_ms"]
+    if lat:
+        print(f"  transfer latency p50 {lat['p50']:.2f} / "
+              f"p95 {lat['p95']:.2f} ms; "
+              f"{d['decode']['snapshot_restores']} snapshot restores, "
+              f"{d['decode']['fallback_prefill_dispatches']} fallback "
+              f"prefills on decode workers")
+    occ = d["decode"]["occupancy_mean"]
+    sug = d["admission"]["suggested"]
+    print(f"  occupancy: prefill {d['prefill']['occupancy']:.2f}, "
+          f"decode {'n/a' if occ is None else format(occ, '.2f')}; "
+          f"admission suggests {sug['prefill']}p:{sug['decode']}d")
+
+
 def _loadgen(args, model) -> None:
     trace = Trace.load(args.loadgen)
     need = max(len(e.prompt) + e.max_tokens for e in trace.events)
-    eng = model.engine(
-        max_batch=4, max_len=need + 8, scheduler=args.policy,
-        prefix_cache_mb=(args.prefix_cache_mb or None),
-        prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None),
-        speculative=_spec_config(args, model.cfg))
+    if args.disagg:
+        eng = _disagg_engine(args, model, need + 8)
+    else:
+        eng = model.engine(
+            max_batch=4, max_len=need + 8, scheduler=args.policy,
+            prefix_cache_mb=(args.prefix_cache_mb or None),
+            prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None),
+            speculative=_spec_config(args, model.cfg))
     slo = SLO(ttft_p95_ms=args.slo_ttft_p95_ms,
               ttft_p99_ms=args.slo_ttft_p99_ms,
               tpot_p95_ms=args.slo_tpot_p95_ms)
@@ -126,7 +183,9 @@ def _loadgen(args, model) -> None:
               f"{occ:.2f}" if occ is not None else "")
     print(f"  replay digest {digest[:16]} "
           f"(streams+schedule, sha256)")
-    _print_spec(eng.metrics_json())
+    mj = eng.metrics_json()
+    _print_spec(mj)
+    _print_disagg(mj)
     if "slo" in report:
         verdict = "PASS" if report["slo"]["ok"] else "FAIL"
         print(f"  SLO {verdict}: {report['slo']['objectives']}")
@@ -135,10 +194,11 @@ def _loadgen(args, model) -> None:
     if args.metrics_out:
         report.pop("token_streams")
         with open(args.metrics_out, "w") as f:
-            json.dump({"loadgen": report,
-                       "engine": eng.metrics_json()}, f,
+            json.dump({"loadgen": report, "engine": mj}, f,
                       indent=1, sort_keys=True)
         print(f"metrics -> {args.metrics_out}")
+    if args.disagg:
+        eng.close()
     if "slo" in report and not report["slo"]["ok"]:
         raise SystemExit(1)
 
@@ -176,6 +236,19 @@ def main() -> None:
                          "(>= 1; each round commits 1..k+1 tokens)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the per-request metrics JSON here")
+    dg = ap.add_argument_group("disaggregated serving")
+    dg.add_argument("--disagg", action="store_true",
+                    help="serve through split prefill/decode worker "
+                         "pools (repro.serve.disagg); streams stay "
+                         "bit-identical to single-process serving")
+    dg.add_argument("--prefill-workers", type=int, default=1,
+                    help="prefill worker pool size under --disagg")
+    dg.add_argument("--decode-workers", type=int, default=1,
+                    help="decode worker pool size under --disagg")
+    dg.add_argument("--disagg-mode", default="thread",
+                    choices=["thread", "process"],
+                    help="thread = in-process workers (default); "
+                         "process = one spawned process per worker")
     lg = ap.add_argument_group("load generation")
     lg.add_argument("--loadgen", default=None, metavar="TRACE.json",
                     help="replay a saved loadgen trace instead of the "
@@ -223,12 +296,16 @@ def main() -> None:
         _loadgen(args, model)
         return
 
-    eng = model.engine(
-        max_batch=4, max_len=args.shared_prefix + args.max_new + 16,
-        scheduler=args.policy,
-        prefix_cache_mb=(args.prefix_cache_mb or None),
-        prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None),
-        speculative=_spec_config(args, cfg))
+    if args.disagg:
+        eng = _disagg_engine(args, model,
+                             args.shared_prefix + args.max_new + 16)
+    else:
+        eng = model.engine(
+            max_batch=4, max_len=args.shared_prefix + args.max_new + 16,
+            scheduler=args.policy,
+            prefix_cache_mb=(args.prefix_cache_mb or None),
+            prefix_cache_spill_mb=(args.prefix_cache_spill_mb or None),
+            speculative=_spec_config(args, cfg))
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, max_tokens=args.max_new)
     shared = [(7 * j + 1) % cfg.vocab_size
@@ -242,8 +319,10 @@ def main() -> None:
     eng.run()
     mj = eng.metrics_json()
     ttft = mj["summary"]["ttft_ms"]
+    how = (f"disagg {args.prefill_workers}p:{args.decode_workers}d"
+           if args.disagg else type(eng.scheduler).__name__)
     print(f"{args.requests} requests served in {time.time()-t0:.2f}s "
-          f"({args.quant}, {type(eng.scheduler).__name__})")
+          f"({args.quant}, {how})")
     if ttft:
         print(f"TTFT mean {ttft['mean']:.1f} ms, p95 {ttft['p95']:.1f} ms;"
               f" {mj['engine']['tokens_per_s']:.1f} tok/s, occupancy "
@@ -259,12 +338,15 @@ def main() -> None:
               f"{hit.get('mean', float('nan')):.1f} ms vs miss "
               f"{miss.get('mean', float('nan')):.1f} ms")
     _print_spec(mj)
+    _print_disagg(mj)
     if args.metrics_out:
-        # mj already carries the engine/prefix_cache/spec_decode
-        # sections metrics.dump would rebuild
+        # mj already carries the engine/prefix_cache/spec_decode/
+        # disagg sections metrics.dump would rebuild
         with open(args.metrics_out, "w") as f:
             json.dump(mj, f, indent=1, sort_keys=True)
         print(f"metrics -> {args.metrics_out}")
+    if args.disagg:
+        eng.close()
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 from repro.serve.cache import CacheEntry, StateCache
 from repro.serve.core import EngineCore
+from repro.serve.disagg import DisaggEngine, SnapshotCorruption
 from repro.serve.engine import LLMEngine, StepBudgetExhausted, generate
 from repro.serve.metrics import Metrics, RequestMetrics
 from repro.serve.params import SamplingParams
@@ -15,6 +16,7 @@ from repro.serve.spec import SpecConfig
 
 __all__ = [
     "CacheEntry", "StateCache",
+    "DisaggEngine", "SnapshotCorruption",
     "EngineCore", "LLMEngine", "StepBudgetExhausted", "generate",
     "Metrics", "RequestMetrics", "SamplingParams",
     "EnginePump",

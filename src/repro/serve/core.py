@@ -157,7 +157,8 @@ class EngineCore:
                                   if supports_seq_prefill(dc)
                                   and prefill_chunk_safe(dspec) else None)
         self._draft_step_fn = jax.jit(self._one_draft_step)
-        self.counters.update({"spec_rounds": 0, "drafted_tokens": 0,
+        self.counters.update({"spec_rounds": 0, "spec_dispatches": 0,
+                              "drafted_tokens": 0,
                               "accepted_tokens": 0,
                               "rolled_back_tokens": 0,
                               "draft_prefill_dispatches": 0})
@@ -463,6 +464,10 @@ class EngineCore:
             truncate=self._truncate)
         self.counters["decode_steps"] += 1
         self.counters["spec_rounds"] += 1
+        # the whole round -- k+1 draft steps, verify, acceptance,
+        # rollback -- is ONE _spec_fn invocation; this counter is the
+        # contract (test_spec_decode pins dispatches == rounds)
+        self.counters["spec_dispatches"] += 1
         drafts_h, n_h, extra_h = (
             np.asarray(a) for a in jax.device_get((drafts, n_acc, extra)))
         for i in live_slots:

@@ -1,0 +1,25 @@
+"""Disaggregated prefill/decode serving (``repro.serve.disagg``).
+
+Prefill is dispatch-bound, decode is memory-bound (the PR-3 roofline
+ceilings); running both in one process makes each request's prefill
+stall every other request's decode step.  This package splits them:
+prefill workers turn prompts into O(1) prefix-state snapshots
+(``transport``), decode workers admit the snapshots through their
+prefix cache (``worker``), a :class:`DisaggEngine` keeps the familiar
+single-engine API over the pools (``frontend``), and the roofline
+model sizes the knobs (``admission``).
+"""
+from repro.serve.disagg.admission import (AdmissionController,
+                                          RooflinePlan, plan_decode)
+from repro.serve.disagg.frontend import DisaggEngine, generate_disagg
+from repro.serve.disagg.transport import (SnapshotCorruption,
+                                          pack_snapshot, snapshot_equal,
+                                          unpack_snapshot)
+from repro.serve.disagg.worker import Worker, WorkerError, WorkerSpec
+
+__all__ = [
+    "AdmissionController", "DisaggEngine", "RooflinePlan",
+    "SnapshotCorruption", "Worker", "WorkerError", "WorkerSpec",
+    "generate_disagg", "pack_snapshot", "plan_decode", "snapshot_equal",
+    "unpack_snapshot",
+]

@@ -1,0 +1,215 @@
+"""Roofline-informed admission for disaggregated serving.
+
+Decode on a selective SSM is memory-bound (per the PR-3 roofline:
+every token re-reads the weights plus one O(1) state tree per
+sequence), while prefill is dispatch-bound (few big chunked dispatches
+whose wall clock is dominated by launch overhead at serving sizes).
+The two knobs that matter therefore fall straight out of
+``repro.dist.roofline``'s ceilings:
+
+* ``max_batch`` (decode workers) -- batching amortizes the weight read
+  across sequences, so decode throughput rises with B until the
+  compute ceiling crosses the memory ceiling; past that knee extra
+  slots only add latency.  :func:`plan_decode` solves for the knee
+  analytically (``2*N*B / peak == (W + B*S) / hbm_bw``).
+* ``prefill_chunk`` (prefill workers) -- a chunk is one dispatch; the
+  chunk is big enough exactly when its compute time covers the
+  per-dispatch launch overhead, so the prefill loop stops being
+  launch-bound.  :func:`plan_decode` picks the smallest power of two
+  that does.
+
+The static plan seeds the worker pools; the
+:class:`AdmissionController` then consumes the loadgen-style feedback
+the frontend already measures (per-role occupancy + queue depth) and
+nudges the prefill:decode worker *ratio*: a deep queue with idle
+decode slots means admissions are prefill-starved (shift a worker to
+prefill); saturated decode slots with an idle prefill pool means the
+opposite.  The controller only recommends -- the frontend/launcher
+decides when (or whether) to resize pools.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.dist import roofline
+
+# conservative per-dispatch launch overhead for the chunk sizing; real
+# values range ~10-100 us (XLA:CPU/TPU) -- callers override per part
+DISPATCH_OVERHEAD_S = 50e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflinePlan:
+    """One (arch, mesh) cell's admission limits and their provenance."""
+
+    max_batch: int
+    prefill_chunk: int
+    decode_step_s: float          # modeled step time AT max_batch
+    decode_tokens_per_s: float    # max_batch / decode_step_s
+    bottleneck: str               # at max_batch: "compute" | "memory"
+    n_params: int
+    weight_bytes: int
+    state_bytes_per_seq: int
+    terms: Dict[str, float]       # roofline_terms at max_batch
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["terms"] = {k: v for k, v in self.terms.items()
+                      if isinstance(v, (int, float, str))}
+        return d
+
+
+def _pow2_at_most(n: int) -> int:
+    return 1 << (max(1, n).bit_length() - 1)
+
+
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def plan_decode(cfg, *, n_params: Optional[int] = None,
+                weight_bytes: Optional[int] = None,
+                state_bytes_per_seq: Optional[int] = None,
+                quantized: bool = True, n_devices: int = 1,
+                peak_flops: float = roofline.PEAK_FLOPS,
+                hbm_bw: float = roofline.HBM_BW,
+                dispatch_overhead_s: float = DISPATCH_OVERHEAD_S,
+                max_batch_cap: int = 64,
+                max_chunk_cap: int = 1024) -> RooflinePlan:
+    """Pick ``max_batch``/``prefill_chunk`` from the decode ceilings.
+
+    ``n_params`` defaults to ``models.param_count(cfg)``;
+    ``weight_bytes`` to 1 byte/param when ``quantized`` (the int8
+    deployment this repo serves) else 4; ``state_bytes_per_seq`` to
+    the mamba-family recurrent tree (``n_layers * (d_inner * d_state +
+    (conv_width - 1) * d_inner)`` fp32 floats).  ``n_devices`` models a
+    data-parallel mesh slice: weights replicate, the batch splits, so
+    the per-chip memory term reads the full weights but only B/n
+    states.
+    """
+    if n_params is None:
+        from repro.models import param_count
+        n_params = param_count(cfg)
+    if weight_bytes is None:
+        weight_bytes = n_params * (1 if quantized else 4)
+    if state_bytes_per_seq is None:
+        di, ds, w = cfg.d_inner, cfg.d_state, cfg.conv_width
+        state_bytes_per_seq = cfg.n_layers * (di * ds + (w - 1) * di) * 4
+
+    def terms_at(batch: int) -> Dict:
+        per_chip = max(1, batch // n_devices) if n_devices > 1 else batch
+        cost = {"flops": 2.0 * n_params * per_chip,
+                "bytes accessed": float(weight_bytes
+                                        + per_chip * state_bytes_per_seq)}
+        return roofline.roofline_terms(cost, {"total": 0, "count": 0},
+                                       peak_flops=peak_flops,
+                                       hbm_bw=hbm_bw)
+
+    # the roofline knee: smallest B where the compute ceiling overtakes
+    # the memory ceiling -- 2*N*B/peak >= (W + B*S)/bw.  Past it the
+    # step slows linearly in B and batching stops paying.
+    denom = 2.0 * n_params / peak_flops - state_bytes_per_seq / hbm_bw
+    if denom <= 0:
+        # state reads dominate compute at ANY batch (tiny model): the
+        # memory term never crosses, so take the cap
+        knee = max_batch_cap
+    else:
+        knee = int(weight_bytes / hbm_bw / denom)
+    max_batch = _pow2_at_most(min(max(1, knee), max_batch_cap))
+    max_batch *= max(1, n_devices)        # mesh slice: B splits over n
+    max_batch = min(max_batch, max_batch_cap)
+
+    # prefill chunk: one dispatch computes 2*N*chunk flops; the chunk
+    # stops being launch-bound when that covers the dispatch overhead
+    need = dispatch_overhead_s * peak_flops / (2.0 * n_params)
+    prefill_chunk = min(_pow2_at_least(max(1, int(need))), max_chunk_cap)
+
+    t = terms_at(max_batch)
+    step_s = max(t["step_s"], 1e-12)
+    return RooflinePlan(
+        max_batch=max_batch, prefill_chunk=prefill_chunk,
+        decode_step_s=step_s,
+        decode_tokens_per_s=max_batch / step_s,
+        bottleneck=t["bottleneck"], n_params=int(n_params),
+        weight_bytes=int(weight_bytes),
+        state_bytes_per_seq=int(state_bytes_per_seq),
+        terms={k: t[k] for k in ("compute_s", "memory_s", "step_s",
+                                 "bottleneck", "arithmetic_intensity")})
+
+
+class AdmissionController:
+    """Occupancy/goodput feedback -> prefill:decode ratio nudges.
+
+    The frontend calls :meth:`observe` once per step with what it
+    already measures; :meth:`suggest_workers` returns the worker split
+    the evidence currently supports.  The rule is deliberately dumb
+    and hysteretic (a single EWMA per signal, one-step nudges) -- the
+    point is the *direction*, the static :class:`RooflinePlan` sets
+    the magnitudes.
+    """
+
+    def __init__(self, plan: RooflinePlan, *, prefill_workers: int,
+                 decode_workers: int, ewma: float = 0.2,
+                 high: float = 0.85, low: float = 0.25):
+        if prefill_workers < 1 or decode_workers < 1:
+            raise ValueError("need >= 1 worker per role")
+        if not 0 < ewma <= 1 or not 0 <= low < high <= 1:
+            raise ValueError(f"bad controller constants "
+                             f"(ewma={ewma}, low={low}, high={high})")
+        self.plan = plan
+        self.prefill_workers = prefill_workers
+        self.decode_workers = decode_workers
+        self._ewma = ewma
+        self._high, self._low = high, low
+        self.prefill_busy = 0.0       # EWMA, fraction of step wall time
+        self.decode_occupancy = 0.0   # EWMA, live / total slots
+        self.queue_pressure = 0.0     # EWMA, queued / total slots
+        self.observations = 0
+
+    def observe(self, *, queue_depth: int, prefill_busy: float,
+                decode_occupancy: float) -> None:
+        a = self._ewma
+        slots = max(1, self.decode_workers * self.plan.max_batch)
+        for name, x in (("prefill_busy", prefill_busy),
+                        ("decode_occupancy", decode_occupancy),
+                        ("queue_pressure", min(1.0, queue_depth / slots))):
+            setattr(self, name,
+                    (1 - a) * getattr(self, name) + a * float(x))
+        self.observations += 1
+
+    def suggest_workers(self) -> Dict[str, int]:
+        """The (prefill, decode) split the current EWMAs support.
+
+        Total worker count is preserved; a pool never drops below 1.
+        A saturated prefill pool feeding idle decode slots wants a
+        decode->prefill shift (admissions are prefill-starved); the
+        mirror image wants the opposite.  Anything else keeps the
+        current split.
+        """
+        p, d = self.prefill_workers, self.decode_workers
+        starved = (self.prefill_busy > self._high
+                   and self.queue_pressure > self._low
+                   and self.decode_occupancy < self._high)
+        flooded = (self.decode_occupancy > self._high
+                   and self.prefill_busy < self._low)
+        if starved and d > 1:
+            p, d = p + 1, d - 1
+        elif flooded and p > 1:
+            p, d = p - 1, d + 1
+        return {"prefill": p, "decode": d}
+
+    def to_json(self) -> Dict:
+        return {
+            "prefill_workers": self.prefill_workers,
+            "decode_workers": self.decode_workers,
+            "prefill_busy": self.prefill_busy,
+            "decode_occupancy": self.decode_occupancy,
+            "queue_pressure": self.queue_pressure,
+            "observations": self.observations,
+            "suggested": self.suggest_workers(),
+            "plan": self.plan.to_json(),
+        }

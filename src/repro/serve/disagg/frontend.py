@@ -1,0 +1,430 @@
+"""DisaggEngine: the single-engine surface over split worker pools.
+
+``DisaggEngine`` speaks the exact ``LLMEngine`` dialect --
+``add_request`` / ``cancel`` / ``step`` / ``has_unfinished`` / ``run``
+/ ``metrics_json``, plus the ``cfg`` / ``core`` / ``scheduler`` /
+``metrics`` views the loadgen runner and ``EnginePump`` read -- so
+``loadgen.run()`` and ``launch/serve.py`` accept one unchanged.  Under
+the surface each ``step()`` runs the disaggregated pipeline:
+
+1. **Admit**: pop queued requests while a decode worker has a free
+   slot.  Each prompt goes to a prefill worker (round-robin), comes
+   back as a packed prefix-state snapshot (``transport``), and is
+   shipped to the least-loaded decode worker, whose prefix cache turns
+   it into a zero-prefill seat.  One-token prompts have no prefix to
+   ship and go to a decode worker directly.
+2. **Decode**: step every decode worker with live requests and relay
+   its token/finish events into the frontend's streams and metrics --
+   the same stop/length/reentrant-cancel semantics as ``LLMEngine``
+   (the worker applies the finish rules; the frontend owns streams).
+3. **Observe**: feed queue depth and per-role occupancy to the
+   :class:`~repro.serve.disagg.admission.AdmissionController`.
+
+Determinism: token streams are bit-identical to a single-process
+``LLMEngine`` for greedy requests and for requests with an explicit
+``SamplingParams.seed`` (the slot PRNG key is then
+``PRNGKey(seed)`` in both worlds; loadgen traces always set per-event
+seeds).  Seed*less* sampled requests draw from
+``fold_in(base_key, admission_index)`` and the admission index depends
+on which worker a request lands on -- correct sampling, but not
+reproducible across topologies; pin seeds when you need replay.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.serve.disagg.admission import AdmissionController, \
+    RooflinePlan, plan_decode
+from repro.serve.disagg.worker import Worker, WorkerSpec
+from repro.serve.engine import StepBudgetExhausted
+from repro.serve.metrics import Metrics, REQUEST_CAP, evict_finished, \
+    stats_ms
+from repro.serve.params import SamplingParams
+from repro.serve.request import (FinishReason, Request, RequestOutput,
+                                 RequestState, RequestStatus,
+                                 RequestStream)
+
+_TRANSFER_SAMPLE_CAP = 4096
+
+
+class _CoreView:
+    """The ``engine.core`` attributes external callers read."""
+
+    def __init__(self, max_len: int, max_batch: int):
+        self.max_len = max_len
+        self.max_batch = max_batch
+
+
+class _SchedulerView:
+    """The ``engine.scheduler`` surface the loadgen runner reads."""
+
+    def __init__(self, owner: "DisaggEngine"):
+        self._owner = owner
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._owner._queue)
+
+    @property
+    def has_work(self) -> bool:
+        return self._owner.has_unfinished()
+
+    def outstanding(self) -> List[str]:
+        return ([st.request_id for st in self._owner._queue]
+                + [rid for rids in self._owner._assigned
+                   for rid in rids])
+
+
+class DisaggEngine:
+    """Disaggregated prefill/decode serving behind the LLMEngine API."""
+
+    def __init__(self, params, cfg: ModelConfig, *,
+                 prefill_workers: int = 1, decode_workers: int = 1,
+                 max_batch: Optional[int] = None, max_len: int = 2048,
+                 qctx=None, seed: int = 0,
+                 prefill_chunk: Optional[int] = None,
+                 mode: str = "thread", host_devices: int = 1,
+                 prefix_cache_mb: float = 64.0,
+                 plan: Optional[RooflinePlan] = None,
+                 clock=time.monotonic):
+        if prefill_workers < 1 or decode_workers < 1:
+            raise ValueError(
+                f"need >= 1 worker per role, got prefill="
+                f"{prefill_workers} decode={decode_workers}")
+        if plan is None:
+            plan = plan_decode(cfg)
+        # the plan models datacenter parts; clamp the derived knobs to
+        # the single-host defaults the rest of the repo uses unless the
+        # caller sized them explicitly
+        if max_batch is None:
+            max_batch = min(plan.max_batch, 8)
+        if prefill_chunk is None:
+            prefill_chunk = min(plan.prefill_chunk, 128)
+        self.plan = plan
+        self.controller = AdmissionController(
+            plan, prefill_workers=prefill_workers,
+            decode_workers=decode_workers)
+        self.mode = mode
+        self._cfg = cfg
+        self.max_batch = max_batch
+        self.core = _CoreView(max_len, max_batch * decode_workers)
+        self.scheduler = _SchedulerView(self)
+        self.metrics = Metrics(clock=clock)
+        self._clock = clock
+
+        def spec(role: str) -> WorkerSpec:
+            return WorkerSpec(role=role, cfg=cfg, params=params,
+                              qctx=qctx, seed=seed, max_len=max_len,
+                              prefill_chunk=prefill_chunk,
+                              max_batch=max_batch,
+                              prefix_cache_mb=prefix_cache_mb,
+                              host_devices=host_devices)
+
+        self._closed = False
+        self.prefill_pool: List[Worker] = []
+        self.decode_pool: List[Worker] = []
+        try:
+            for i in range(prefill_workers):
+                self.prefill_pool.append(Worker(
+                    spec("prefill"), mode=mode, name=f"prefill-{i}"))
+            for i in range(decode_workers):
+                self.decode_pool.append(Worker(
+                    spec("decode"), mode=mode, name=f"decode-{i}"))
+        except BaseException:
+            self.close()
+            raise
+        self._states: Dict[str, RequestState] = {}
+        self._queue: Deque[RequestState] = deque()
+        # rid -> decode worker index, and the inverse live sets (local
+        # mirrors; kept exact by the finish/cancel events, so admission
+        # never needs a worker round-trip to count free slots)
+        self._where: Dict[str, int] = {}
+        self._assigned: List[set] = [set()
+                                     for _ in range(decode_workers)]
+        self._next_prefill = 0          # round-robin cursor
+        # transport accounting
+        self.transfers = 0
+        self.transfer_bytes = 0
+        self.direct_admits = 0
+        self._transfer_s: Deque[float] = deque(
+            maxlen=_TRANSFER_SAMPLE_CAP)
+        self._t0: Optional[float] = None
+
+    # -- LLMEngine-compatible views ---------------------------------------
+    @property
+    def cfg(self) -> ModelConfig:
+        return self._cfg
+
+    # -- request lifecycle -------------------------------------------------
+    def add_request(self, prompt, params: Optional[SamplingParams] = None,
+                    *, request_id: Optional[str] = None,
+                    priority: int = 0, on_token=None) -> RequestState:
+        """Queue a request (same contract as ``LLMEngine.add_request``:
+        returns the live ``RequestState`` whose stream delivers tokens
+        incrementally)."""
+        if isinstance(prompt, Request):
+            if (params is not None or request_id is not None
+                    or priority != 0):
+                raise ValueError(
+                    "pass sampling params / request_id / priority on "
+                    "the Request itself when submitting a ready "
+                    "Request object")
+            req = prompt
+        else:
+            req = Request(list(prompt), params, request_id=request_id,
+                          priority=priority)
+        if req.request_id in self._states:
+            raise ValueError(f"duplicate request_id {req.request_id!r}")
+        state = RequestState(request=req)
+        state.stream = RequestStream(req.request_id, pump=self._pump,
+                                     on_token=on_token)
+        self._states[req.request_id] = state
+        self._queue.append(state)
+        state.arrival_time = self.metrics.on_submit(
+            req.request_id, len(req.prompt), req.priority)
+        return state
+
+    def request_state(self, request_id: str) -> RequestState:
+        return self._states[request_id]
+
+    def stream(self, request_id: str) -> RequestStream:
+        return self._states[request_id].stream
+
+    def cancel(self, request_id: str) -> bool:
+        """Cancel a queued or in-flight request (tokens so far are
+        kept); False for unknown/finished ids."""
+        state = self._states.get(request_id)
+        if state is None or state.finished:
+            return False
+        if state in self._queue:
+            self._queue.remove(state)
+        w = self._where.pop(request_id, None)
+        if w is not None:
+            self._assigned[w].discard(request_id)
+            self.decode_pool[w].cancel(request_id)
+        self._finish(state, FinishReason.CANCELLED)
+        return True
+
+    def _finish(self, state: RequestState,
+                reason: FinishReason) -> None:
+        state.status = RequestStatus.FINISHED
+        state.finish_reason = reason
+        state.request.done = True
+        state.finish_time = self.metrics.on_finish(state.request_id,
+                                                   reason.value)
+        state.stream.close()
+        evict_finished(self._states, REQUEST_CAP,
+                       lambda st: st.finished)
+
+    # -- stepping ----------------------------------------------------------
+    def _least_loaded(self) -> Optional[int]:
+        free = [(len(self._assigned[i]), i)
+                for i in range(len(self.decode_pool))
+                if len(self._assigned[i]) < self.max_batch]
+        return min(free)[1] if free else None
+
+    def _admit_one(self, state: RequestState) -> None:
+        w = self._least_loaded()
+        prompt = state.request.prompt
+        cached = 0
+        if len(prompt) >= 2:
+            pw = self.prefill_pool[self._next_prefill]
+            self._next_prefill = ((self._next_prefill + 1)
+                                  % len(self.prefill_pool))
+            out = pw.prefill(prompt)
+            cached = out["cached"]
+            t0 = self._clock()
+            self.decode_pool[w].admit(state.request_id, prompt,
+                                      state.request.params,
+                                      out["snapshot"])
+            self._transfer_s.append(self._clock() - t0)
+            self.transfers += 1
+            self.transfer_bytes += out["nbytes"]
+        else:
+            # one-token prompt: the snapshot would cover zero tokens
+            self.decode_pool[w].admit(state.request_id, prompt,
+                                      state.request.params, None)
+            self.direct_admits += 1
+        self._where[state.request_id] = w
+        self._assigned[w].add(state.request_id)
+        state.scheduled_time = self.metrics.on_schedule(
+            state.request_id, cached_tokens=cached)
+        state.status = RequestStatus.DECODING
+
+    def _deliver(self, state: RequestState, tok: int) -> bool:
+        """One token into a request's stream/metrics; False when a
+        reentrant cancel already finished it (token dropped)."""
+        if state.finished:
+            return False
+        state.request.output.append(tok)
+        t = self.metrics.on_token(state.request_id)
+        if state.first_token_time is None:
+            state.first_token_time = t
+        state.stream.put(tok)          # may reenter cancel()
+        return True
+
+    def step(self) -> List[RequestOutput]:
+        """Admit + decode one round across the worker pools.  With
+        nothing queued and nothing live this is a strict no-op, exactly
+        like ``LLMEngine.step``."""
+        if self._t0 is None:
+            self._t0 = self._clock()
+        while self._queue and self._least_loaded() is not None:
+            self._admit_one(self._queue.popleft())
+        live_total = sum(len(s) for s in self._assigned)
+        if live_total == 0:
+            return []
+        outputs: List[RequestOutput] = []
+        for w, worker in enumerate(self.decode_pool):
+            if not self._assigned[w]:
+                continue
+            for rid, toks, finished, reason in worker.step():
+                state = self._states.get(rid)
+                if state is None or state.finished:
+                    # cancelled reentrantly by an earlier stream
+                    # callback this very step: its tokens are dropped
+                    continue
+                emitted = [t for t in toks if self._deliver(state, t)]
+                if finished and not state.finished:
+                    self._assigned[w].discard(rid)
+                    self._where.pop(rid, None)
+                    self._finish(state, FinishReason(reason))
+                outputs.append(state.snapshot(tuple(emitted)))
+        self.metrics.on_step(len(self._queue), live_total,
+                             self.core.max_batch)
+        self.controller.observe(
+            queue_depth=len(self._queue),
+            prefill_busy=self._prefill_busy_fraction(),
+            decode_occupancy=live_total / self.core.max_batch)
+        return outputs
+
+    def has_unfinished(self) -> bool:
+        return bool(self._queue) or any(self._assigned)
+
+    def run(self, max_steps: int = 10_000, *,
+            on_exhaust: str = "raise") -> None:
+        """Step until drained (``LLMEngine.run`` semantics, including
+        :class:`StepBudgetExhausted` on a spent budget)."""
+        if on_exhaust not in ("raise", "warn"):
+            raise ValueError(f"on_exhaust must be 'raise' or 'warn', "
+                             f"got {on_exhaust!r}")
+        for _ in range(max_steps):
+            if not self.has_unfinished():
+                return
+            self.step()
+        if not self.has_unfinished():
+            return
+        self.metrics.run_budget_exhausted += 1
+        left = self.scheduler.outstanding()
+        msg = (f"run(max_steps={max_steps}) exhausted its step budget "
+               f"with {len(left)} request(s) unfinished")
+        if on_exhaust == "raise":
+            raise StepBudgetExhausted(msg)
+        import warnings
+        warnings.warn(msg, RuntimeWarning, stacklevel=2)
+
+    def _pump(self) -> bool:
+        if not self.has_unfinished():
+            return False
+        self.step()
+        return True
+
+    # -- metrics -----------------------------------------------------------
+    def _prefill_busy_fraction(self) -> float:
+        if self._t0 is None:
+            return 0.0
+        elapsed = max(self._clock() - self._t0, 1e-9)
+        busy = sum(w.call("stats")["busy_s"] for w in self.prefill_pool)
+        return min(1.0, busy / (elapsed * len(self.prefill_pool)))
+
+    def metrics_json(self) -> Dict:
+        """The frontend's own request metrics (the authoritative TTFT/
+        TPOT/queue numbers -- they include the transfer cost) with the
+        per-worker dispatch counters merged in, plus a ``disagg``
+        section: transfer bytes/latency, per-role occupancy, and the
+        admission controller's view."""
+        merged: Dict[str, int] = {}
+        pf_stats = [w.stats() for w in self.prefill_pool]
+        dc_stats = [w.stats() for w in self.decode_pool]
+        for s in pf_stats + dc_stats:
+            for k, v in s["counters"].items():
+                merged[k] = merged.get(k, 0) + int(v)
+        out = self.metrics.to_json(extra_counters=merged)
+        occ = list(self.metrics.occupancy_series)
+        out["disagg"] = {
+            "mode": self.mode,
+            "prefill": {
+                "workers": len(self.prefill_pool),
+                "requests": sum(s["requests"] for s in pf_stats),
+                "busy_s": sum(s["busy_s"] for s in pf_stats),
+                "occupancy": self._prefill_busy_fraction(),
+                "dispatches": sum(
+                    s["counters"].get("prefill_dispatches", 0)
+                    for s in pf_stats),
+                "cache": [s["cache"] for s in pf_stats],
+            },
+            "decode": {
+                "workers": len(self.decode_pool),
+                "slots_per_worker": self.max_batch,
+                "occupancy_mean": (sum(occ) / len(occ) if occ
+                                   else None),
+                "snapshot_restores": sum(
+                    s["counters"].get("prefix_restores", 0)
+                    for s in dc_stats),
+                "fallback_prefill_dispatches": sum(
+                    s["counters"].get("prefill_dispatches", 0)
+                    for s in dc_stats),
+                "per_worker_occupancy": [s["occupancy_mean"]
+                                         for s in dc_stats],
+            },
+            "transport": {
+                "transfers": self.transfers,
+                "bytes": self.transfer_bytes,
+                "direct_admits": self.direct_admits,
+                "latency_ms": stats_ms(list(self._transfer_s)),
+            },
+            "admission": self.controller.to_json(),
+        }
+        return out
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for w in getattr(self, "prefill_pool", []) + \
+                getattr(self, "decode_pool", []):
+            try:
+                w.close()
+            except Exception:       # pragma: no cover - best effort
+                pass
+
+    def __enter__(self) -> "DisaggEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def generate_disagg(params, cfg: ModelConfig,
+                    prompts: Sequence[Sequence[int]], *,
+                    max_new_tokens: int = 32, temperature: float = 0.0,
+                    qctx=None, max_len: int = 2048,
+                    prefill_workers: int = 1, decode_workers: int = 1,
+                    mode: str = "thread") -> List[List[int]]:
+    """Convenience batch generation through a DisaggEngine (the disagg
+    twin of ``repro.serve.engine.generate``)."""
+    if not prompts:
+        raise ValueError("prompts is empty: pass at least one prompt")
+    with DisaggEngine(params, cfg, max_batch=min(8, len(prompts)),
+                      max_len=max_len, qctx=qctx,
+                      prefill_workers=prefill_workers,
+                      decode_workers=decode_workers, mode=mode) as eng:
+        sp = SamplingParams(temperature=temperature,
+                            max_tokens=max_new_tokens)
+        states = [eng.add_request(list(p), sp) for p in prompts]
+        eng.run()
+        return [list(s.token_ids) for s in states]

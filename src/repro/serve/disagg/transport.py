@@ -1,0 +1,149 @@
+"""Snapshot transport: prefix-state trees <-> crc-checked wire bytes.
+
+The disaggregated serving split ships a finished prompt's decode state
+(SSM recurrent state, conv taps, position -- exactly the batch-1 tree
+``EngineCore.snapshot_slot`` produces and the PR-5 ``StateCache``
+stores) from a prefill worker to a decode worker.  This module is the
+wire format: one self-describing binary blob per snapshot.
+
+The layout reuses ``repro.train.checkpoint``'s key-path tree encoding
+(``tree-v1``: each leaf records its DictKey/SequenceKey path as a list
+of ``{"k": name}`` / ``{"i": index}`` steps) so the same code that
+rebuilds a checkpoint rebuilds a snapshot -- only the container
+differs: a checkpoint is a directory of ``.npy`` files, a snapshot is
+a single in-memory buffer::
+
+    magic  b"rpds1\\n"
+    u32    manifest length (little-endian)
+    bytes  manifest JSON  {"format": "snapshot-v1", "leaves": [
+               {"path": [...], "shape": [...], "dtype": "...",
+                "offset": ..., "nbytes": ..., "crc32": ...}, ...]}
+    bytes  concatenated C-order leaf buffers
+
+Every leaf carries a crc32 (same discipline as ``checkpoint.save``);
+``unpack_snapshot`` verifies all of them plus the header framing and
+raises :class:`SnapshotCorruption` on any mismatch, so a torn or
+bit-flipped transfer can never be restored into a slot.  Leaves come
+back as host numpy arrays in the stored dtype (int8 KV entries stay
+int8, packed w4 qdata stays packed) -- the receiving worker's
+``device_put`` happens at restore time, shared copy-on-write like any
+other cached snapshot.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from typing import Dict, List
+
+import numpy as np
+import jax
+
+from repro.train.checkpoint import _encode_keypath, _insert_at, _listify
+
+MAGIC = b"rpds1\n"
+FORMAT = "snapshot-v1"
+_LEN = struct.Struct("<I")
+
+
+class SnapshotCorruption(IOError):
+    """The wire bytes fail framing or crc verification."""
+
+
+def pack_snapshot(tree) -> bytes:
+    """Serialize a decode-state pytree into one self-describing blob.
+
+    Accepts device or host trees (leaves are pulled to host with one
+    ``device_get``); dict keys must be strings and tuple nodes come
+    back as lists, exactly like ``checkpoint.save_tree``.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(jax.device_get(tree))[0]
+    leaves: List[Dict] = []
+    bufs: List[bytes] = []
+    offset = 0
+    for keypath, leaf in flat:
+        # tobytes() serializes in C order whatever the input layout;
+        # no ascontiguousarray (it would promote 0-d leaves to (1,))
+        arr = np.asarray(leaf)
+        raw = arr.tobytes()
+        leaves.append({
+            "path": _encode_keypath(keypath),
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "offset": offset, "nbytes": len(raw),
+            "crc32": zlib.crc32(raw),
+        })
+        bufs.append(raw)
+        offset += len(raw)
+    manifest = json.dumps({"format": FORMAT,
+                           "leaves": leaves}).encode("utf-8")
+    return b"".join([MAGIC, _LEN.pack(len(manifest)), manifest] + bufs)
+
+
+def _manifest(data: bytes) -> Dict:
+    if not data.startswith(MAGIC):
+        raise SnapshotCorruption(
+            f"bad snapshot magic {data[:len(MAGIC)]!r} (want {MAGIC!r})")
+    hdr_end = len(MAGIC) + _LEN.size
+    if len(data) < hdr_end:
+        raise SnapshotCorruption("truncated snapshot header")
+    (mlen,) = _LEN.unpack(data[len(MAGIC):hdr_end])
+    if len(data) < hdr_end + mlen:
+        raise SnapshotCorruption("truncated snapshot manifest")
+    try:
+        manifest = json.loads(data[hdr_end:hdr_end + mlen])
+    except ValueError as e:
+        raise SnapshotCorruption(f"unreadable snapshot manifest: {e}")
+    if manifest.get("format") != FORMAT:
+        raise SnapshotCorruption(
+            f"unsupported snapshot format {manifest.get('format')!r} "
+            f"(this build reads {FORMAT!r})")
+    manifest["_payload"] = hdr_end + mlen
+    return manifest
+
+
+def unpack_snapshot(data: bytes):
+    """Rebuild the pytree from :func:`pack_snapshot` bytes.
+
+    Verifies the framing and every leaf's crc32; raises
+    :class:`SnapshotCorruption` rather than returning a damaged tree.
+    Leaves are host numpy arrays (dtype/shape as stored).
+    """
+    manifest = _manifest(data)
+    base = manifest.pop("_payload")
+    root: Dict = {}
+    empty = True
+    for meta in manifest["leaves"]:
+        lo = base + meta["offset"]
+        hi = lo + meta["nbytes"]
+        if hi > len(data):
+            raise SnapshotCorruption(
+                f"truncated snapshot payload (leaf at {meta['path']!r})")
+        raw = data[lo:hi]
+        if zlib.crc32(raw) != meta["crc32"]:
+            raise SnapshotCorruption(
+                f"snapshot corruption in leaf {meta['path']!r} "
+                "(crc32 mismatch)")
+        arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"]))
+        arr = arr.reshape(meta["shape"])
+        if not meta["path"]:
+            return arr                    # bare-leaf tree
+        _insert_at(root, meta["path"], arr)
+        empty = False
+    return _listify(root) if not empty else {}
+
+
+def snapshot_equal(a, b) -> bool:
+    """Structural + bitwise equality of two state trees (test helper;
+    also the cross-process restore-equality check)."""
+    fa = jax.tree_util.tree_flatten_with_path(a)
+    fb = jax.tree_util.tree_flatten_with_path(b)
+    if [p for p, _ in fa[0]] != [p for p, _ in fb[0]]:
+        return False
+    for (_, la), (_, lb) in zip(fa[0], fb[0]):
+        xa, xb = np.asarray(jax.device_get(la)), \
+            np.asarray(jax.device_get(lb))
+        if xa.dtype != xb.dtype or xa.shape != xb.shape:
+            return False
+        if xa.tobytes() != xb.tobytes():
+            return False
+    return True

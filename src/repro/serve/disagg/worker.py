@@ -1,0 +1,427 @@
+"""Disaggregated serving workers: one engine per role per process.
+
+A :class:`Worker` owns one engine -- an ``EngineCore`` for
+``role="prefill"``, a full ``LLMEngine`` (plus an ``EnginePump`` for
+standalone realtime use) for ``role="decode"`` -- and runs it either
+in-process (``mode="thread"``, the deterministic test mode) or in its
+own OS process (``mode="process"``, ``multiprocessing`` spawn).  The
+frontend (``repro.serve.disagg.frontend``) talks to both through the
+same synchronous command surface, so the process boundary is a
+deployment knob, not an API.
+
+Roles:
+
+* **prefill** -- a batch-1 ``EngineCore`` that turns a prompt into a
+  wire snapshot: seat the prompt (chunked sequence prefill), slice the
+  slot, ``transport.pack_snapshot`` it.  An optional local
+  ``StateCache`` dedupes shared prompt prefixes across requests, so a
+  hot system prompt is prefilled once per prefill worker, not once per
+  request.
+* **decode** -- a full ``LLMEngine`` with its prefix cache on.  The
+  cache IS the admission mechanism: :meth:`_DecodeServer.admit` unpacks
+  the snapshot, inserts it under ``prompt[:-1]``, and queues the
+  request; at the next ``step()`` the engine's own seat path full-hits
+  and the request reaches DECODING with zero prefill dispatches (the
+  ``prefix_restores`` counter is the proof).  If the entry was evicted
+  in between, the engine just prefills locally -- slower, never wrong.
+
+Process isolation: the child process is spawned fresh, and
+``_worker_main`` forces its device set (``XLA_FLAGS
+--xla_force_host_platform_device_count=N``) *before* the first jax
+device query, so each worker owns its own XLA backend -- the
+process-mode analogue of pinning a worker to a mesh slice.  Params and
+qctx cross the boundary once, as host numpy trees; after that the wire
+carries only prompts, sampling params, snapshots, and token events.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import threading
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.disagg.transport import pack_snapshot, unpack_snapshot
+
+ROLES = ("prefill", "decode")
+
+
+class WorkerError(RuntimeError):
+    """A worker call failed (remote traceback in the message) or the
+    worker process died / timed out."""
+
+
+def _host_tree(tree):
+    """Copy a params/qctx pytree to host numpy leaves so it pickles
+    across the spawn boundary.  Non-array leaves (QuantSpec, scalars,
+    strings) pass through untouched."""
+    import jax
+
+    def leaf(x):
+        if isinstance(x, (np.ndarray, np.generic)):
+            return x
+        if isinstance(x, jax.Array):
+            return np.asarray(jax.device_get(x))
+        return x
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+@dataclasses.dataclass
+class WorkerSpec:
+    """Everything a worker needs to build its engine (picklable once
+    ``params``/``qctx`` are host trees -- see :func:`_host_tree`)."""
+
+    role: str
+    cfg: Any                      # ModelConfig (plain dataclass)
+    params: Any
+    qctx: Any = None
+    seed: int = 0
+    max_len: int = 2048
+    prefill_chunk: int = 128
+    max_batch: int = 8            # decode role only
+    prefix_cache_mb: float = 64.0
+    # process mode: the child forces this many host devices before its
+    # first jax device query (its private "mesh slice"); <= 0 inherits
+    host_devices: int = 1
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(
+                f"role must be one of {ROLES}, got {self.role!r}")
+
+
+# -- in-worker servers ----------------------------------------------------
+
+class _PrefillServer:
+    """prompt tokens -> packed prefix-state snapshot (batch-1 core)."""
+
+    def __init__(self, spec: WorkerSpec):
+        from repro.serve.cache import StateCache
+        from repro.serve.core import EngineCore
+        self.core = EngineCore(spec.params, spec.cfg, max_batch=1,
+                               max_len=spec.max_len, qctx=spec.qctx,
+                               seed=spec.seed,
+                               prefill_chunk=spec.prefill_chunk,
+                               shard=False)
+        self.cache = None
+        if spec.prefix_cache_mb and spec.prefix_cache_mb > 0:
+            self.cache = StateCache(
+                byte_budget=int(spec.prefix_cache_mb * (1 << 20)),
+                to_host=self.core.tree_to_host,
+                to_device=self.core.tree_to_device)
+        self.requests = 0
+        self.busy_s = 0.0
+
+    def prefill(self, prompt: Sequence[int]) -> Dict:
+        """Run (the uncached part of) the prompt's prefill and return
+        the wire snapshot covering ``prompt[:-1]``."""
+        from repro.serve.params import SamplingParams
+        prompt = [int(t) for t in prompt]
+        if len(prompt) < 2:
+            raise ValueError(
+                "prefill worker needs >= 2 prompt tokens (a snapshot "
+                "covers prompt[:-1]); route shorter prompts directly "
+                "to a decode worker")
+        t0 = time.perf_counter()
+        entry = self.cache.lookup(prompt) if self.cache is not None \
+            else None
+        k = len(entry.tokens) if entry is not None else 0
+        on_prefix = None
+        if self.cache is not None:
+            def on_prefix(consumed, tree, _p=tuple(prompt)):
+                self.cache.insert(_p[:consumed], tree)
+        # sampling params are irrelevant here: the slot's state after
+        # the prompt does not depend on them, and this core never
+        # decodes -- greedy defaults keep the seat cheap
+        self.core.seat(0, prompt, SamplingParams(), 0,
+                       prefix_state=(entry.state if entry is not None
+                                     else None),
+                       prefix_len=k, on_prefix=on_prefix)
+        blob = pack_snapshot(self.core.snapshot_slot(0))
+        self.requests += 1
+        self.busy_s += time.perf_counter() - t0
+        return {"snapshot": blob, "cached": k, "nbytes": len(blob)}
+
+    def counters(self) -> Dict[str, int]:
+        return dict(self.core.counters)
+
+    def stats(self) -> Dict:
+        return {"requests": self.requests, "busy_s": self.busy_s,
+                "counters": dict(self.core.counters),
+                "cache": (self.cache.stats() if self.cache is not None
+                          else None)}
+
+    def close(self) -> None:
+        pass
+
+
+class _DecodeServer:
+    """Snapshot-admitted continuous-batching engine (full LLMEngine)."""
+
+    def __init__(self, spec: WorkerSpec):
+        from repro.serve.engine import LLMEngine
+        from repro.serve.pump import EnginePump
+        cache_mb = spec.prefix_cache_mb if spec.prefix_cache_mb else 64.0
+        if cache_mb <= 0:
+            raise ValueError(
+                "decode workers need prefix_cache_mb > 0: the prefix "
+                "cache is how shipped snapshots enter the engine")
+        self.engine = LLMEngine(spec.params, spec.cfg,
+                                max_batch=spec.max_batch,
+                                max_len=spec.max_len, qctx=spec.qctx,
+                                seed=spec.seed,
+                                prefill_chunk=spec.prefill_chunk,
+                                shard=False, prefix_cache_mb=cache_mb)
+        self.pump = EnginePump(self.engine)
+        self._pumping = False
+
+    def admit(self, request_id: str, prompt: Sequence[int], params,
+              snapshot: Optional[bytes]) -> bool:
+        """Queue a request, pre-seeding the prefix cache from the wire
+        snapshot so the seat path full-hits.  Returns True when the
+        snapshot entered the cache (False: duplicate prefix already
+        cached, or no snapshot -- either way the request is queued and
+        will decode correctly)."""
+        import jax
+        prompt = [int(t) for t in prompt]
+        inserted = False
+        if snapshot is not None:
+            tree = jax.device_put(unpack_snapshot(snapshot))
+            inserted = self.engine.prefix_cache.insert(prompt[:-1], tree)
+        if self._pumping:
+            self.pump.add_request(prompt, params, request_id=request_id)
+        else:
+            self.engine.add_request(prompt, params,
+                                    request_id=request_id)
+        return inserted
+
+    def step(self) -> List[Tuple[str, List[int], bool, Optional[str]]]:
+        """One engine step; token/finish events as picklable tuples
+        ``(request_id, new_tokens, finished, finish_reason)``."""
+        if self._pumping:
+            raise RuntimeError("step() conflicts with a running pump; "
+                               "stop_pump() first")
+        return [(o.request_id, [int(t) for t in o.new_token_ids],
+                 o.finished,
+                 o.finish_reason.value if o.finish_reason else None)
+                for o in self.engine.step()]
+
+    def cancel(self, request_id: str) -> bool:
+        if self._pumping:
+            return self.pump.cancel(request_id)
+        return self.engine.cancel(request_id)
+
+    def occupancy(self) -> Dict[str, int]:
+        return {"live": len(self.engine.scheduler.live()),
+                "queued": self.engine.scheduler.queue_depth,
+                "max_batch": self.engine.max_batch}
+
+    def has_unfinished(self) -> bool:
+        return self.engine.has_unfinished()
+
+    def counters(self) -> Dict[str, int]:
+        return dict(self.engine.core.counters)
+
+    def metrics(self) -> Dict:
+        if self._pumping:
+            return self.pump.metrics_json()
+        return self.engine.metrics_json()
+
+    def stats(self) -> Dict:
+        occ = list(self.engine.metrics.occupancy_series)
+        return {"occupancy_mean": (sum(occ) / len(occ) if occ else None),
+                "counters": dict(self.engine.core.counters),
+                "cache": self.engine.prefix_cache.stats()}
+
+    # standalone realtime use: the worker's own background stepper
+    # (the frontend's deterministic step() path never starts it)
+    def start_pump(self) -> None:
+        if not self._pumping:
+            self.pump.start()
+            self._pumping = True
+
+    def stop_pump(self) -> None:
+        if self._pumping:
+            self.pump.stop()
+            self._pumping = False
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        if self._pumping:
+            return self.pump.drain(timeout)
+        while self.engine.has_unfinished():
+            self.engine.step()
+        return True
+
+    def close(self) -> None:
+        self.stop_pump()
+
+
+def _make_server(spec: WorkerSpec):
+    return (_PrefillServer(spec) if spec.role == "prefill"
+            else _DecodeServer(spec))
+
+
+# -- process plumbing ------------------------------------------------------
+
+def _worker_main(conn, spec: WorkerSpec) -> None:  # pragma: no cover -
+    # child-process body: covered by the cross-process tests, invisible
+    # to the parent's coverage tracer
+    if spec.host_devices and spec.host_devices > 0:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{spec.host_devices}").strip()
+    try:
+        server = _make_server(spec)
+    except Exception as e:
+        conn.send(("err", f"{type(e).__name__}: {e}\n"
+                   f"{traceback.format_exc()}"))
+        conn.close()
+        return
+    conn.send(("ready", spec.role))
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break
+        if msg[0] == "close":
+            try:
+                server.close()
+            finally:
+                conn.send(("ok", None))
+            break
+        _, method, args, kw = msg
+        try:
+            conn.send(("ok", getattr(server, method)(*args, **kw)))
+        except Exception as e:
+            conn.send(("err", f"{type(e).__name__}: {e}\n"
+                       f"{traceback.format_exc()}"))
+    conn.close()
+
+
+class Worker:
+    """One role-pinned engine behind a synchronous command surface.
+
+    ``mode="thread"`` builds the server in-process (shared jax backend,
+    params shared by reference -- the deterministic test mode);
+    ``mode="process"`` spawns it into its own interpreter + XLA backend
+    with host-tree params.  All calls are serialized per worker.
+    """
+
+    _TIMEOUT_S = 600.0
+
+    def __init__(self, spec: WorkerSpec, *, mode: str = "thread",
+                 name: Optional[str] = None):
+        if mode not in ("thread", "process"):
+            raise ValueError(
+                f"mode must be 'thread' or 'process', got {mode!r}")
+        self.spec = spec
+        self.role = spec.role
+        self.mode = mode
+        self.name = name or f"{spec.role}-worker"
+        self._closed = False
+        self._lock = threading.Lock()
+        if mode == "thread":
+            self._server = _make_server(spec)
+            self._proc = None
+            self._conn = None
+        else:
+            spec = dataclasses.replace(spec,
+                                       params=_host_tree(spec.params),
+                                       qctx=_host_tree(spec.qctx))
+            ctx = mp.get_context("spawn")
+            self._conn, child = ctx.Pipe()
+            self._proc = ctx.Process(target=_worker_main,
+                                     args=(child, spec),
+                                     name=self.name, daemon=True)
+            self._proc.start()
+            child.close()
+            kind, detail = self._recv()
+            if kind != "ready":
+                self._proc.join(5)
+                raise WorkerError(
+                    f"{self.name} failed to start: {detail}")
+            self._server = None
+
+    def _recv(self):
+        if not self._conn.poll(self._TIMEOUT_S):
+            raise WorkerError(
+                f"{self.name} timed out after {self._TIMEOUT_S}s")
+        try:
+            return self._conn.recv()
+        except (EOFError, OSError) as e:
+            raise WorkerError(f"{self.name} died mid-call: {e}")
+
+    def call(self, method: str, *args, **kw):
+        """Invoke ``method`` on the worker's server, wherever it lives."""
+        with self._lock:
+            if self._closed:
+                raise WorkerError(f"{self.name} is closed")
+            if self._server is not None:
+                return getattr(self._server, method)(*args, **kw)
+            self._conn.send(("call", method, args, kw))
+            kind, value = self._recv()
+            if kind == "err":
+                raise WorkerError(f"{self.name}.{method} failed: {value}")
+            return value
+
+    # convenience wrappers (the frontend's whole vocabulary)
+    def prefill(self, prompt) -> Dict:
+        return self.call("prefill", prompt)
+
+    def admit(self, request_id, prompt, params, snapshot) -> bool:
+        return self.call("admit", request_id, prompt, params, snapshot)
+
+    def step(self) -> List[Tuple[str, List[int], bool, Optional[str]]]:
+        return self.call("step")
+
+    def cancel(self, request_id: str) -> bool:
+        return self.call("cancel", request_id)
+
+    def occupancy(self) -> Dict[str, int]:
+        return self.call("occupancy")
+
+    def has_unfinished(self) -> bool:
+        return self.call("has_unfinished")
+
+    def counters(self) -> Dict[str, int]:
+        return self.call("counters")
+
+    def stats(self) -> Dict:
+        return self.call("stats")
+
+    def metrics(self) -> Dict:
+        return self.call("metrics")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            if self._server is not None:
+                self._server.close()
+                return
+            try:
+                self._conn.send(("close",))
+                if self._conn.poll(10.0):
+                    self._conn.recv()
+            except (BrokenPipeError, OSError):
+                pass
+            finally:
+                self._conn.close()
+                self._proc.join(10)
+                if self._proc.is_alive():   # pragma: no cover - watchdog
+                    self._proc.terminate()
+                    self._proc.join(5)
+
+    def __enter__(self) -> "Worker":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

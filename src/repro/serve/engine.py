@@ -347,6 +347,13 @@ class LLMEngine:
                 "draft": ("self" if self.core._draft_is_self
                           else self.core.draft_cfg.name),
                 "rounds": c["spec_rounds"],
+                # one fused dispatch per round (k+1 draft steps +
+                # verify + acceptance + rollback); drafted-per-dispatch
+                # is the batching win over k separate draft dispatches
+                "dispatches": c["spec_dispatches"],
+                "drafted_tokens_per_dispatch": (
+                    c["drafted_tokens"] / c["spec_dispatches"]
+                    if c["spec_dispatches"] else None),
                 "drafted_tokens": c["drafted_tokens"],
                 "accepted_tokens": c["accepted_tokens"],
                 "rolled_back_tokens": c["rolled_back_tokens"],

@@ -1,0 +1,19 @@
+"""Spawn targets for the disagg cross-process tests.
+
+These live outside the test modules on purpose: a ``multiprocessing``
+spawn child re-imports the module that defines its target, and the
+test modules import the conftest-installed ``hypothesis`` fallback,
+which only exists in the parent interpreter.
+"""
+from repro.serve.disagg.transport import pack_snapshot, unpack_snapshot
+
+
+def child_roundtrip(conn, blob):
+    """Unpack in a fresh interpreter, repack, ship back."""
+    try:
+        tree = unpack_snapshot(blob)
+        conn.send(("ok", pack_snapshot(tree)))
+    except Exception as e:  # pragma: no cover - diagnostic path
+        conn.send(("err", f"{type(e).__name__}: {e}"))
+    finally:
+        conn.close()

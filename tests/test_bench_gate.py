@@ -13,8 +13,6 @@ pytestmark = pytest.mark.serve
 
 BASE = {
     "tpot_quamba_kernels_ms": 0.1,
-    # deprecated alias kept by the producer for one release
-    "tpot_quamba_kernels_us": 100.0,
     "prefill_chunked_tokens_per_s": 5000.0,
     "engine_prefill": {"prefill_dispatches": 8},
     "serve": {"ttft_ms": {"mean": 40.0, "p95": 80.0},
@@ -24,7 +22,10 @@ BASE = {
               "spec_decode": {"tokens_per_s": 200.0,
                               "acceptance_rate": 0.95},
               "loadgen": {"ttft_ms": {"p99": 500.0},
-                          "goodput_requests": 11}},
+                          "goodput_requests": 11},
+              "disagg": {"ttft_ms": {"p95": 120.0},
+                         "transfers": 16,
+                         "streams_match_single_process": True}},
 }
 
 
@@ -114,6 +115,46 @@ def test_tpot_rename_fallback_bridges_old_baselines():
     both = {"tpot_quamba_kernels_ms": 0.1,
             "tpot_quamba_kernels_us": 999999.0}
     assert gate(both, new, 0.25) == []
+
+
+def test_producer_alias_dropped_but_renames_bridge_kept():
+    """The one-release tpot_quamba_kernels_us producing alias is gone
+    from pr_speed; the gate's RENAMES bridge stays until archived
+    baselines roll over, so a post-removal artifact (no *_us key
+    anywhere) still gates against a pre-rename baseline."""
+    src_path = os.path.join(os.path.dirname(__file__), "..",
+                            "benchmarks", "pr_speed.py")
+    with open(src_path) as f:
+        src = f.read()
+    assert "tpot_quamba_kernels_us" not in src
+    assert "deprecations" not in src
+    assert RENAMES["tpot_quamba_kernels_ms"] == (
+        "tpot_quamba_kernels_us", 1e-3)
+    old = {"tpot_quamba_kernels_us": 100.0}          # pre-rename: 0.1 ms
+    assert gate(old, BASE, 0.25) == []               # same speed: clean
+    slow = dict(BASE, tpot_quamba_kernels_ms=0.2)    # +100% across it
+    failures = gate(old, slow, 0.25)
+    assert len(failures) == 1
+    assert "tpot_quamba_kernels_ms" in failures[0]
+
+
+def test_disagg_ttft_tail_gated():
+    """serve.disagg.ttft_ms.p95 is gated (lower is better) with the
+    loose small-sample 100% band; pre-disagg baselines skip."""
+    by_key = {k: (hb, ov) for k, hb, ov in GATED}
+    assert by_key["serve.disagg.ttft_ms.p95"] == (False, 1.0)
+    wobble = dict(BASE, serve=dict(
+        BASE["serve"], disagg={"ttft_ms": {"p95": 238.0}}))
+    assert gate(BASE, wobble, 0.25) == []            # <2x: wobble band
+    slow = dict(BASE, serve=dict(
+        BASE["serve"], disagg={"ttft_ms": {"p95": 300.0}}))
+    failures = gate(BASE, slow, 0.25)
+    assert len(failures) == 1
+    assert "serve.disagg.ttft_ms.p95" in failures[0]
+    pre = dict(BASE, serve={k: v for k, v in BASE["serve"].items()
+                            if k != "disagg"})
+    assert gate(pre, BASE, 0.25) == []               # old baseline
+    assert gate(BASE, pre, 0.25) == []               # rollback direction
 
 
 def test_spec_decode_throughput_gated():

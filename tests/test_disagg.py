@@ -1,0 +1,285 @@
+"""repro.serve.disagg: DisaggEngine behind the LLMEngine surface --
+bit-identical token streams vs the single-process engine under loadgen
+traces (sync + async pumps), cancellation semantics, worker balancing,
+disagg metrics, and cross-process worker pools."""
+import jax
+import pytest
+
+pytestmark = pytest.mark.serve
+
+from repro.configs import get_config, scale_down
+from repro.models import init_params
+from repro.serve import (EnginePump, LLMEngine, SamplingParams,
+                         StepBudgetExhausted)
+from repro.serve.disagg import (DisaggEngine, WorkerSpec,
+                                generate_disagg)
+from repro.serve.loadgen import (ClusteredArrivals, SLO,
+                                 SharedPrefixChat, RAGLongPrompt, Trace,
+                                 TraceEvent, WorkloadMix, run)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scale_down(get_config("mamba-130m"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# both worlds must share chunking/limits: chunked prefill is numerics
+_KNOBS = dict(max_batch=2, max_len=48, prefill_chunk=8)
+
+
+def _mono(cfg, params):
+    return LLMEngine(params, cfg, **_KNOBS)
+
+
+def _disagg(cfg, params, **kw):
+    kw = {**_KNOBS, **kw}
+    kw.setdefault("prefill_workers", 1)
+    kw.setdefault("decode_workers", 2)
+    return DisaggEngine(params, cfg, **kw)
+
+
+def _clustered_trace(vocab, n=10, seed=3, cancel_fraction=0.0):
+    mix = WorkloadMix(
+        [(2, SharedPrefixChat(n_prefixes=3, prefix_len=8,
+                              suffix_len=(1, 2), max_tokens=(2, 4))),
+         (1, RAGLongPrompt(prompt_len=(10, 14), max_tokens=(1, 3)))],
+        cancel_fraction=cancel_fraction)
+    return mix.build(n_requests=n, vocab_size=vocab, seed=seed,
+                     arrivals=ClusteredArrivals(n_clusters=3,
+                                                gap_s=0.5,
+                                                spread_s=0.001))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity vs the single-process engine
+# ---------------------------------------------------------------------------
+
+def test_disagg_streams_bit_identical_greedy_and_seeded(setup):
+    """The acceptance bar: greedy and seeded-sampled streams through
+    the split pipeline match LLMEngine token-for-token."""
+    cfg, params = setup
+    events = [
+        TraceEvent(t=0.000, request_id="greedy", prompt=(1, 2, 3, 4),
+                   max_tokens=5, seed=11),
+        TraceEvent(t=0.001, request_id="samp",
+                   prompt=(9, 8, 7, 6, 5, 4, 3), max_tokens=4,
+                   temperature=0.8, top_k=16, seed=12),
+        TraceEvent(t=0.002, request_id="one", prompt=(5,),
+                   max_tokens=3, seed=13),
+        TraceEvent(t=0.003, request_id="nuc",
+                   prompt=tuple(t % cfg.vocab_size
+                                for t in range(20, 32)),
+                   max_tokens=4, temperature=0.7, top_p=0.9, seed=14),
+    ]
+    tr = Trace(events=events, name="bitident")
+    rm = run(_mono(cfg, params), tr, pump="sync", time_scale=0.0,
+             warmup=False)
+    with _disagg(cfg, params) as eng:
+        rd = run(eng, tr, pump="sync", time_scale=0.0, warmup=False)
+        mj = eng.metrics_json()
+    assert rd["token_streams"] == rm["token_streams"]
+    # the one-token prompt had no prefix to ship
+    assert mj["disagg"]["transport"]["direct_admits"] == 1
+    assert mj["disagg"]["transport"]["transfers"] == 3
+    assert mj["disagg"]["decode"]["snapshot_restores"] == 3
+
+
+def test_disagg_clustered_burst_trace_matches_llmengine(setup):
+    cfg, params = setup
+    tr = _clustered_trace(cfg.vocab_size)
+    rm = run(_mono(cfg, params), tr, pump="sync", time_scale=0.0,
+             warmup=False)
+    with _disagg(cfg, params) as eng:
+        rd = run(eng, tr, pump="sync", time_scale=0.0, warmup=False)
+        mj = eng.metrics_json()
+    assert rd["token_streams"] == rm["token_streams"]
+    assert rd["completed"] == len(tr)
+    d = mj["disagg"]
+    assert d["transport"]["transfers"] == len(tr)
+    assert d["transport"]["bytes"] > 0
+    assert d["transport"]["latency_ms"]["n"] == len(tr)
+    assert d["decode"]["snapshot_restores"] == len(tr)
+    # snapshot restores made these zero-prefill seats on decode workers
+    assert d["decode"]["fallback_prefill_dispatches"] == 0
+    assert d["prefill"]["dispatches"] > 0
+
+
+def test_disagg_async_pump_matches_sync(setup):
+    """loadgen's async EnginePump drives a DisaggEngine unchanged and
+    explicit per-event seeds keep the streams timing-invariant."""
+    cfg, params = setup
+    tr = _clustered_trace(cfg.vocab_size, n=8, seed=5)
+    with _disagg(cfg, params) as es:
+        rs = run(es, tr, pump="sync", time_scale=0.0, warmup=False)
+    with _disagg(cfg, params) as ea:
+        ra = run(ea, tr, SLO(ttft_p99_ms=600_000.0), pump="async",
+                 time_scale=0.0, warmup=False)
+        assert ea.scheduler.outstanding() == []
+    assert ra["token_streams"] == rs["token_streams"]
+    assert ra["slo"]["ok"] is True
+    assert ra["steps"] > 0 and ra["occupancy_mean"] > 0
+
+
+def test_disagg_warmup_path_and_metrics_sections(setup):
+    cfg, params = setup
+    tr = _clustered_trace(cfg.vocab_size, n=4, seed=7)
+    with _disagg(cfg, params, decode_workers=1) as eng:
+        r = run(eng, tr, pump="sync", time_scale=0.0, warmup=True)
+        mj = eng.metrics_json()
+    assert r["completed"] == len(tr)
+    d = mj["disagg"]
+    assert d["mode"] == "thread"
+    assert d["prefill"]["workers"] == 1
+    assert d["decode"]["workers"] == 1
+    assert 0 < d["decode"]["occupancy_mean"] <= 1.0
+    assert d["admission"]["plan"]["max_batch"] >= 1
+    # worker dispatch counters merged into the engine section
+    assert mj["engine"]["prefill_dispatches"] > 0
+    assert mj["engine"]["decode_steps"] > 0
+    assert mj["engine"]["prefix_restores"] > 0
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+
+def test_disagg_cancellation_token_deterministic(setup):
+    cfg, params = setup
+    events = [
+        TraceEvent(t=0.000, request_id="keep0", prompt=(1, 2, 3, 4),
+                   max_tokens=6, seed=1),
+        TraceEvent(t=0.001, request_id="cq", prompt=(5, 6, 7),
+                   max_tokens=6, seed=2, cancel_after_tokens=0),
+        TraceEvent(t=0.002, request_id="cd", prompt=(8, 9, 10, 11),
+                   max_tokens=6, seed=3, cancel_after_tokens=2),
+        TraceEvent(t=0.003, request_id="keep1", prompt=(4, 3, 2, 1, 5),
+                   max_tokens=4, seed=4),
+    ]
+    tr = Trace(events=events, name="cancel")
+    rm = run(_mono(cfg, params), tr, pump="sync", time_scale=0.0,
+             warmup=False)
+    with _disagg(cfg, params) as eng:
+        rd = run(eng, tr, pump="sync", time_scale=0.0, warmup=False)
+        assert eng.scheduler.outstanding() == []
+        mj = eng.metrics_json()
+    assert rd["token_streams"] == rm["token_streams"]
+    assert rd["token_streams"]["cq"] == []
+    assert len(rd["token_streams"]["cd"]) == 2          # exactly k
+    assert rd["cancelled"] == 2 and rd["completed"] == 2
+    assert mj["engine"]["requests_cancelled"] == 2
+
+
+def test_disagg_cancel_api_edges(setup):
+    cfg, params = setup
+    with _disagg(cfg, params, decode_workers=1) as eng:
+        assert eng.cancel("nope") is False
+        st = eng.add_request([1, 2, 3], SamplingParams(max_tokens=4))
+        # still queued: cancelled before any worker saw it
+        assert eng.cancel(st.request_id) is True
+        assert st.finished and list(st.token_ids) == []
+        assert eng.cancel(st.request_id) is False       # already done
+        st2 = eng.add_request([1, 2, 3, 4],
+                              SamplingParams(max_tokens=8))
+        eng.step()                                      # admitted
+        assert eng.cancel(st2.request_id) is True
+        assert not eng.has_unfinished()
+        assert eng.step() == []                         # strict no-op
+
+
+# ---------------------------------------------------------------------------
+# engine surface / topology
+# ---------------------------------------------------------------------------
+
+def test_disagg_balances_across_decode_workers(setup):
+    cfg, params = setup
+    with _disagg(cfg, params, decode_workers=2) as eng:
+        sp = SamplingParams(max_tokens=3)
+        for i in range(4):
+            eng.add_request([1 + i, 2, 3, 4], sp)
+        eng.step()
+        # least-loaded placement: 4 admits over 2x2 slots fill both
+        assert [len(s) for s in eng._assigned] == [2, 2]
+        eng.run()
+        occ = eng.metrics_json()["disagg"]["decode"][
+            "per_worker_occupancy"]
+    assert len(occ) == 2 and all(o > 0 for o in occ)
+
+
+def test_disagg_rejects_bad_arguments(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="worker"):
+        DisaggEngine(None, setup[0], prefill_workers=0)
+    with _disagg(cfg, params, decode_workers=1) as eng:
+        eng.add_request([1, 2], SamplingParams(max_tokens=2),
+                        request_id="dup")
+        with pytest.raises(ValueError, match="duplicate"):
+            eng.add_request([3, 4], SamplingParams(max_tokens=2),
+                            request_id="dup")
+        eng.run()
+    with pytest.raises(ValueError, match="role"):
+        WorkerSpec(role="embed", cfg=cfg, params=params)
+
+
+def test_disagg_run_budget_exhaustion(setup):
+    cfg, params = setup
+    with _disagg(cfg, params, decode_workers=1) as eng:
+        st = eng.add_request([1, 2, 3], SamplingParams(max_tokens=6))
+        with pytest.raises(StepBudgetExhausted, match="unfinished"):
+            eng.run(max_steps=2)
+        assert not st.finished
+        eng.run()                   # resumes cleanly
+        assert st.finished and len(st.token_ids) == 6
+        assert eng.metrics_json()["engine"]["run_budget_exhausted"] == 1
+
+
+def test_disagg_stream_iteration_under_pump(setup):
+    cfg, params = setup
+    with _disagg(cfg, params, decode_workers=1) as eng:
+        with EnginePump(eng) as pump:
+            st = pump.add_request([1, 2, 3, 4],
+                                  SamplingParams(max_tokens=5))
+            toks = list(st.stream)
+            assert toks == list(st.token_ids) and len(toks) == 5
+        assert eng.scheduler.outstanding() == []
+
+
+def test_generate_disagg_matches_engine_generate(setup):
+    cfg, params = setup
+    prompts = [[1, 2, 3, 4], [9, 8, 7], [5]]
+    outs = generate_disagg(params, cfg, prompts, max_new_tokens=4,
+                           max_len=48)
+    assert len(outs) == 3 and all(len(o) == 4 for o in outs)
+    with pytest.raises(ValueError, match="empty"):
+        generate_disagg(params, cfg, [])
+
+
+# ---------------------------------------------------------------------------
+# process mode (real worker processes, spawn)
+# ---------------------------------------------------------------------------
+
+def test_disagg_process_mode_bit_identical(setup):
+    """1 prefill + 1 decode worker in their own spawned processes:
+    snapshots cross a real process boundary and the streams still match
+    the in-process engine exactly."""
+    cfg, params = setup
+    events = [
+        TraceEvent(t=0.000, request_id="g", prompt=(1, 2, 3, 4),
+                   max_tokens=3, seed=41),
+        TraceEvent(t=0.001, request_id="s", prompt=(7, 6, 5, 4, 3),
+                   max_tokens=3, temperature=0.9, top_k=8, seed=42),
+    ]
+    tr = Trace(events=events, name="proc")
+    rm = run(_mono(cfg, params), tr, pump="sync", time_scale=0.0,
+             warmup=False)
+    with _disagg(cfg, params, decode_workers=1,
+                 mode="process") as eng:
+        rd = run(eng, tr, pump="sync", time_scale=0.0, warmup=False)
+        mj = eng.metrics_json()
+    assert rd["token_streams"] == rm["token_streams"]
+    d = mj["disagg"]
+    assert d["mode"] == "process"
+    assert d["transport"]["transfers"] == 2
+    assert d["transport"]["bytes"] > 0
+    assert d["decode"]["snapshot_restores"] == 2

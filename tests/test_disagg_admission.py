@@ -1,0 +1,166 @@
+"""Roofline-informed admission (``repro.serve.disagg.admission``):
+the decode-knee batch solve, dispatch-overhead chunk sizing, mesh
+scaling, and the occupancy-feedback worker-ratio controller."""
+import pytest
+
+pytestmark = pytest.mark.serve
+
+from repro.configs import get_config, scale_down
+from repro.dist import roofline
+from repro.serve.disagg.admission import (AdmissionController,
+                                          DISPATCH_OVERHEAD_S,
+                                          RooflinePlan, plan_decode)
+
+
+def _plan(**kw):
+    """A mid-size synthetic part where the knee lands strictly inside
+    (1, cap): N=1e9 int8 params, 128 KiB state/seq, A100-ish ceilings."""
+    kw.setdefault("n_params", 1_000_000_000)
+    kw.setdefault("state_bytes_per_seq", 131_072)
+    kw.setdefault("peak_flops", 312e12)
+    kw.setdefault("hbm_bw", 2.0e12)
+    return plan_decode(None, **kw)
+
+
+# ---------------------------------------------------------------------------
+# plan_decode
+# ---------------------------------------------------------------------------
+
+def test_knee_solves_compute_equals_memory():
+    p = _plan()
+    # analytically: knee = (W/bw) / (2N/peak - S/bw); check the derived
+    # pow2 batch brackets it and the bottleneck flips across the knee
+    denom = 2 * p.n_params / 312e12 - p.state_bytes_per_seq / 2.0e12
+    knee = (p.weight_bytes / 2.0e12) / denom
+    assert 1 < p.max_batch <= knee < 2 * p.max_batch
+    below = plan_decode(None, n_params=p.n_params,
+                        state_bytes_per_seq=p.state_bytes_per_seq,
+                        peak_flops=312e12, hbm_bw=2.0e12,
+                        max_batch_cap=p.max_batch)
+    assert below.bottleneck == "memory"     # under the knee: bw-bound
+    assert p.decode_tokens_per_s == pytest.approx(
+        p.max_batch / p.decode_step_s)
+
+
+def test_tiny_model_state_dominates_and_caps():
+    """When per-seq state reads outweigh per-seq compute the memory
+    ceiling never crosses -- batch to the cap (the scale_down configs
+    land here)."""
+    p = plan_decode(None, n_params=1000, state_bytes_per_seq=10**6,
+                    max_batch_cap=16)
+    assert p.max_batch == 16 and p.bottleneck == "memory"
+    cfg = scale_down(get_config("mamba-130m"))
+    q = plan_decode(cfg)
+    assert q.max_batch == 64                # default cap
+    assert q.n_params > 0 and q.state_bytes_per_seq > 0
+
+
+def test_quantization_halves_nothing_but_weights():
+    """int8 weights shrink the weight-read term 4x, moving the knee
+    (and so max_batch) down -- state stays fp32 either way."""
+    kw = dict(n_params=1_000_000_000, state_bytes_per_seq=131_072,
+              peak_flops=312e12, hbm_bw=2.0e12, max_batch_cap=1024)
+    q = plan_decode(None, quantized=True, **kw)
+    f = plan_decode(None, quantized=False, **kw)
+    assert f.weight_bytes == 4 * q.weight_bytes
+    assert f.max_batch >= 2 * q.max_batch
+    assert q.state_bytes_per_seq == f.state_bytes_per_seq
+
+
+def test_mesh_slice_scales_batch_not_cap():
+    one = _plan(n_devices=1)
+    four = _plan(n_devices=4, max_batch_cap=1024)
+    assert four.max_batch == 4 * one.max_batch
+    capped = _plan(n_devices=4, max_batch_cap=one.max_batch)
+    assert capped.max_batch == one.max_batch    # cap binds last
+
+
+def test_prefill_chunk_covers_dispatch_overhead():
+    p = _plan()
+    chunk_s = 2.0 * p.n_params * p.prefill_chunk / 312e12
+    assert chunk_s >= DISPATCH_OVERHEAD_S           # not launch-bound
+    assert 2.0 * p.n_params * (p.prefill_chunk // 2) / 312e12 \
+        < DISPATCH_OVERHEAD_S                       # and minimal pow2
+    # heavier overhead -> bigger chunk; capped at max_chunk_cap
+    big = _plan(dispatch_overhead_s=100 * DISPATCH_OVERHEAD_S)
+    assert big.prefill_chunk > p.prefill_chunk
+    assert _plan(dispatch_overhead_s=10.0).prefill_chunk == 1024
+
+
+def test_plan_to_json_roundtrips_scalars():
+    d = _plan().to_json()
+    assert isinstance(d, dict)
+    for k in ("max_batch", "prefill_chunk", "decode_step_s",
+              "bottleneck", "terms"):
+        assert k in d
+    assert set(d["terms"]) >= {"compute_s", "memory_s", "step_s"}
+    # repo-wide roofline constants are the defaults when not overridden
+    default = plan_decode(None, n_params=10**9,
+                          state_bytes_per_seq=131_072)
+    assert default.terms["step_s"] > 0
+    assert roofline.PEAK_FLOPS > 0 and roofline.HBM_BW > 0
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController
+# ---------------------------------------------------------------------------
+
+def _controller(p=2, d=2):
+    return AdmissionController(_plan(), prefill_workers=p,
+                               decode_workers=d)
+
+
+def test_controller_validation():
+    with pytest.raises(ValueError, match="worker"):
+        AdmissionController(_plan(), prefill_workers=0,
+                            decode_workers=1)
+    with pytest.raises(ValueError, match="ewma"):
+        AdmissionController(_plan(), prefill_workers=1,
+                            decode_workers=1, ewma=0.0)
+    with pytest.raises(ValueError, match="low"):
+        AdmissionController(_plan(), prefill_workers=1,
+                            decode_workers=1, low=0.9, high=0.5)
+
+
+def test_starved_shifts_decode_to_prefill():
+    c = _controller()
+    for _ in range(50):     # saturated prefill, deep queue, idle decode
+        c.observe(queue_depth=10 ** 6, prefill_busy=1.0,
+                  decode_occupancy=0.1)
+    s = c.suggest_workers()
+    assert s == {"prefill": 3, "decode": 1}
+    assert s["prefill"] + s["decode"] == 4      # total preserved
+
+
+def test_flooded_shifts_prefill_to_decode():
+    c = _controller()
+    for _ in range(50):     # decode slots full, prefill pool idle
+        c.observe(queue_depth=0, prefill_busy=0.0,
+                  decode_occupancy=1.0)
+    assert c.suggest_workers() == {"prefill": 1, "decode": 3}
+
+
+def test_pools_never_drop_below_one():
+    c = _controller(p=1, d=1)
+    for _ in range(50):
+        c.observe(queue_depth=10 ** 6, prefill_busy=1.0,
+                  decode_occupancy=0.0)
+    assert c.suggest_workers() == {"prefill": 1, "decode": 1}
+    for _ in range(100):
+        c.observe(queue_depth=0, prefill_busy=0.0,
+                  decode_occupancy=1.0)
+    assert c.suggest_workers() == {"prefill": 1, "decode": 1}
+
+
+def test_balanced_load_keeps_split_and_ewma_converges():
+    c = _controller()
+    for _ in range(200):
+        c.observe(queue_depth=2, prefill_busy=0.5,
+                  decode_occupancy=0.6)
+    assert c.suggest_workers() == {"prefill": 2, "decode": 2}
+    assert c.prefill_busy == pytest.approx(0.5, abs=1e-6)
+    assert c.decode_occupancy == pytest.approx(0.6, abs=1e-6)
+    j = c.to_json()
+    assert j["observations"] == 200
+    assert j["suggested"] == {"prefill": 2, "decode": 2}
+    assert j["plan"]["max_batch"] == c.plan.max_batch

@@ -1,0 +1,158 @@
+"""Snapshot transport wire format (``repro.serve.disagg.transport``):
+round-trips over every ``SEQ_PREFILL_FAMILIES`` decode-state layout
+(odd shapes, int8 KV entries, packed-w4 qdata), crc-corruption and
+framing rejection, and cross-process restore equality through a
+spawned interpreter."""
+import multiprocessing as mp
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.serve
+
+from repro.configs import get_config, scale_down
+from repro.models import init_decode_state
+from repro.models.model import SEQ_PREFILL_FAMILIES
+from repro.quant.recipe import pack_int4
+from repro.serve.disagg import (SnapshotCorruption, pack_snapshot,
+                                snapshot_equal, unpack_snapshot)
+from repro.serve.disagg.transport import FORMAT, MAGIC
+
+# one representative arch per sequence-prefill family; the assertion
+# below keeps this table honest when families are added
+FAMILY_ARCHS = {
+    "mamba": "mamba-130m",
+    "dense": "granite-3-2b",
+    "moe": "granite-moe-1b-a400m",
+    "vlm": "paligemma-3b",
+    "hybrid": "zamba2-1.2b",
+}
+
+
+def test_family_table_covers_seq_prefill_families():
+    assert set(FAMILY_ARCHS) == set(SEQ_PREFILL_FAMILIES)
+
+
+def _fill(tree, seed=0):
+    """Replace every leaf with deterministic non-trivial values (zero
+    trees would hide byte-order/offset bugs)."""
+    rng = np.random.default_rng(seed)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.asarray(
+            rng.integers(-100, 100, np.shape(x)).astype(
+                np.asarray(x).dtype)), tree)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_roundtrip_every_family_decode_state(family):
+    cfg = scale_down(get_config(FAMILY_ARCHS[family]))
+    assert cfg.family == family
+    # int8 KV caches for the dense family (the Quamba deployment shape)
+    cache_dtype = jnp.int8 if family == "dense" else jnp.float32
+    state = _fill(init_decode_state(cfg, 1, 17, cache_dtype=cache_dtype))
+    blob = pack_snapshot(state)
+    back = unpack_snapshot(blob)
+    assert snapshot_equal(state, back)
+    # dtypes survive exactly: an int8 KV entry must come back int8,
+    # not promoted to float
+    if family == "dense":
+        flat = jax.tree_util.tree_flatten(back)[0]
+        assert any(np.asarray(leaf).dtype == np.int8 for leaf in flat)
+
+
+def test_roundtrip_packed_w4_qdata_tree():
+    """Packed int4 nibbles (odd leading dim -> padded pack) and their
+    scales ride the same wire format unchanged."""
+    w = jnp.asarray(np.random.default_rng(3).integers(
+        -8, 8, (7, 5)).astype(np.int8))
+    tree = {"qdata": pack_int4(w), "scale": jnp.float32(0.125),
+            "shape": jnp.asarray([7, 5], jnp.int32)}
+    back = unpack_snapshot(pack_snapshot(tree))
+    assert snapshot_equal(tree, back)
+    assert np.asarray(back["qdata"]).dtype == np.int8
+    assert back["qdata"].shape == (4, 5)       # ceil(7/2) rows packed
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 11), st.integers(0, 3),
+       st.sampled_from(["float32", "int8", "int32", "float16"]))
+def test_roundtrip_property_odd_shapes(a, b, depth, dtype):
+    """Property: any dict tree of odd-shaped leaves round-trips to
+    bitwise-equal host arrays."""
+    rng = np.random.default_rng(a * 100 + b * 10 + depth)
+    leaf = rng.integers(-120, 120, (a, b)).astype(dtype)
+    tree = {"pos": np.asarray([a], np.int32), "x": leaf}
+    for d in range(depth):
+        tree = {f"level{d}": tree,
+                "extra": rng.integers(0, 5, (b,)).astype(dtype)}
+    back = unpack_snapshot(pack_snapshot(tree))
+    assert snapshot_equal(tree, back)
+
+
+def test_roundtrip_scalar_and_empty_leaves():
+    tree = {"s": np.float32(2.5), "z": np.zeros((0, 4), np.float32),
+            "n": {"i": np.int32(-7)}}
+    back = unpack_snapshot(pack_snapshot(tree))
+    assert snapshot_equal(tree, back)
+    assert unpack_snapshot(pack_snapshot({})) == {}
+
+
+def test_crc_corruption_rejected():
+    state = _fill(init_decode_state(
+        scale_down(get_config("mamba-130m")), 1, 8))
+    blob = bytearray(pack_snapshot(state))
+    blob[-3] ^= 0x40                       # flip one payload bit
+    with pytest.raises(SnapshotCorruption, match="crc32"):
+        unpack_snapshot(bytes(blob))
+
+
+def test_manifest_corruption_rejected():
+    state = _fill(init_decode_state(
+        scale_down(get_config("mamba-130m")), 1, 8))
+    blob = pack_snapshot(state)
+    with pytest.raises(SnapshotCorruption, match="magic"):
+        unpack_snapshot(b"not-a-snapshot" + blob)
+    with pytest.raises(SnapshotCorruption, match="truncated"):
+        unpack_snapshot(blob[:len(blob) // 2])
+    with pytest.raises(SnapshotCorruption, match="truncated"):
+        unpack_snapshot(blob[:len(MAGIC) + 2])
+    # advertised format must match exactly (no silent cross-version
+    # reads between worker fleets)
+    evil = blob.replace(FORMAT.encode(), b"snapshot-v9", 1)
+    with pytest.raises(SnapshotCorruption, match="format"):
+        unpack_snapshot(evil)
+
+
+def test_snapshot_equal_detects_differences():
+    a = {"x": np.arange(6, dtype=np.float32)}
+    assert snapshot_equal(a, {"x": np.arange(6, dtype=np.float32)})
+    assert not snapshot_equal(a, {"x": np.arange(6, dtype=np.float64)})
+    assert not snapshot_equal(a, {"y": np.arange(6, dtype=np.float32)})
+    b = {"x": np.arange(6, dtype=np.float32)}
+    b["x"][0] = 99.0
+    assert not snapshot_equal(a, b)
+
+
+def test_cross_process_restore_equality():
+    """A snapshot packed here, unpacked in a spawned process, repacked
+    there, and unpacked back here is bitwise-identical -- the disagg
+    worker boundary cannot perturb state."""
+    cfg = scale_down(get_config("zamba2-1.2b"))
+    state = _fill(init_decode_state(cfg, 1, 9), seed=7)
+    blob = pack_snapshot(state)
+    from _disagg_proc_helpers import child_roundtrip
+    ctx = mp.get_context("spawn")
+    parent, child = ctx.Pipe()
+    proc = ctx.Process(target=child_roundtrip, args=(child, blob),
+                       daemon=True)
+    proc.start()
+    child.close()
+    assert parent.poll(300), "child never replied"
+    kind, payload = parent.recv()
+    proc.join(30)
+    assert kind == "ok", payload
+    assert payload == blob                 # byte-stable across repack
+    assert snapshot_equal(state, unpack_snapshot(payload))

@@ -333,6 +333,46 @@ def test_spec_metrics_json_section(setup):
         rm["generated"] / rm["spec_rounds"])
 
 
+def test_one_fused_dispatch_per_spec_round(setup):
+    """The batching contract: a round's k+1 draft steps, verify,
+    acceptance, and rollback are ONE ``_spec_fn`` dispatch -- never k
+    separate draft launches.  Pinned by counting actual invocations."""
+    cfg, params = setup
+    eng = LLMEngine(params, cfg, max_batch=2, max_len=96,
+                    prefill_chunk=8,
+                    speculative=SpecConfig(draft="self", k=3))
+    calls = 0
+    inner = eng.core._spec_fn
+
+    def counting(*a, **kw):
+        nonlocal calls
+        calls += 1
+        return inner(*a, **kw)
+
+    eng.core._spec_fn = counting
+    st = eng.add_request([1, 2, 3, 4], SamplingParams(max_tokens=9))
+    eng.run()
+    assert len(st.token_ids) == 9
+    c = eng.counters
+    assert calls == c["spec_rounds"] == c["spec_dispatches"] > 0
+    sd = eng.metrics_json()["spec_decode"]
+    assert sd["dispatches"] == c["spec_dispatches"]
+    # one live slot: exactly k drafted tokens ride each fused dispatch
+    assert sd["drafted_tokens_per_dispatch"] == pytest.approx(3.0)
+    # two live slots double the drafted tokens per dispatch, not the
+    # dispatch count per round
+    eng2 = LLMEngine(params, cfg, max_batch=2, max_len=96,
+                     prefill_chunk=8,
+                     speculative=SpecConfig(draft="self", k=3))
+    for i in range(2):
+        eng2.add_request([1 + i, 2, 3, 4],
+                         SamplingParams(max_tokens=8))
+    eng2.run()
+    sd2 = eng2.metrics_json()["spec_decode"]
+    assert sd2["dispatches"] == eng2.counters["spec_rounds"]
+    assert sd2["drafted_tokens_per_dispatch"] == pytest.approx(6.0)
+
+
 def test_vanilla_engine_has_no_spec_section(setup):
     cfg, params = setup
     _, eng = _streams(cfg, params, None, [[1, 2]],
