@@ -12,9 +12,11 @@ trace-driven open-loop load test (``serve.loadgen``: p99 TTFT,
 goodput, async-pump vs sync time-weighted occupancy, prefix-cache
 spill-tier counters), and the disaggregated prefill/decode workload
 (``serve.disagg``: p95 TTFT through split worker pools, snapshot
-transfer bytes/latency, stream-identity control).  The file
-carries a top-level ``run_meta`` provenance stamp (git commit,
-timestamp, jax backend/device) which the perf gate ignores.
+transfer bytes/latency, stream-identity control), and the QAT
+recovery table (``qat``: fp vs PTQ vs QAT-finetuned eval loss per
+sub-8-bit preset with the recovered fraction of the PTQ gap).  The
+file carries a top-level ``run_meta`` provenance stamp (git commit,
+timestamp, jax backend/device, seed) which the perf gate ignores.
 
 ``python -m benchmarks.run pr_speed`` writes the results to
 ``BENCH_PR.json`` at the repo root so future PRs have a baseline to
@@ -53,6 +55,10 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR.json")
 DECODE_BATCH = 8
 PREFILL_LEN = 256
 PREFILL_CHUNK = 128
+# One seed governs every stochastic stream in this file (the QAT data
+# order, its eval split); it is stamped into run_meta so an archived
+# BENCH_PR.json records exactly which streams produced its numbers.
+BENCH_SEED = int(os.environ.get("BENCH_SEED", "0"))
 
 
 def _run_meta() -> dict:
@@ -81,6 +87,7 @@ def _run_meta() -> dict:
         "device_kind": dev.device_kind,
         "device_count": jax.device_count(),
         "python": platform.python_version(),
+        "seed": BENCH_SEED,
     }
 
 
@@ -265,6 +272,60 @@ def _w4a8_section(cfg, params, stats, qm_int8, iters: int) -> dict:
         "matmul_weight_bytes_int8": b8,
         "matmul_weight_bytes_ratio": b4 / b8,
     }
+
+
+def _qat_section(cfg, params, stats, smoke: bool) -> dict:
+    """QAT recovery table (PR 10): eval loss of the fp model vs plain
+    PTQ vs a short QAT fine-tune, per sub-8-bit preset, with the
+    recovered fraction of the PTQ gap.  Every stochastic stream (train
+    order, eval split) derives from ``BENCH_SEED`` so the table is
+    reproducible bit-for-bit.  Under BENCH_SMOKE only the headline
+    ``quamba-w4a4`` row runs -- the skipped presets are recorded, not
+    silently dropped."""
+    from repro import api
+    from repro.data import batches, eval_batches
+    from repro.models import loss_fn
+    from repro.train.qat import QATConfig
+
+    all_presets = ("quamba-w4a8", "quamba-w4a8-se", "quamba-w4a4")
+    presets = ("quamba-w4a4",) if smoke else all_presets
+    steps = 10 if smoke else 40
+    ev = eval_batches(cfg.vocab_size, 8, common.SEQ, 2 if smoke else 4,
+                      seed=999 + BENCH_SEED)
+
+    def mean_loss(p, qctx=None):
+        f = jax.jit(lambda pp, b: loss_fn(pp, cfg, b, qctx=qctx)[0])
+        return float(np.mean([float(f(p, b)) for b in ev]))
+
+    section: dict = {
+        "fp_eval_loss": mean_loss(params),
+        "steps": steps,
+        "lr": 1e-3,
+        "seed": BENCH_SEED,
+        "skipped_presets": sorted(set(all_presets) - set(presets)),
+    }
+    for preset in presets:
+        quant = api.Quantizer(cfg, preset).with_stats(stats)
+        ptq = quant.quantize(params)
+        ptq_loss = mean_loss(ptq.params, ptq.qctx())
+        qm = quant.finetune(
+            params,
+            batches(cfg.vocab_size, 8, common.SEQ, seed=29 + BENCH_SEED,
+                    num_steps=steps),
+            qat=QATConfig(steps=steps, lr=1e-3, learn_scales=True))
+        qat_loss = mean_loss(qm.params, qm.qctx())
+        gap = ptq_loss - section["fp_eval_loss"]
+        key = preset.replace("quamba-", "").replace("-", "_")
+        section[key] = {
+            "preset": preset,
+            "ptq_eval_loss": ptq_loss,
+            "qat_eval_loss": qat_loss,
+            # w8-ish presets can have a near-zero PTQ gap; report a full
+            # recovery there instead of a 0/0 blow-up
+            "recovery": ((ptq_loss - qat_loss) / gap
+                         if gap > 1e-4 else 1.0),
+        }
+    return section
 
 
 def _serve_lifecycle(cfg, params, qctx, n_requests: int) -> dict:
@@ -511,6 +572,15 @@ def run() -> dict:
         f"{w4['matmul_weight_bytes_int4']} B vs int8 "
         f"{w4['matmul_weight_bytes_int8']} B "
         f"({w4['matmul_weight_bytes_ratio']:.3f}x)")
+
+    out["qat"] = _qat_section(cfg, params, stats, smoke)
+    q4 = out["qat"]["w4a4"]
+    common.emit(
+        "pr_speed/qat_w4a4_recovery", q4["recovery"],
+        f"eval loss fp {out['qat']['fp_eval_loss']:.3f} | ptq "
+        f"{q4['ptq_eval_loss']:.3f} | qat {q4['qat_eval_loss']:.3f} "
+        f"({q4['recovery']:.0%} of the PTQ gap recovered in "
+        f"{out['qat']['steps']} steps, seed {BENCH_SEED})")
 
     ch_tps, tok_tps = _prefill_rate(cfg, qm.params, qm.qctx(), p_iters)
     out["prefill_chunked_tokens_per_s"] = ch_tps

@@ -4,6 +4,8 @@
 #   ./scripts/check.sh tests/test_api.py   # extra pytest args pass through
 #   ./scripts/check.sh --lint              # ruff lint (the CI lint job)
 #   ./scripts/check.sh --tripwire          # skipped-test budget check
+#   ./scripts/check.sh --cov               # suite + quant/train coverage
+#                                          # floor (needs pytest-cov)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,6 +22,22 @@ fi
 if [[ "${1:-}" == "--tripwire" ]]; then
     shift
     exec python scripts/skip_tripwire.py "$@"
+fi
+
+if [[ "${1:-}" == "--cov" ]]; then
+    shift
+    # coverage floor on the quantization + training packages (the PR-10
+    # QAT surface); the floor is a tripwire against whole untested
+    # modules landing, not a per-line style gate
+    if ! python -c "import pytest_cov" >/dev/null 2>&1; then
+        echo "check.sh --cov: pytest-cov not installed; running plain" \
+             "suite (CI installs it from requirements-dev.txt)" >&2
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+            exec python -m pytest -x -q "$@"
+    fi
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q \
+        --cov=repro.quant --cov=repro.train \
+        --cov-report=term-missing --cov-fail-under=80 "$@"
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -39,6 +39,10 @@ scheduler's request-latency behavior):
     deterministic (packed int4 bytes / int8 bytes over the matmul
     weight sites, ~0.5 by construction), so it gets the zero-tolerance
     threshold: any growth means nibble packing silently stopped.
+  * ``qat.w4a4.recovery`` -- higher is better (fraction of the
+    ``quamba-w4a4`` PTQ eval-loss gap recovered by the QAT fine-tune;
+    loose 50% band: it guards the STE gradient path going dead, which
+    collapses recovery to ~0, not seed-to-seed training wobble).
   * ``serve.ttft_ms.p95`` and ``serve.loadgen.ttft_ms.p99`` -- lower is
     better (TAIL latency: the mean hides convoy effects and bursty
     queueing that the p95/p99 expose; the loadgen p99 comes from the
@@ -95,6 +99,13 @@ GATED = (
     # any growth means packing silently stopped happening.
     ("w4a8.tpot_kernels_ms", False, None),
     ("w4a8.matmul_weight_bytes_ratio", False, 0.0),
+    # QAT recovery on the headline sub-8-bit preset (PR 10): fraction
+    # of the w4a4 PTQ eval-loss gap closed by the short fine-tune.
+    # Higher is better; training noise across runners makes the ratio
+    # wobble, so the band is loose (50%) -- the failure it guards
+    # against is the STE gradient path silently breaking, which drops
+    # recovery to ~0, far below any seed-to-seed wobble.
+    ("qat.w4a4.recovery", True, 0.5),
 )
 
 # renamed metrics: canonical key -> (legacy key, scale legacy by).

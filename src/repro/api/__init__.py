@@ -17,8 +17,9 @@ site-map registry (``repro.quant.sitemap``); supporting a new family is a
 """
 from repro.api.artifact import QuantizedModel
 from repro.api.quantizer import Quantizer, calibration_stats, quantize
+from repro.train.qat import QATConfig
 
 load = QuantizedModel.load
 
-__all__ = ["QuantizedModel", "Quantizer", "calibration_stats", "quantize",
-           "load"]
+__all__ = ["QuantizedModel", "Quantizer", "QATConfig",
+           "calibration_stats", "quantize", "load"]

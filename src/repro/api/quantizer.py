@@ -103,6 +103,49 @@ class Quantizer:
         return QuantizedModel(params=new_params, qdata=qdata,
                               spec=self.spec, cfg=self.cfg)
 
+    # -- QAT recovery -----------------------------------------------------
+    def finetune(self, params: Dict, train_batches: Iterable,
+                 qat=None, eval_batches: Optional[Iterable] = None,
+                 log: Callable = print) -> QuantizedModel:
+        """Quantization-aware fine-tune, then quantize: recover the
+        accuracy a sub-8-bit spec loses under plain PTQ.
+
+        Runs ``repro.train.qat.finetune`` (straight-through estimators
+        over the qdq forward, calibration stats frozen) for
+        ``qat.steps`` steps on ``train_batches``, then applies the
+        standard PTQ quantization to the finetuned params -- with the
+        QAT-learned activation scales when ``qat.learn_scales`` -- so
+        the result is an ordinary :class:`QuantizedModel`: it saves,
+        loads, and runs on the kernels backend exactly like a
+        ``quantize()`` artifact.  The recovery history is attached as
+        ``qm.qat_history``.
+        """
+        if self.spec is None:
+            raise ValueError("finetune requires a quantized spec; "
+                             "fp models have nothing to recover")
+        if self._stats is None:
+            if self._batches is None:
+                raise ValueError(
+                    "no calibration data: call .calibrate(batches) or "
+                    ".with_stats(stats) before .finetune(params, ...)")
+            self._stats = calibration_stats(
+                self.cfg, params, self._batches,
+                max_batches=self._max_batches)
+            self._batches = None
+        from repro.quant.sitemap import quantize_with_site_map
+        from repro.train.qat import QATConfig, finetune as qat_finetune
+        qat = qat or QATConfig()
+        tuned, scales, history = qat_finetune(
+            params, self.cfg, self.spec, self._stats, train_batches,
+            qat=qat, eval_batches=eval_batches, log=log)
+        new_params, qdata = quantize_with_site_map(
+            tuned, self._stats, self.cfg, self.spec,
+            scale_overrides=scales)
+        qm = QuantizedModel(params=new_params, qdata=qdata,
+                            spec=self.spec, cfg=self.cfg)
+        qm.qat_history = history
+        return qm
+
 
 def quantize(params: Dict, cfg: ModelConfig, calib_batches: Iterable,
              spec: Union[str, QuantSpec, None] = "quamba",

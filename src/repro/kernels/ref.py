@@ -90,18 +90,29 @@ def selective_scan_seq_ref(u: jax.Array, dt: jax.Array, A: jax.Array,
               else jnp.zeros((bsz, d, n), dtype))
     a32 = A.astype(dtype)
 
+    d32 = D.astype(dtype)
+
     def step(h, t):
         u_t, dt_t, b_t, c_t = t
         dA = jnp.exp(dt_t.astype(dtype)[..., None] * a32)
         dBu = (dt_t.astype(dtype) * u_t.astype(dtype))[..., None] * \
             b_t.astype(dtype)[:, None, :]
         h_new = dA * h + dBu
-        y_t = jnp.einsum("bdn,bn->bd", h_new, c_t.astype(dtype))
+        # elementwise-multiply + sum, NOT einsum: the fused kernel reduces
+        # this way, and dot_general's accumulation order differs by ulps --
+        # enough to flip a requant tie in the backend-parity contract.
+        # The D*u skip term is added HERE, inside the step, for the same
+        # reason: the fused kernel adds it per step inside its compiled
+        # loop, and the compiler contracts the multiply-add there; adding
+        # it outside the scan (eagerly, two roundings) leaves the result
+        # an ulp off on roughly a quarter of the elements
+        y_t = jnp.sum(h_new * c_t.astype(dtype)[:, None, :], axis=-1) \
+            + d32 * u_t.astype(dtype)
         return h_new, y_t
 
     xs = tuple(jnp.moveaxis(t, 1, 0) for t in (u, dt, B, C))
     h_last, ys = jax.lax.scan(step, h_init, xs)
-    y = jnp.moveaxis(ys, 0, 1) + D.astype(dtype) * u.astype(dtype)
+    y = jnp.moveaxis(ys, 0, 1)
     if z is not None:
         y = y * jax.nn.silu(z.astype(dtype))
     return y, h_last
@@ -129,18 +140,23 @@ def selective_scan_states_ref(u: jax.Array, dt: jax.Array, A: jax.Array,
               else jnp.zeros((bsz, d, n), dtype))
     a32 = A.astype(dtype)
 
+    d32 = D.astype(dtype)
+
     def step(h, t):
         u_t, dt_t, b_t, c_t = t
         dA = jnp.exp(dt_t.astype(dtype)[..., None] * a32)
         dBu = (dt_t.astype(dtype) * u_t.astype(dtype))[..., None] * \
             b_t.astype(dtype)[:, None, :]
         h_new = dA * h + dBu
-        y_t = jnp.einsum("bdn,bn->bd", h_new, c_t.astype(dtype))
+        # same reduction form and in-step D*u placement as
+        # selective_scan_seq_ref / the fused kernel
+        y_t = jnp.sum(h_new * c_t.astype(dtype)[:, None, :], axis=-1) \
+            + d32 * u_t.astype(dtype)
         return h_new, (y_t, h_new)
 
     xs = tuple(jnp.moveaxis(t, 1, 0) for t in (u, dt, B, C))
     _, (ys, hs) = jax.lax.scan(step, h_init, xs)
-    y = jnp.moveaxis(ys, 0, 1) + D.astype(dtype) * u.astype(dtype)
+    y = jnp.moveaxis(ys, 0, 1)
     if z is not None:
         y = y * jax.nn.silu(z.astype(dtype))
     return y, jnp.moveaxis(hs, 0, 1)
@@ -179,7 +195,8 @@ def selective_scan_step_ref(h: jax.Array, u: jax.Array, dt: jax.Array,
     dBu = (dt.astype(dtype) * u.astype(dtype))[..., None] * \
         B.astype(dtype)[:, None, :]
     h_new = dA * h.astype(dtype) + dBu
-    y = jnp.einsum("bdn,bn->bd", h_new, C.astype(dtype))
+    # same reduction form as selective_scan_seq_ref / the fused kernel
+    y = jnp.sum(h_new * C.astype(dtype)[:, None, :], axis=-1)
     y = y + D.astype(dtype) * u.astype(dtype)
     if z is not None:
         y = y * jax.nn.silu(z.astype(dtype))

@@ -7,6 +7,12 @@ checkpointing and (optional) int8 gradient compression are all exercised.
 
   PYTHONPATH=src python -m repro.launch.train --arch mamba-130m \
       --small --steps 100 [--compress-grads] [--fsdp]
+
+``--qat-steps N`` appends a QAT recovery pass after the fp run: the
+trained params are calibrated, PTQ-quantized with ``--qat-preset``
+(default ``quamba-w4a4``), fine-tuned for N steps through the
+straight-through estimators, and the fp / PTQ / QAT eval losses plus
+the recovered fraction of the gap are printed.
 """
 from __future__ import annotations
 
@@ -37,6 +43,11 @@ def main() -> None:
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--qat-steps", type=int, default=0,
+                    help="run a QAT recovery pass for this many steps "
+                         "after fp training (0 = off)")
+    ap.add_argument("--qat-preset", default="quamba-w4a4")
+    ap.add_argument("--qat-lr", type=float, default=1e-3)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -67,6 +78,41 @@ def main() -> None:
         trainer = Trainer(loop, functools.partial(step), state)
         trainer.run(data(trainer.start_step))
     print(f"done; stragglers observed: {trainer.straggler_steps}")
+
+    if args.qat_steps > 0:
+        _qat_recovery(trainer.state["params"], cfg, args)
+
+
+def _qat_recovery(params, cfg, args) -> None:
+    """Calibrate -> PTQ -> QAT finetune the freshly-trained params and
+    report the recovered fraction of the PTQ eval-loss gap."""
+    from repro import api
+    from repro.data import eval_batches
+    from repro.models import loss_fn
+    from repro.train.qat import QATConfig
+
+    calib = list(batches(cfg.vocab_size, args.batch, args.seq, seed=23,
+                         num_steps=4))
+    ev = eval_batches(cfg.vocab_size, args.batch, args.seq, 4)
+    stats = api.calibration_stats(cfg, params, calib)
+    mean = lambda qm_or_none: sum(
+        float((loss_fn(params, cfg, b)[0] if qm_or_none is None
+               else qm_or_none.loss(b)[0])) for b in ev) / len(ev)
+
+    fp_loss = mean(None)
+    quant = api.Quantizer(cfg, args.qat_preset).with_stats(stats)
+    ptq_loss = mean(quant.quantize(params))
+    qat = QATConfig(steps=args.qat_steps, lr=args.qat_lr,
+                    learn_scales=True, log_every=10)
+    qm = quant.finetune(
+        params, batches(cfg.vocab_size, args.batch, args.seq, seed=29,
+                        num_steps=args.qat_steps), qat=qat)
+    qat_loss = mean(qm)
+    gap = ptq_loss - fp_loss
+    rec = (ptq_loss - qat_loss) / gap if gap > 1e-9 else float("nan")
+    print(f"[qat] preset={args.qat_preset} eval loss: fp {fp_loss:.4f} | "
+          f"ptq {ptq_loss:.4f} | qat {qat_loss:.4f} "
+          f"(recovered {rec:.1%} of the gap)")
 
 
 if __name__ == "__main__":

@@ -331,8 +331,17 @@ def mamba_block(p: Dict, cfg: ModelConfig, x: jax.Array, qctx=None
     dt, bmat, cmat = _ssm_params(p, cfg, xc, qctx, aux)
 
     a = _quant_A(p, qctx)
-    y = kref.selective_scan_ref(xc, dt, a, bmat, cmat,
-                                p["D"].astype(jnp.float32), z=z)
+    if is_quant(qctx):
+        # quant mode is the deployment oracle: evaluate the recurrence
+        # strictly in time order like the fused kernel (and per-token
+        # decode) so backend parity is not at the mercy of the parallel
+        # scan's float re-association flipping a requant tie downstream
+        y, _ = kref.selective_scan_seq_ref(xc, dt, a, bmat, cmat,
+                                           p["D"].astype(jnp.float32),
+                                           z=z)
+    else:
+        y = kref.selective_scan_ref(xc, dt, a, bmat, cmat,
+                                    p["D"].astype(jnp.float32), z=z)
     y = y.astype(x.dtype)
 
     # ---- output: Hadamard-rotated quantization (paper §4.2) ----

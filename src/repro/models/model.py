@@ -61,9 +61,32 @@ def _layer_qctx(qctx, sc, qw):
 
 
 def _scan_blocks(block_fn, x, layers_p, qctx, qname: str,
-                 remat: bool = False):
-    """Scan a stacked block over ``x``.  block_fn(lp, x, qctx)->(x, aux)."""
+                 remat: bool = False, unroll: bool = False):
+    """Scan a stacked block over ``x``.  block_fn(lp, x, qctx)->(x, aux).
+
+    unroll=True runs the stack as a Python loop instead of ``lax.scan``,
+    so each layer executes with plain op-by-op semantics.  The backend
+    parity harness relies on this: compiled as one scan-body computation,
+    XLA:CPU's fusion emitter contracts cross-op mul+add pairs into fmas
+    inside the qdq path's float segments, shifting them by an ulp
+    relative to the interpret-mode kernels (which are opaque to fusion)
+    -- enough to flip a downstream requant that lands on a rounding tie.
+    Op-by-op, the two backends are bit-identical.
+    """
     quant = qctx is not None and qctx.get("mode") == "quant"
+    if unroll:
+        n = jax.tree.leaves(layers_p)[0].shape[0]
+        auxs = []
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], layers_p)
+            if quant:
+                sc = jax.tree.map(lambda a: a[i], qctx["scales"][qname])
+                qw = jax.tree.map(lambda a: a[i], qctx["qw"][qname])
+                x, aux = block_fn(lp, x, _layer_qctx(qctx, sc, qw))
+            else:
+                x, aux = block_fn(lp, x, qctx)
+            auxs.append(aux)
+        return x, jax.tree.map(lambda *ys: jnp.stack(ys, 0), *auxs)
     if quant:
         xs = (layers_p, qctx["scales"][qname], qctx["qw"][qname])
 
@@ -198,11 +221,18 @@ def _hybrid_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
 # ---------------------------------------------------------------------------
 
 def forward(params: Dict, cfg: ModelConfig, batch: Dict, qctx=None,
-            remat: bool = False) -> Tuple[jax.Array, Dict]:
+            remat: bool = False, unroll: bool = False
+            ) -> Tuple[jax.Array, Dict]:
     """Returns (logits, aux).  batch keys by family:
       lm families: tokens (B, L)
       audio:       frames (B, Le, d) + tokens (B, Ld)
       vlm:         patches (B, P, d) + tokens (B, Lt)
+
+    unroll=True executes the homogeneous layer stack as a Python loop
+    (op-by-op semantics) instead of ``lax.scan`` -- see
+    :func:`_scan_blocks`; the backend-parity harness uses it to compare
+    kernels vs qdq without fusion-codegen noise.  Group-structured
+    families (hybrid, ssm) unroll their inner stacks only.
     """
     dt = _dtype(cfg)
     fam = cfg.family
@@ -215,14 +245,15 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, qctx=None,
                                                ).astype(dt)[None]
         enc, enc_aux = _scan_blocks(
             lambda lp, h, q: encoder_layer(lp, cfg, h, qctx=q),
-            frames, params["enc_layers"], qctx, "enc_layers", remat)
+            frames, params["enc_layers"], qctx, "enc_layers", remat,
+            unroll)
         enc = common.rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
         aux_out["enc_layers"] = enc_aux
         x = _embed(params, cfg, batch["tokens"], dt)
         x, dec_aux = _scan_blocks(
             lambda lp, h, q: decoder_layer(
                 lp, cfg, h, mask_kind="causal", enc_out=enc, qctx=q)[:2],
-            x, params["layers"], qctx, "layers", remat)
+            x, params["layers"], qctx, "layers", remat, unroll)
         aux_out["layers"] = dec_aux
         return _logits(params, cfg, x), aux_out
 
@@ -232,7 +263,7 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, qctx=None,
         x, aux = _scan_blocks(
             lambda lp, h, q: decoder_layer(
                 lp, cfg, h, mask_kind="prefix", qctx=q)[:2],
-            x, params["layers"], qctx, "layers", remat)
+            x, params["layers"], qctx, "layers", remat, unroll)
         aux_out["layers"] = aux
         logits = _logits(params, cfg, x[:, cfg.prefix_len:])
         return logits, aux_out
@@ -243,12 +274,12 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, qctx=None,
         x, aux = _scan_blocks(
             lambda lp, h, q: decoder_layer(
                 lp, cfg, h, mask_kind="causal", qctx=q)[:2],
-            x, params["layers"], qctx, "layers", remat)
+            x, params["layers"], qctx, "layers", remat, unroll)
         aux_out["layers"] = aux
     elif fam == "mamba":
         x, aux = _scan_blocks(
             lambda lp, h, q: mamba_block(lp, cfg, h, qctx=q),
-            x, params["layers"], qctx, "layers", remat)
+            x, params["layers"], qctx, "layers", remat, unroll)
         aux_out["layers"] = aux
     elif fam == "hybrid":
         groups, per, tail = _hybrid_layout(cfg)
@@ -267,14 +298,14 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, qctx=None,
                       "int8_compute": qctx.get("int8_compute", False)}
                 h, aux = _scan_blocks(
                     lambda q_lp, hh, q: mamba2_block(q_lp, cfg, hh, q),
-                    h, lp, gq, "g", remat)
+                    h, lp, gq, "g", remat, unroll)
                 shq = _layer_qctx(qctx, qctx["scales"]["shared"],
                                   qctx["qw"]["shared"])
             else:
                 lp = t
                 h, aux = _scan_blocks(
                     lambda q_lp, hh, q: mamba2_block(q_lp, cfg, hh, q),
-                    h, lp, qctx, "g", remat)
+                    h, lp, qctx, "g", remat, unroll)
                 shq = qctx
             h, aux_s, _ = decoder_layer(params["shared"], cfg, h,
                                         mask_kind="causal", qctx=shq)
@@ -295,7 +326,7 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, qctx=None,
                                              groups * per)}}
             x, aux_t = _scan_blocks(
                 lambda lp, hh, q: mamba2_block(lp, cfg, hh, q),
-                x, tp, tq, "t", remat)
+                x, tp, tq, "t", remat, unroll)
             aux_out["tail"] = aux_t
     elif fam == "ssm":
         groups, per = _xlstm_layout(cfg)
@@ -309,14 +340,14 @@ def forward(params: Dict, cfg: ModelConfig, batch: Dict, qctx=None,
                       "int8_compute": qctx.get("int8_compute", False)}
                 h, aux_m = _scan_blocks(
                     lambda lp, hh, q: mlstm_block(lp, cfg, hh, q),
-                    h, mp, gq, "g", remat)
+                    h, mp, gq, "g", remat, unroll)
                 h, aux_s = slstm_block(sp, cfg, h,
                                        _layer_qctx(qctx, ssc, sqw))
             else:
                 mp, sp = t
                 h, aux_m = _scan_blocks(
                     lambda lp, hh, q: mlstm_block(lp, cfg, hh, q),
-                    h, mp, qctx, "g", remat)
+                    h, mp, qctx, "g", remat, unroll)
                 h, aux_s = slstm_block(sp, cfg, h, qctx)
             return h, (aux_m, aux_s)
 

@@ -79,6 +79,18 @@ def backend_fallback_reason(spec: Optional[qrecipe.QuantSpec],
     return None
 
 
+# fallback reasons that already warned in this process: the warning is
+# one-shot per distinct reason (an engine calling qctx() per dispatch
+# must not spam thousands of identical warnings), but a *new* reason --
+# a different artifact with a different problem -- still surfaces.
+_WARNED_FALLBACK_REASONS: set = set()
+
+
+def reset_backend_fallback_warnings() -> None:
+    """Forget which fallback reasons have warned (test isolation hook)."""
+    _WARNED_FALLBACK_REASONS.clear()
+
+
 def make_qctx(spec: qrecipe.QuantSpec, qdata: Dict,
               int8_compute: bool = False,
               backend: Optional[str] = None) -> Dict:
@@ -87,13 +99,16 @@ def make_qctx(spec: qrecipe.QuantSpec, qdata: Dict,
     without re-quantizing -- the qdata is shared between the two.
 
     A kernels request the spec/qdata cannot honor emits one structured
-    ``BackendFallbackWarning`` naming the reason (never silent)."""
+    ``BackendFallbackWarning`` naming the reason -- never silent, and
+    never repeated: exactly one warning per process per distinct reason
+    (see ``reset_backend_fallback_warnings`` for test isolation)."""
     if backend is not None and backend != spec.backend:
         spec = dataclasses.replace(spec, backend=backend)
         spec.validate()
     if spec.backend == "kernels":
         reason = backend_fallback_reason(spec, qdata)
-        if reason is not None:
+        if reason is not None and reason not in _WARNED_FALLBACK_REASONS:
+            _WARNED_FALLBACK_REASONS.add(reason)
             warnings.warn(BackendFallbackWarning("kernels", "qdq", reason),
                           stacklevel=2)
     out = {"mode": "quant", "spec": spec, **qdata}
@@ -117,7 +132,11 @@ MAMBA_BLOCK = BlockSites(
     scales=(
         ScaleSite("in"),
         ScaleSite("conv_in"),
-        ScaleSite("x", percentile=PCT_X),
+        # PCT_X_UNLESS_QUAROT: quamba's percentile scale normally; under
+        # QuaRot (where the SSM input is quantized in the rotated domain
+        # via "x_had" and this site only feeds the x_proj alias below)
+        # the unrotated input keeps its minmax scale.
+        ScaleSite("x", percentile=PCT_X_UNLESS_QUAROT),
         ScaleSite("x_had"),
         ScaleSite("dt_low"),
         ScaleSite("dt"),
@@ -126,9 +145,13 @@ MAMBA_BLOCK = BlockSites(
         ScaleSite("y"),
         ScaleSite("y_had"),
         ComputedScale("A", fn="neg_exp_symmetric", param="A_log"),
-        # linear input scales (site name = weight name)
+        # linear input scales (site name = weight name).  x_proj MUST
+        # alias "x", not own a site: the kernel dataflow feeds the SSM
+        # input's int8 tensor straight into the x_proj matmul, so a
+        # separately learned x_proj scale (QAT) would requantize the qdq
+        # reference onto a different grid and break backend parity.
         AliasScale("in_proj", of="in"),
-        ScaleSite("x_proj", stat="x", percentile=PCT_X_UNLESS_QUAROT),
+        AliasScale("x_proj", of="x"),
         AliasScale("dt_proj", of="dt_low"),
         AliasScale("out_proj", of="y"),
         AliasScale("out_proj_had", of="y_had"),

@@ -61,12 +61,31 @@ def apply_int8(x: jax.Array, s_x: jax.Array, qlin: dict,
 
 def apply_qdq(x: jax.Array, s_x: Optional[jax.Array], qlin: dict,
               out_dtype=None) -> jax.Array:
-    """Fake-quant path: x is (optionally) fake-quantized, weights dequantized."""
+    """Fake-quant path on the integer grid.
+
+    The matmul runs on the *grid values* (int8/int4 magnitudes held in
+    float32) with the scales applied once afterwards -- products and
+    64-4096-term sums of |q| <= 127 integers are exact in float32
+    (< 2^24), so the result is bit-identical to ``apply_int8`` and the
+    int8/int4 kernels, not merely close: pre-scaling the operands
+    (``(s_x q_x) @ (s_w q_w)``) re-rounds every partial product, and the
+    accumulated ulp noise flips activation requants that land on
+    rounding ties, which is exactly what backend-parity tests compare.
+
+    The rounding is the straight-through variant so the op stays the QAT
+    training surrogate: since the scalar ``s_x`` factors out of the
+    matmul, ``(round_ste(clip(x/s)) @ q_w) * (s_x s_w)`` has exactly the
+    clipped-STE / LSQ gradients of ``qdq(x, s_x) @ (q_w s_w)``.
+    """
     out_dtype = out_dtype or x.dtype
+    w = _stored_qw(x, qlin).astype(jnp.float32)
+    s_w = qlin["s_w"].astype(jnp.float32)
     if s_x is not None:
-        x = Q.qdq(x, jnp.asarray(s_x, x.dtype))
-    w = _stored_qw(x, qlin).astype(x.dtype) * qlin["s_w"].astype(x.dtype)
-    y = x @ w
+        z = jnp.clip(x / jnp.asarray(s_x, x.dtype), Q.INT8_MIN, Q.INT8_MAX)
+        qx = Q.round_ste(z).astype(jnp.float32)
+        y = (qx @ w) * (jnp.asarray(s_x, jnp.float32) * s_w)
+    else:
+        y = x.astype(jnp.float32) @ (w * s_w)
     if "b" in qlin and qlin["b"] is not None:
-        y = y + qlin["b"].astype(x.dtype)
+        y = y + qlin["b"].astype(jnp.float32)
     return y.astype(out_dtype)

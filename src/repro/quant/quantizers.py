@@ -65,16 +65,40 @@ def dequantize(q: jax.Array, scale: jax.Array,
     return q.astype(dtype) * jnp.asarray(scale, dtype)
 
 
+def round_ste(x: jax.Array) -> jax.Array:
+    """round() whose gradient is the straight-through identity.
+
+    Forward value is exactly ``jnp.round(x)``; under ``jax.grad`` the
+    rounding is treated as the identity (d/dx = 1), which is the STE
+    surrogate QAT trains through."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
 def qdq(x: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:
-    """Fake-quant round trip in the input dtype."""
-    return dequantize(quantize(x, scale, bits), scale, x.dtype)
+    """Fake-quant round trip in the input dtype.
+
+    Composed as clip -> straight-through round -> rescale so the op is
+    differentiable: w.r.t. ``x`` the gradient is the clipped STE (1 inside
+    the representable range, 0 where the value saturates); w.r.t. ``scale``
+    it is the LSQ-style gradient (round(z) - z inside the range, +/-qmax at
+    saturation).  The forward value is bit-identical to the integer
+    round trip ``dequantize(quantize(x, s), s)`` -- for integer clip bounds
+    round(clip(z)) == clip(round(z)) -- so PTQ inference numerics are
+    unchanged and QAT can reuse this exact op as its training surrogate.
+    """
+    qmin = -(2.0 ** (bits - 1))
+    qmax = 2.0 ** (bits - 1) - 1.0
+    z = round_ste(jnp.clip(x / scale, qmin, qmax))
+    return z.astype(x.dtype) * jnp.asarray(scale, x.dtype)
 
 
 def qdq_asymmetric(x: jax.Array, scale: jax.Array, zp: jax.Array,
                    bits: int = 8) -> jax.Array:
+    """Asymmetric fake-quant, STE-composed like :func:`qdq` (``zp`` must be
+    integer-valued, as :func:`asymmetric_qparams` produces)."""
     qmin = -(2.0 ** (bits - 1))
     qmax = 2.0 ** (bits - 1) - 1.0
-    q = jnp.clip(jnp.round(x / scale) + zp, qmin, qmax)
+    q = jnp.clip(round_ste(x / scale) + zp, qmin, qmax)
     return ((q - zp) * scale).astype(x.dtype)
 
 

@@ -99,6 +99,11 @@ PRESETS = {
     "out_had": QuantSpec(method="out_had"),
     "quamba-w4a8": QuantSpec(method="quamba", w_bits=4),
     "quamba-w4a8-se": QuantSpec(method="quamba", w_bits=4, soft_edge=0.25),
+    # sub-8-bit activations: accuracy-credible only after a QAT recovery
+    # pass (Quantizer.finetune); runs on the qdq oracle -- the int8
+    # kernels cannot consume int4 activations (see fallback reasons)
+    "quamba-w4a4": QuantSpec(method="quamba", w_bits=4, a_bits=4,
+                             soft_edge=0.25),
     "quamba-pc": QuantSpec(method="quamba", per_channel_w=True),
     "quamba-kv8": QuantSpec(method="quamba", quantize_kv_cache=True),
     "quamba-kernels": QuantSpec(method="quamba", backend="kernels"),
@@ -227,7 +232,8 @@ def unpack_int4(packed: jax.Array, k: Optional[int] = None) -> jax.Array:
 
 def quantize_weight(w: jax.Array, spec: QuantSpec, *,
                     fold_hadamard_axis: Optional[int] = None,
-                    out_axis: int = -1, storage: str = "auto") -> dict:
+                    out_axis: int = -1, storage: str = "auto",
+                    ste: bool = False) -> dict:
     """Quantize one weight matrix to a QLinear params dict.
 
     fold_hadamard_axis: if set, fold the normalized Hadamard rotation into
@@ -239,6 +245,13 @@ def quantize_weight(w: jax.Array, spec: QuantSpec, *,
     contraction axis (``{"qw4", "s_w"}``, consumed by ``int4_matmul``);
     "int8" keeps one value per byte regardless of w_bits (conv taps, whose
     kernel reads int8 -- the values still sit on the 4-bit grid).
+
+    ste: QAT mode.  ``qw`` is returned as *float* grid values produced by
+    a straight-through round (same numbers an int cast would store, so the
+    dequantized forward is bit-identical), never nibble-packed, with the
+    scale frozen via stop_gradient -- so ``jax.grad`` of a loss through
+    ``qw * s_w`` reaches the underlying fp weight with the clipped-STE
+    surrogate.
     """
     if storage not in ("auto", "int8"):
         raise ValueError(f"storage must be 'auto' or 'int8', got {storage!r}")
@@ -249,6 +262,11 @@ def quantize_weight(w: jax.Array, spec: QuantSpec, *,
         s_w = Q.per_channel_scale(w, axis=axis, bits=spec.w_bits)
     else:
         s_w = Q.symmetric_scale(w, bits=spec.w_bits)
+    if ste:
+        s_w = jax.lax.stop_gradient(s_w)
+        qmax = 2.0 ** (spec.w_bits - 1) - 1.0
+        qw = Q.round_ste(jnp.clip(w / s_w, -qmax - 1.0, qmax))
+        return {"qw": qw, "s_w": jnp.asarray(s_w, jnp.float32)}
     qw = Q.quantize(w, s_w, bits=spec.w_bits)
     if storage == "auto" and spec.w_bits == 4:
         return {"qw4": pack_int4(qw), "s_w": jnp.asarray(s_w, jnp.float32)}
@@ -264,6 +282,17 @@ def dequantize_weight(qlin: dict, dtype=jnp.float32, k: Optional[int] = None
 # ---------------------------------------------------------------------------
 # activations
 # ---------------------------------------------------------------------------
+
+def soft_edge_blend(s_pct: jax.Array, s_amax: jax.Array,
+                    lam: float) -> jax.Array:
+    """Quamba-SE soft edge: blend the hard percentile clip toward the
+    calibrated abs-max, ``s = (1 - lam) * s_pct + lam * s_amax``.
+
+    lam=0 keeps the paper's percentile clip, lam=1 degenerates to plain
+    min-max; any lam in between lands between the two endpoint scales.
+    """
+    return (1.0 - lam) * s_pct + lam * s_amax
+
 
 def act_qdq(x: jax.Array, scale: jax.Array, spec: QuantSpec) -> jax.Array:
     """Static fake-quant of an activation with a calibrated scale."""

@@ -52,6 +52,9 @@ class ScaleSite:
     name: str
     stat: Optional[str] = None      # stats entry; defaults to ``name``
     percentile: str = PCT_NEVER
+    trainable: bool = True          # QAT: scale may be learned (and the
+    # fake-quant it feeds passes the clipped-STE gradient); False pins the
+    # calibrated value with stop_gradient under ste=True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +79,8 @@ class WeightSite:
     # weights ({"qw4", "s_w"}, fed to int4_matmul); "int8" pins one value
     # per byte (conv taps -- the int8 conv kernel reads them directly,
     # values still on the w_bits grid)
+    trainable: bool = True          # QAT: STE passes gradient to the fp
+    # weight; False freezes the site (stop_gradient) under ste=True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +100,7 @@ class QuantizedTensor:
 class FakeQuantSite:
     param: str
     per_expert: bool = False        # MoE: one scale per (layer, expert)
+    trainable: bool = True          # QAT: STE on the in-place fake-quant
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,15 +205,15 @@ def _percentile_of(spec: qrecipe.QuantSpec, mode: str) -> float:
 
 
 def _qw(w, spec, fold_had: bool = False, stacked: bool = True,
-        storage: str = "auto"):
+        storage: str = "auto", ste: bool = False):
     fn = lambda wi: qrecipe.quantize_weight(
         wi, spec, fold_hadamard_axis=0 if fold_had else None,
-        storage=storage)
+        storage=storage, ste=ste)
     return jax.vmap(fn)(w) if stacked else fn(w)
 
 
 def _wqdq(w, spec):
-    s = Q.symmetric_scale(w, bits=spec.w_bits)
+    s = jax.lax.stop_gradient(Q.symmetric_scale(w, bits=spec.w_bits))
     return Q.qdq(w, s, bits=spec.w_bits)
 
 
@@ -262,24 +268,38 @@ _SMOOTH_KINDS = {
 }
 
 
-def _scale_sites(sites, stats_l, spec, p, stacked, pre: Dict) -> Dict:
-    """Interpret a tuple of scale sites (aliases resolve last)."""
+def _scale_sites(sites, stats_l, spec, p, stacked, pre: Dict,
+                 ste: bool = False, overrides: Optional[Dict] = None
+                 ) -> Dict:
+    """Interpret a tuple of scale sites (aliases resolve last).
+
+    ``overrides`` maps base ScaleSite names to replacement scale arrays
+    (QAT-learned scales); SmoothFold-produced scales keep precedence.
+    Under ``ste`` a non-trainable site's scale is stop_gradiented so the
+    clipped-STE fake-quant it feeds cannot move it.
+    """
     scales: Dict = {}
     for site in sites:
         if isinstance(site, ScaleSite):
             if site.name in pre:            # produced by a SmoothFold
                 scales[site.name] = pre[site.name]
                 continue
-            stat = site.stat or site.name
-            pct = _percentile_of(spec, site.percentile)
-            s = stats_scale(stats_l[stat], percentile=pct)
-            if spec.soft_edge > 0.0 and pct < 100.0:
-                # Quamba-SE soft edge: instead of the hard percentile
-                # clip, pull the scale toward the observed abs-max so
-                # rare outliers are softly covered -- the accuracy hedge
-                # the W4A8 preset leans on (PAPERS.md, Quamba-SE).
-                s_max = stats_scale(stats_l[stat], percentile=100.0)
-                s = (1.0 - spec.soft_edge) * s + spec.soft_edge * s_max
+            if overrides is not None and site.name in overrides:
+                s = overrides[site.name]
+            else:
+                stat = site.stat or site.name
+                pct = _percentile_of(spec, site.percentile)
+                s = stats_scale(stats_l[stat], percentile=pct)
+                if spec.soft_edge > 0.0 and pct < 100.0:
+                    # Quamba-SE soft edge: instead of the hard percentile
+                    # clip, pull the scale toward the observed abs-max so
+                    # rare outliers are softly covered -- the accuracy
+                    # hedge the W4A8 preset leans on (PAPERS.md,
+                    # Quamba-SE).
+                    s_max = stats_scale(stats_l[stat], percentile=100.0)
+                    s = qrecipe.soft_edge_blend(s, s_max, spec.soft_edge)
+            if ste and not site.trainable:
+                s = jax.lax.stop_gradient(s)
             scales[site.name] = s
         elif isinstance(site, ComputedScale):
             fn = _COMPUTED_SCALE_FNS[site.fn]
@@ -291,13 +311,16 @@ def _scale_sites(sites, stats_l, spec, p, stacked, pre: Dict) -> Dict:
     return scales
 
 
-def _weight_sites(sites, p_src, spec, stacked) -> Dict:
+def _weight_sites(sites, p_src, spec, stacked, ste: bool = False) -> Dict:
     qw: Dict = {}
     for site in sites:
         param = site.param or site.name
-        qw[site.name] = _qw(p_src[param], spec,
-                            fold_had=site.fold_hadamard, stacked=stacked,
-                            storage=site.dtype)
+        lin = _qw(p_src[param], spec,
+                  fold_had=site.fold_hadamard, stacked=stacked,
+                  storage=site.dtype, ste=ste)
+        if ste and not site.trainable:
+            lin = jax.tree.map(jax.lax.stop_gradient, lin)
+        qw[site.name] = lin
     return qw
 
 
@@ -311,39 +334,49 @@ def _computed_sites(sites, p_src, scales, stacked) -> Dict:
     return qw
 
 
-def _fakequant_sites(sites, p_dst, spec, stacked) -> None:
+def _fakequant_sites(sites, p_dst, spec, stacked, ste: bool = False) -> None:
     for site in sites:
         w = p_dst[site.param]
         if site.per_expert:
-            p_dst[site.param] = _wqdq_experts(w, spec)
+            out = _wqdq_experts(w, spec)
         elif stacked:
-            p_dst[site.param] = jax.vmap(lambda wi: _wqdq(wi, spec))(w)
+            out = jax.vmap(lambda wi: _wqdq(wi, spec))(w)
         else:
-            p_dst[site.param] = _wqdq(w, spec)
+            out = _wqdq(w, spec)
+        if ste and not site.trainable:
+            out = jax.lax.stop_gradient(out)
+        p_dst[site.param] = out
 
 
 def quantize_block(block: BlockSites, params_l, stats_l,
-                   spec: qrecipe.QuantSpec, stacked: bool = True):
+                   spec: qrecipe.QuantSpec, stacked: bool = True,
+                   ste: bool = False, overrides: Optional[Dict] = None):
     """Interpret one block's sites -> (new params, scales, qw)."""
     p = dict(params_l)
+    ov = overrides or {}
     pre: Dict = {}
     if block.smooth is not None and spec.method == "smoothquant":
         pre = _SMOOTH_KINDS[block.smooth.kind](
             block.smooth, p, stats_l, spec, stacked)
 
-    scales = _scale_sites(block.scales, stats_l, spec, p, stacked, pre)
-    qw = _weight_sites(block.weights, p, spec, stacked)
+    scales = _scale_sites(block.scales, stats_l, spec, p, stacked, pre,
+                          ste=ste, overrides=ov)
+    qw = _weight_sites(block.weights, p, spec, stacked, ste=ste)
     qw.update(_computed_sites(block.computed, p, scales, stacked))
-    _fakequant_sites(block.fakequant, p, spec, stacked)
+    _fakequant_sites(block.fakequant, p, spec, stacked, ste=ste)
 
     for grp in block.groups:
         src = p[grp.subtree] if grp.subtree else p
+        grp_ov = ov.get(grp.name) if isinstance(ov.get(grp.name), dict) \
+            else None
         scales[grp.name] = _scale_sites(grp.scales, stats_l, spec, src,
-                                        stacked, pre)
-        qw[grp.name] = _weight_sites(grp.weights, src, spec, stacked)
+                                        stacked, pre, ste=ste,
+                                        overrides=grp_ov)
+        qw[grp.name] = _weight_sites(grp.weights, src, spec, stacked,
+                                     ste=ste)
         if grp.fakequant:
             sub = dict(src) if grp.subtree else p
-            _fakequant_sites(grp.fakequant, sub, spec, stacked)
+            _fakequant_sites(grp.fakequant, sub, spec, stacked, ste=ste)
             if grp.subtree:
                 p[grp.subtree] = sub
     return p, scales, qw
@@ -375,22 +408,25 @@ def _stats_for(section: Section, stats: Dict):
     raise ValueError(f"unknown stats_transform {kind!r}")
 
 
-def _quantize_section(section: Section, params, stats, spec):
+def _quantize_section(section: Section, params, stats, spec,
+                      ste: bool = False,
+                      overrides: Optional[Dict] = None):
     p_sec = params[section.params_key]
     s_sec = _stats_for(section, stats)
     if section.layout == "stacked":
         return quantize_block(section.block, p_sec, s_sec, spec,
-                              stacked=True)
+                              stacked=True, ste=ste, overrides=overrides)
     if section.layout == "single":
         return quantize_block(section.block, p_sec, s_sec, spec,
-                              stacked=False)
+                              stacked=False, ste=ste, overrides=overrides)
     if section.layout == "grouped":
         # (groups, per, ...) leading dims: flatten, quantize, reshape back
         g, per = jax.tree.leaves(p_sec)[0].shape[:2]
         flat = lambda t: jax.tree.map(
             lambda a: a.reshape((g * per,) + a.shape[2:]), t)
-        np_, sc, qw = quantize_block(section.block, flat(p_sec),
-                                     flat(s_sec), spec, stacked=True)
+        np_, sc, qw = quantize_block(
+            section.block, flat(p_sec), flat(s_sec), spec, stacked=True,
+            ste=ste, overrides=flat(overrides) if overrides else None)
         back = lambda t: jax.tree.map(
             lambda a: a.reshape((g, per) + a.shape[1:]), t)
         return back(np_), back(sc), back(qw)
@@ -403,8 +439,22 @@ def _quantize_section(section: Section, params, stats, spec):
 
 def quantize_with_site_map(params: Dict, stats: Dict, cfg,
                            spec: qrecipe.QuantSpec,
-                           site_map: Optional[SiteMap] = None):
-    """Walk the family's registered site map -> (new_params, qdata)."""
+                           site_map: Optional[SiteMap] = None, *,
+                           ste: bool = False,
+                           scale_overrides: Optional[Dict] = None):
+    """Walk the family's registered site map -> (new_params, qdata).
+
+    ste=True is the QAT mode: weight sites come back as float
+    straight-through grid values (bit-identical dequantized forward, but
+    ``jax.grad`` through the qdata reaches the fp weights), non-trainable
+    sites are frozen with stop_gradient, and nothing is nibble-packed.
+
+    ``scale_overrides`` replaces the stats-derived scale of base
+    ``ScaleSite`` entries (a sub-tree shaped like the ``"scales"`` output
+    restricted to those sites, see :func:`trainable_scale_overrides`);
+    aliases resolve against the overridden values, so QAT-learned scales
+    stay consistent across the sites that share them.
+    """
     spec.validate()
     if site_map is None:
         site_map = get_site_map(cfg.family)
@@ -412,8 +462,52 @@ def quantize_with_site_map(params: Dict, stats: Dict, cfg,
     scales: Dict = {}
     qw: Dict = {}
     for section in site_map.sections:
-        np_, sc, qws = _quantize_section(section, params, stats, spec)
+        ov = (scale_overrides or {}).get(section.params_key)
+        np_, sc, qws = _quantize_section(section, params, stats, spec,
+                                         ste=ste, overrides=ov)
         new_params[section.params_key] = np_
         scales[section.params_key] = sc
         qw[section.params_key] = qws
     return new_params, {"scales": scales, "qw": qw}
+
+
+# ---------------------------------------------------------------------------
+# QAT helpers: which scales are learnable, and their initial values
+# ---------------------------------------------------------------------------
+
+def _base_scale_names(block: BlockSites) -> Dict:
+    """{site_name: None, group_name: {site_name: None}} of the block's
+    trainable base ``ScaleSite`` entries (aliases and computed scales
+    resolve from these, so only these become QAT state)."""
+    names: Dict = {s.name: None for s in block.scales
+                   if isinstance(s, ScaleSite) and s.trainable}
+    for grp in block.groups:
+        sub = {s.name: None for s in grp.scales
+               if isinstance(s, ScaleSite) and s.trainable}
+        if sub:
+            names[grp.name] = sub
+    return names
+
+
+def trainable_scale_overrides(site_map: SiteMap, scales: Dict) -> Dict:
+    """Extract the learnable-scale pytree from a PTQ ``qdata["scales"]``.
+
+    The result mirrors the scales structure restricted to trainable base
+    ``ScaleSite`` entries; it is the initial value of the QAT scale state
+    and the ``scale_overrides`` accepted by :func:`quantize_with_site_map`.
+    """
+    out: Dict = {}
+    for section in site_map.sections:
+        sec_scales = scales.get(section.params_key, {})
+        sec_out: Dict = {}
+        for name, sub in _base_scale_names(section.block).items():
+            if isinstance(sub, dict):
+                grp_scales = sec_scales.get(name, {})
+                grp = {n: grp_scales[n] for n in sub if n in grp_scales}
+                if grp:
+                    sec_out[name] = grp
+            elif name in sec_scales:
+                sec_out[name] = sec_scales[name]
+        if sec_out:
+            out[section.params_key] = sec_out
+    return out

@@ -1,3 +1,4 @@
 from repro.train.step import init_train_state, make_train_step, make_eval_step
 from repro.train.loop import LoopConfig, Trainer, train
+from repro.train.qat import QATConfig, make_qat_loss, make_qat_step
 from repro.train import checkpoint

@@ -1,0 +1,175 @@
+"""QAT recovery pass for sub-8-bit presets (Q-S5 / QS4D style).
+
+PTQ holds accuracy at W8A8, but the W4A8/W4A4 presets leave an eval-loss
+gap.  This module closes it with a short quantization-aware fine-tune:
+every step re-quantizes the current fp params *differentiably* through
+the site map (``quantize_with_site_map(..., ste=True)``), runs the
+ordinary qdq forward on the result, and backpropagates through the
+straight-through estimators:
+
+  * weight sites      -- per-site STE: the fake-quant grid values are
+    float ``round_ste`` outputs, so the gradient reaches the fp weight
+    (1 inside the representable range, 0 where the value saturates)
+  * activation sites  -- clipped STE via the STE-composed ``Q.qdq``;
+    the calibrated scales stay frozen, or become learnable leaves when
+    ``QATConfig.learn_scales`` is set (LSQ-style scale gradients)
+
+The STE forward is numerically identical to quantizing the same params
+with the same scales and running the qdq oracle, so the loss being
+minimized *is* the deployed PTQ loss.  The pass drives the existing
+``Trainer`` loop (checkpointing, straggler watchdog, SIGTERM hooks all
+apply); the finetuned params then go through the standard PTQ quantize
+to produce a normal artifact -- int8/nibble-packed storage, kernels
+backend eligibility, save/load -- nothing downstream knows QAT happened.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro.optim.adamw import OptimConfig, adamw_update, init_opt_state
+from repro.quant.recipe import QuantSpec
+from repro.quant.sitemap import (get_site_map, quantize_with_site_map,
+                                 trainable_scale_overrides)
+from repro.train.loop import LoopConfig, Trainer
+
+
+@dataclasses.dataclass(frozen=True)
+class QATConfig:
+    """Schedule + knobs of one QAT recovery pass.
+
+    The defaults are a short recovery run: low LR (the model is already
+    trained; QAT nudges weights onto the quantization grid), brief
+    warmup, cosine decay to a fraction of the peak, no weight decay
+    (decay fights the calibrated grid alignment).
+    """
+
+    steps: int = 100
+    lr: float = 1e-4
+    warmup_frac: float = 0.1            # fraction of steps spent warming up
+    min_lr_ratio: float = 0.1
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    learn_scales: bool = False          # activation scales become leaves
+    log_every: int = 0                  # 0 = silent loop
+
+
+def qat_optim_config(qat: QATConfig) -> OptimConfig:
+    return OptimConfig(
+        lr=qat.lr,
+        warmup_steps=max(1, int(qat.warmup_frac * qat.steps)),
+        total_steps=qat.steps,
+        min_lr_ratio=qat.min_lr_ratio,
+        weight_decay=qat.weight_decay,
+        clip_norm=qat.clip_norm,
+    )
+
+
+def _qdq_spec(spec: QuantSpec) -> QuantSpec:
+    """QAT differentiates the qdq oracle; a kernels request is honored
+    only by the final artifact, never by the training forward."""
+    if spec.backend != "qdq":
+        return dataclasses.replace(spec, backend="qdq")
+    return spec
+
+
+def make_qat_loss(cfg: ModelConfig, spec: QuantSpec, stats) -> Callable:
+    """loss(trainable, batch) -> (loss, metrics), differentiable in
+    ``trainable = {"params": fp params[, "scales": learnable scales]}``."""
+    spec_qdq = _qdq_spec(spec)
+
+    def qat_loss(trainable: Dict, batch: Dict):
+        qparams, qdata = quantize_with_site_map(
+            trainable["params"], stats, cfg, spec_qdq,
+            ste=True, scale_overrides=trainable.get("scales"))
+        qctx = {"mode": "quant", "spec": spec_qdq, **qdata}
+        return loss_fn(qparams, cfg, batch, qctx=qctx)
+
+    return qat_loss
+
+
+def init_qat_state(params: Dict, cfg: ModelConfig, spec: QuantSpec,
+                   stats, qat: QATConfig) -> Dict:
+    """{"trainable": {"params"[, "scales"]}, "opt": AdamW moments}.
+
+    With ``learn_scales`` the calibrated PTQ scales of every trainable
+    base ``ScaleSite`` seed the learnable leaves; alias sites keep
+    resolving from them, so shared scales can never drift apart.
+    """
+    trainable: Dict = {"params": params}
+    if qat.learn_scales:
+        _, qdata = quantize_with_site_map(params, stats, cfg,
+                                          _qdq_spec(spec))
+        trainable["scales"] = trainable_scale_overrides(
+            get_site_map(cfg.family), qdata["scales"])
+    return {"trainable": trainable, "opt": init_opt_state(trainable)}
+
+
+def make_qat_step(cfg: ModelConfig, spec: QuantSpec, stats,
+                  qat: QATConfig) -> Callable:
+    """qat_step(state, batch) -> (state, metrics) for the Trainer loop."""
+    opt_cfg = qat_optim_config(qat)
+    grad_fn = jax.value_and_grad(make_qat_loss(cfg, spec, stats),
+                                 has_aux=True)
+
+    def qat_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        (_, metrics), grads = grad_fn(state["trainable"], batch)
+        trainable, opt, opt_metrics = adamw_update(
+            opt_cfg, state["trainable"], grads, state["opt"])
+        return ({"trainable": trainable, "opt": opt},
+                {**metrics, **opt_metrics})
+
+    return qat_step
+
+
+def qat_eval_loss(cfg: ModelConfig, spec: QuantSpec, stats,
+                  trainable: Dict, batches: Iterable[Dict]) -> float:
+    """Mean eval loss of the quantized forward at the current QAT state.
+
+    Uses the STE forward, which is numerically identical to PTQ-quantizing
+    ``trainable`` with the same stats/scales and running the qdq oracle --
+    so this is the deployed-loss tracker, not a proxy.
+    """
+    loss = jax.jit(lambda t, b: make_qat_loss(cfg, spec, stats)(t, b)[0])
+    vals = [float(loss(trainable, b)) for b in batches]
+    if not vals:
+        raise ValueError("qat_eval_loss needs at least one batch")
+    return sum(vals) / len(vals)
+
+
+def finetune(params: Dict, cfg: ModelConfig, spec: QuantSpec, stats,
+             train_batches: Iterable[Dict], qat: Optional[QATConfig] = None,
+             eval_batches: Optional[Iterable[Dict]] = None,
+             ckpt_dir: Optional[str] = None,
+             log: Callable = print) -> Tuple[Dict, Optional[Dict], Dict]:
+    """Run the QAT pass; returns (finetuned fp params, learned scales or
+    None, history dict).
+
+    The caller re-quantizes the returned params (passing the learned
+    scales as ``scale_overrides``) to obtain the recovered artifact --
+    ``repro.api.Quantizer.finetune`` does exactly that.
+    """
+    qat = qat or QATConfig()
+    state = init_qat_state(params, cfg, spec, stats, qat)
+    history: Dict = {"steps": qat.steps, "learn_scales": qat.learn_scales}
+    if eval_batches is not None:
+        eval_batches = list(eval_batches)
+        history["eval_loss_start"] = qat_eval_loss(
+            cfg, spec, stats, state["trainable"], eval_batches)
+    loop = LoopConfig(total_steps=qat.steps, ckpt_dir=ckpt_dir,
+                      log_every=qat.log_every)
+    trainer = Trainer(loop, make_qat_step(cfg, spec, stats, qat), state,
+                      log=log)
+    metrics = trainer.run(train_batches)
+    trainable = trainer.state["trainable"]
+    if metrics:
+        history["final_train_loss"] = float(metrics["loss"])
+    if eval_batches is not None:
+        history["eval_loss_final"] = qat_eval_loss(
+            cfg, spec, stats, trainable, eval_batches)
+    return trainable["params"], trainable.get("scales"), history

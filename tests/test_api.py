@@ -106,7 +106,13 @@ def _reference_mamba_quantize(params, stats, spec):
         s_x = _scale("x")
     else:
         s_in = _scale("in")
-        s_x = _scale("x", spec.x_percentile)
+        # one scale for the SSM input AND x_proj: the kernel dataflow
+        # feeds the SSM input's int8 tensor straight into the x_proj
+        # matmul, so the sites must share a grid.  Under quarot the SSM
+        # input is quantized in the rotated domain (x_had) and the
+        # unrotated tensor keeps its minmax scale.
+        s_x = _scale("x", 100.0 if spec.method == "quarot"
+                     else spec.x_percentile)
     scales = {
         "in": s_in, "conv_in": _scale("conv_in"), "x": s_x,
         "x_had": _scale("x_had"), "dt_low": _scale("dt_low"),
@@ -115,7 +121,7 @@ def _reference_mamba_quantize(params, stats, spec):
         "A": jax.vmap(lambda a: Q.symmetric_scale(-jnp.exp(a)))(
             p["A_log"]),
         "in_proj": s_in,
-        "x_proj": s_x if spec.method != "quarot" else _scale("x"),
+        "x_proj": s_x,
         "dt_proj": _scale("dt_low"), "out_proj": _scale("y"),
         "out_proj_had": _scale("y_had"),
     }

@@ -1,0 +1,169 @@
+"""BackendFallbackWarning contract (PR 10): exactly one structured
+warning per process per distinct reason (an engine calling ``qctx()``
+per dispatch must not spam identical warnings, but a *new* reason from
+a different artifact still surfaces), and ``describe()``'s effective
+backend always matches what actually executes."""
+import dataclasses
+import warnings
+
+import numpy as np
+import jax
+import pytest
+
+from repro import api
+from repro.configs import get_config, scale_down
+from repro.data import eval_batches
+from repro.kernels import ops as kops
+from repro.models import forward
+from repro.models import init_params
+from repro.models.quantize import (make_qctx,
+                                   reset_backend_fallback_warnings)
+from repro.quant.recipe import BackendFallbackWarning, get_spec
+
+jax.config.update("jax_platform_name", "cpu")
+
+MATMUL_OPS = ("int8_matmul", "int4_matmul")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = scale_down(get_config("mamba-130m"), layers=2, width=64,
+                     vocab=128)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calib = list(eval_batches(cfg.vocab_size, 2, 32, 2, seed=7))
+    stats = api.calibration_stats(cfg, params, calib)
+    return cfg, params, stats
+
+
+def _quantized(cfg, params, stats, preset, backend=None):
+    spec = get_spec(preset)
+    if backend is not None:
+        spec = dataclasses.replace(spec, backend=backend)
+    return api.Quantizer(cfg, spec).with_stats(stats).quantize(params)
+
+
+def _count_matmuls(monkeypatch):
+    counts = {name: 0 for name in MATMUL_OPS}
+    for name in MATMUL_OPS:
+        orig = getattr(kops, name)
+
+        def wrap(*a, __o=orig, __n=name, **kw):
+            counts[__n] += 1
+            return __o(*a, **kw)
+
+        monkeypatch.setattr(kops, name, wrap)
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# once-per-process-per-reason
+# ---------------------------------------------------------------------------
+
+def test_exactly_one_warning_per_reason(setup):
+    cfg, params, stats = setup
+    qm = _quantized(cfg, params, stats, "quamba-w4a4", backend="kernels")
+    reset_backend_fallback_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(5):                   # per-dispatch qctx() calls
+            make_qctx(qm.spec, qm.qdata)
+    assert len(rec) == 1, [str(r.message) for r in rec]
+    w = rec[0].message
+    assert isinstance(w, BackendFallbackWarning)
+    assert w.requested == "kernels" and w.effective == "qdq"
+    assert "a_bits=4" in w.reason
+    # the artifact's describe() names the same reason
+    d = qm.describe()
+    assert d["effective_backend"] == "qdq"
+    assert d["backend_fallback_reason"] == w.reason
+
+
+def test_new_reason_still_warns_after_earlier_one(setup):
+    cfg, params, stats = setup
+    qm_a4 = _quantized(cfg, params, stats, "quamba-w4a4",
+                       backend="kernels")
+    qm_rot = _quantized(cfg, params, stats, "quarot", backend="kernels")
+    reset_backend_fallback_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        make_qctx(qm_a4.spec, qm_a4.qdata)   # reason 1: a_bits=4
+        make_qctx(qm_a4.spec, qm_a4.qdata)   # repeat: silent
+        make_qctx(qm_rot.spec, qm_rot.qdata)  # reason 2: quarot
+        make_qctx(qm_rot.spec, qm_rot.qdata)  # repeat: silent
+    reasons = [r.message.reason for r in rec]
+    assert len(reasons) == 2, reasons
+    assert "a_bits=4" in reasons[0] and "quarot" in reasons[1]
+
+
+def test_reset_hook_rearms_the_warning(setup):
+    cfg, params, stats = setup
+    qm = _quantized(cfg, params, stats, "quamba-w4a4", backend="kernels")
+    reset_backend_fallback_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        make_qctx(qm.spec, qm.qdata)
+        reset_backend_fallback_warnings()
+        make_qctx(qm.spec, qm.qdata)
+    assert len(rec) == 2
+
+
+def test_honored_kernels_request_never_warns(setup):
+    cfg, params, stats = setup
+    qm = _quantized(cfg, params, stats, "quamba-kernels")
+    reset_backend_fallback_warnings()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", BackendFallbackWarning)
+        qm.qctx()
+        qm.qctx(backend="qdq")               # an explicit qdq request
+        _quantized(cfg, params, stats, "quamba").qctx()
+
+
+# ---------------------------------------------------------------------------
+# describe()'s effective backend == what executed
+# ---------------------------------------------------------------------------
+
+def _run_forward(cfg, qm, qctx):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(9), (2, 16),
+                                          0, cfg.vocab_size)}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", BackendFallbackWarning)
+        lg, _ = forward(qm.params, cfg, batch, qctx=qctx)
+    return np.asarray(lg)
+
+
+def test_effective_backend_kernels_actually_dispatches(setup,
+                                                       monkeypatch):
+    cfg, params, stats = setup
+    qm = _quantized(cfg, params, stats, "quamba-kernels")
+    assert qm.describe()["effective_backend"] == "kernels"
+    counts = _count_matmuls(monkeypatch)
+    _run_forward(cfg, qm, qm.qctx())
+    assert counts["int8_matmul"] > 0, counts
+
+
+def test_effective_backend_qdq_never_dispatches(setup, monkeypatch):
+    cfg, params, stats = setup
+    qm = _quantized(cfg, params, stats, "quamba")
+    assert qm.describe()["effective_backend"] == "qdq"
+    counts = _count_matmuls(monkeypatch)
+    _run_forward(cfg, qm, qm.qctx())
+    assert all(c == 0 for c in counts.values()), counts
+
+
+def test_fallback_spec_executes_on_qdq_despite_kernels_request(
+        setup, monkeypatch):
+    """quamba-w4a4 with backend="kernels": describe() reports qdq, and
+    the forward indeed dispatches zero kernel matmuls -- the report and
+    the execution can never drift apart."""
+    cfg, params, stats = setup
+    qm = _quantized(cfg, params, stats, "quamba-w4a4", backend="kernels")
+    d = qm.describe()
+    assert d["requested_backend"] == "kernels"
+    assert d["effective_backend"] == "qdq"
+    counts = _count_matmuls(monkeypatch)
+    reset_backend_fallback_warnings()
+    lg = _run_forward(cfg, qm, qm.qctx())
+    assert all(c == 0 for c in counts.values()), counts
+    # and the fallback numerics equal an explicit qdq request
+    np.testing.assert_array_equal(
+        lg, _run_forward(cfg, qm, qm.qctx(backend="qdq")))

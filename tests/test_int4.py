@@ -1,7 +1,10 @@
-"""W4A8 int4 path (PR 8): nibble pack/unpack round-trip, ``int4_matmul``
-parity against the qdq oracle across every family's matmul sites, the
+"""W4A8 int4 path (PR 8): nibble pack/unpack round-trip, the
 kernels-backend routing for ``quamba-w4a8``, the structured backend
-fallback warning, and pre-v2 (unpacked) artifact load compatibility."""
+fallback warning, and pre-v2 (unpacked) artifact load compatibility.
+
+The int4-matmul-vs-qdq and kernels-forward-vs-qdq parity checks that
+used to live here were consolidated into the single tolerance-pinned
+matrix in ``test_parity_matrix.py``."""
 import dataclasses
 import json
 import os
@@ -18,7 +21,8 @@ from repro.data import eval_batches
 from repro.kernels import ops as kops
 from repro.models import forward, init_params
 from repro.models.mamba import use_kernel_backend
-from repro.models.quantize import backend_fallback_reason, make_qctx
+from repro.models.quantize import (backend_fallback_reason, make_qctx,
+                                   reset_backend_fallback_warnings)
 from repro.quant.recipe import (BackendFallbackWarning, get_spec,
                                 pack_int4, quantize_weight, unpack_int4,
                                 uses_kernel_backend)
@@ -142,37 +146,8 @@ def test_int4_matmul_rejects_wrong_layout():
         kops.int4_matmul(qx, jnp.zeros((4, 3), jnp.int8), 1.0, 1.0, bk=3)
 
 
-def _packed_sites(tree, path=""):
-    """Yield (path, leaf) for every nibble-packed weight-site dict."""
-    if isinstance(tree, dict):
-        if "qw4" in tree:
-            yield path, tree
-        else:
-            for k, v in tree.items():
-                yield from _packed_sites(v, f"{path}/{k}")
-
-
-@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
-def test_int4_matmul_parity_vs_qdq_all_family_sites(family):
-    """Every packed matmul site of every family: the Pallas kernel on the
-    packed bytes matches the dequantize-then-fp-matmul oracle <= 1e-6."""
-    _, qm = _w4_artifact(FAMILY_ARCHS[family])
-    sites = list(_packed_sites(qm.qdata["qw"]))
-    assert sites, f"{family}: no packed matmul sites?"
-    rng = np.random.default_rng(4)
-    for path, lin in sites:
-        packed = np.asarray(lin["qw4"])
-        packed2d = jnp.asarray(packed.reshape((-1,) + packed.shape[-2:])[0])
-        s_w = float(np.asarray(lin["s_w"]).reshape(-1)[0])
-        kp, n = packed2d.shape
-        qx = jnp.asarray(rng.integers(-128, 128, (4, 2 * kp))
-                         .astype(np.int8))
-        s_x = 0.02
-        got = np.asarray(kops.int4_matmul(qx, packed2d, s_x, s_w))
-        dq = np.asarray(unpack_int4(packed2d)).astype(np.float32) * s_w
-        want = (np.asarray(qx).astype(np.float32) * s_x) @ dq
-        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
-                                   err_msg=f"{family}{path}")
+# (test_int4_matmul_parity_vs_qdq_all_family_sites moved to the
+# consolidated matrix: test_parity_matrix.py::test_matmul_parity_kernel_vs_qdq)
 
 
 # ---------------------------------------------------------------------------
@@ -225,18 +200,8 @@ def test_w4a8_spec_uses_kernel_backend():
     assert backend_fallback_reason(W4_KERNELS, None) is None
 
 
-def test_w4a8_kernels_matches_qdq_oracle_1e6(w4_kernels_setup):
-    cfg, qm = w4_kernels_setup
-    assert qm.describe()["effective_backend"] == "kernels"
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (2, 32),
-                                          0, cfg.vocab_size)}
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", BackendFallbackWarning)
-        lg_k, _ = forward(qm.params, cfg, batch, qctx=qm.qctx())
-        lg_q, _ = forward(qm.params, cfg, batch,
-                          qctx=qm.qctx(backend="qdq"))
-    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_q),
-                               rtol=1e-6, atol=1e-6)
+# (test_w4a8_kernels_matches_qdq_oracle_1e6 moved to the consolidated
+# matrix: test_parity_matrix.py::test_forward_parity_kernels_vs_qdq)
 
 
 def test_w4a8_routes_matmuls_to_int4_kernel(w4_kernels_setup, monkeypatch):
@@ -275,6 +240,9 @@ def test_w4a8_weight_bytes_halved(w4_kernels_setup):
 def test_fallback_warning_names_reason_and_is_structured(w4_kernels_setup):
     cfg, qm = w4_kernels_setup
     legacy = _unpack_qdata(qm.qdata)
+    # the warning is once-per-process-per-reason; earlier tests in this
+    # process may already have consumed the unpacked-4-bit reason
+    reset_backend_fallback_warnings()
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
         make_qctx(qm.spec, legacy)

@@ -129,34 +129,11 @@ def test_qdq_backend_never_touches_kernels(qsetup, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
-# parity: kernel backend vs the fake-quant numerics oracle
+# parity: the kernels-vs-qdq forward checks that used to live here
+# (quamba + static/out_had/in_per) moved to the consolidated matrix in
+# test_parity_matrix.py::test_forward_parity_kernels_vs_qdq, which
+# covers every kernels-eligible preset with one pinned tolerance table.
 # ---------------------------------------------------------------------------
-
-def test_kernel_backend_matches_qdq_oracle(qsetup):
-    cfg, qm = qsetup
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 32),
-                                          0, cfg.vocab_size)}
-    lg_qdq, _ = forward(qm.params, cfg, batch, qctx=qm.qctx(backend="qdq"))
-    lg_k, _ = forward(qm.params, cfg, batch, qctx=qm.qctx())
-    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_qdq),
-                               rtol=1e-4, atol=1e-4)
-
-
-@pytest.mark.parametrize("preset", ["static", "out_had", "in_per"])
-def test_kernel_backend_parity_other_static_presets(preset):
-    import dataclasses
-    cfg = scale_down(get_config("mamba-130m"), layers=2, width=64,
-                     vocab=128)
-    params = init_params(jax.random.PRNGKey(3), cfg)
-    calib = list(eval_batches(cfg.vocab_size, 2, 32, 2, seed=11))
-    spec = dataclasses.replace(get_spec(preset), backend="kernels")
-    qm = api.Quantizer(cfg, spec).calibrate(calib).quantize(params)
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (2, 16),
-                                          0, cfg.vocab_size)}
-    lg_qdq, _ = forward(qm.params, cfg, batch, qctx=qm.qctx(backend="qdq"))
-    lg_k, _ = forward(qm.params, cfg, batch, qctx=qm.qctx())
-    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_qdq),
-                               rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------

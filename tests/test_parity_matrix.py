@@ -1,0 +1,172 @@
+"""The qdq <-> kernels parity matrix (PR 10, satellite of the QAT PR).
+
+One parametrized matrix replaces the ad-hoc parity checks that used to
+be scattered across ``test_kernel_backend.py`` (full-forward kernels vs
+oracle for quamba/static/out_had/in_per) and ``test_int4.py`` (the
+int4-matmul site sweep and the w4a8 forward check):
+
+* **forward rows** -- the mamba family is the only one with a kernels
+  execution path, so the full-forward slab is mamba x every
+  kernels-eligible preset: logits of ``backend="kernels"`` vs the same
+  artifact's qdq oracle.
+* **matmul rows** -- every OTHER family still exercises the kernels via
+  its nibble-packed matmul sites: for each family x w4 preset, every
+  packed site's ``int4_matmul`` output vs the dequantize-then-fp-matmul
+  oracle.
+
+Every cell reads its tolerance from the single ``TOL`` table below --
+a parity regression means editing that table in review, not hunting a
+constant through the suite.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.configs import get_config, scale_down
+from repro.data import eval_batches
+from repro.kernels import ops as kops
+from repro.models import forward, init_params
+from repro.quant.recipe import get_spec, unpack_int4, uses_kernel_backend
+
+jax.config.update("jax_platform_name", "cpu")
+
+FAMILY_ARCHS = {
+    "mamba": "mamba-130m",
+    "dense": "llama3-8b",
+    "moe": "qwen3-moe-30b-a3b",
+    "hybrid": "zamba2-1.2b",
+    "ssm": "xlstm-1.3b",
+    "audio": "whisper-medium",
+    "vlm": "paligemma-3b",
+}
+
+# every preset the kernels backend can execute end to end (static
+# scales, int8 activations, per-tensor weights)
+FORWARD_PRESETS = ("quamba", "static", "in_per", "out_had", "smoothquant",
+                   "quamba-w4a8", "quamba-w4a8-se")
+MATMUL_PRESETS = ("quamba-w4a8", "quamba-w4a8-se")
+
+# THE tolerance table: (row kind, preset) -> (rtol, atol).  The int8
+# presets run activations through rmsnorm_quant/hadamard_quant requant
+# chains whose fp-simulation differs at ~1e-5; the w4 presets' matmul
+# path is a pure integer dot, so those cells pin two orders tighter.
+TOL = {
+    ("forward", "quamba"): (1e-4, 1e-4),
+    ("forward", "static"): (1e-4, 1e-4),
+    ("forward", "in_per"): (1e-4, 1e-4),
+    ("forward", "out_had"): (1e-4, 1e-4),
+    ("forward", "smoothquant"): (1e-4, 1e-4),
+    ("forward", "quamba-w4a8"): (1e-6, 1e-6),
+    ("forward", "quamba-w4a8-se"): (1e-6, 1e-6),
+    ("matmul", "quamba-w4a8"): (1e-6, 1e-6),
+    ("matmul", "quamba-w4a8-se"): (1e-6, 1e-6),
+}
+
+
+def _calib_batches(cfg, b=2, l=32, n=2, seed=7):
+    if cfg.family == "audio":
+        key = jax.random.PRNGKey(seed)
+        return [{"frames": jax.random.normal(key, (b, 24, cfg.d_model)),
+                 "tokens": jax.random.randint(key, (b, 8), 0,
+                                              cfg.vocab_size)}
+                for _ in range(n)]
+    if cfg.family == "vlm":
+        key = jax.random.PRNGKey(seed)
+        return [{"patches": jax.random.normal(
+                     key, (b, cfg.prefix_len, cfg.d_model)),
+                 "tokens": jax.random.randint(key, (b, l - cfg.prefix_len),
+                                              0, cfg.vocab_size)}
+                for _ in range(n)]
+    return list(eval_batches(cfg.vocab_size, b, l, n, seed=seed))
+
+
+_SETUP_CACHE = {}
+
+
+def _family_setup(family):
+    """(cfg, params, stats): one calibration pass per family, shared by
+    every preset column of that family's row."""
+    if family not in _SETUP_CACHE:
+        cfg = scale_down(get_config(FAMILY_ARCHS[family]), layers=2,
+                         width=64, vocab=128)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        stats = api.calibration_stats(cfg, params, _calib_batches(cfg))
+        _SETUP_CACHE[family] = (cfg, params, stats)
+    return _SETUP_CACHE[family]
+
+
+def _artifact(family, preset, backend=None):
+    cfg, params, stats = _family_setup(family)
+    spec = get_spec(preset)
+    if backend is not None:
+        spec = dataclasses.replace(spec, backend=backend)
+    return cfg, api.Quantizer(cfg, spec).with_stats(stats) \
+        .quantize(params)
+
+
+# ---------------------------------------------------------------------------
+# forward slab: mamba x kernels-eligible presets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", FORWARD_PRESETS)
+def test_forward_parity_kernels_vs_qdq(preset):
+    cfg, qm = _artifact("mamba", preset, backend="kernels")
+    assert uses_kernel_backend(qm.spec), preset
+    assert qm.describe()["effective_backend"] == "kernels"
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 32),
+                                          0, cfg.vocab_size)}
+    lg_q, _ = forward(qm.params, cfg, batch, qctx=qm.qctx(backend="qdq"))
+    lg_k, _ = forward(qm.params, cfg, batch, qctx=qm.qctx())
+    rtol, atol = TOL[("forward", preset)]
+    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_q),
+                               rtol=rtol, atol=atol,
+                               err_msg=f"forward x {preset}")
+
+
+# ---------------------------------------------------------------------------
+# matmul slab: every family x w4 presets, every packed site
+# ---------------------------------------------------------------------------
+
+def _packed_sites(tree, path=""):
+    """Yield (path, leaf) for every nibble-packed weight-site dict."""
+    if isinstance(tree, dict):
+        if "qw4" in tree:
+            yield path, tree
+        else:
+            for k, v in tree.items():
+                yield from _packed_sites(v, f"{path}/{k}")
+
+
+@pytest.mark.parametrize("preset", MATMUL_PRESETS)
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_matmul_parity_kernel_vs_qdq(family, preset):
+    _, qm = _artifact(family, preset)
+    sites = list(_packed_sites(qm.qdata["qw"]))
+    assert sites, f"{family} x {preset}: no packed matmul sites?"
+    rtol, atol = TOL[("matmul", preset)]
+    rng = np.random.default_rng(4)
+    for path, lin in sites:
+        packed = np.asarray(lin["qw4"])
+        packed2d = jnp.asarray(packed.reshape((-1,) + packed.shape[-2:])[0])
+        s_w = float(np.asarray(lin["s_w"]).reshape(-1)[0])
+        kp, n = packed2d.shape
+        qx = jnp.asarray(rng.integers(-128, 128, (4, 2 * kp))
+                         .astype(np.int8))
+        s_x = 0.02
+        got = np.asarray(kops.int4_matmul(qx, packed2d, s_x, s_w))
+        dq = np.asarray(unpack_int4(packed2d)).astype(np.float32) * s_w
+        want = (np.asarray(qx).astype(np.float32) * s_x) @ dq
+        np.testing.assert_allclose(got, want, rtol=rtol, atol=atol,
+                                   err_msg=f"{family}{path} x {preset}")
+
+
+def test_tolerance_table_covers_exactly_the_matrix():
+    """No orphan rows: every cell in the matrix has a pinned tolerance
+    and every pinned tolerance corresponds to a cell that runs."""
+    want = {("forward", p) for p in FORWARD_PRESETS} \
+        | {("matmul", p) for p in MATMUL_PRESETS}
+    assert set(TOL) == want

@@ -1,0 +1,107 @@
+"""Property-based tests (PR 10): int4 packing round-trips and the
+Quamba-SE soft-edge scale blend under randomized shapes and knobs.
+
+Runs under real ``hypothesis`` when installed; otherwise the
+deterministic fallback in ``conftest.py`` replays each strategy's
+boundary values plus seeded random draws, so the properties execute
+everywhere with a fixed sample.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.quant.quantizers import percentile_scale, symmetric_scale
+from repro.quant.recipe import (get_spec, pack_int4, quantize_weight,
+                                soft_edge_blend, unpack_int4)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# pack_int4 / unpack_int4
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 67), st.integers(1, 9), st.booleans(),
+       st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_round_trip(k, n, two_d, seed):
+    """Any int4 tensor (1-D or 2-D, odd or even K) survives the nibble
+    pack bit-exactly, and the packed carrier is half the rows."""
+    rng = np.random.default_rng(seed)
+    shape = (k, n) if two_d else (k,)
+    q = jnp.asarray(rng.integers(-8, 8, size=shape).astype(np.int8))
+    packed = pack_int4(q)
+    assert packed.dtype == jnp.int8
+    assert packed.shape == (-(-k // 2),) + shape[1:]
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed, k)),
+                                  np.asarray(q))
+    # unpadded unpack keeps the zero row of an odd K (harmless for a
+    # matmul: the matching activation column is absent)
+    full = np.asarray(unpack_int4(packed))
+    assert full.shape[0] == 2 * (-(-k // 2))
+    if k % 2:
+        np.testing.assert_array_equal(full[-1],
+                                      np.zeros_like(full[-1]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 65), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_quantize_weight_packed_equals_pinned_storage(k, n, seed):
+    """The nibble-packed "auto" storage and the one-value-per-byte
+    "int8" storage of the same w4 weight hold identical grid values."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    spec = get_spec("quamba-w4a8")
+    packed = quantize_weight(w, spec)
+    pinned = quantize_weight(w, spec, storage="int8")
+    assert set(packed) == {"qw4", "s_w"}
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(packed["qw4"], k)),
+        np.asarray(pinned["qw"]))
+    np.testing.assert_array_equal(np.asarray(packed["s_w"]),
+                                  np.asarray(pinned["s_w"]))
+
+
+# ---------------------------------------------------------------------------
+# soft-edge blend
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(1e-6, 10.0), st.floats(0.0, 10.0))
+def test_soft_edge_blend_between_endpoints(lam, s_pct, spread):
+    """The blend lands between the percentile clip and the abs-max
+    scale for any lambda, hits the endpoints exactly at 0 and 1, and is
+    monotone in lambda."""
+    s_amax = s_pct + spread
+    s = float(soft_edge_blend(jnp.float32(s_pct), jnp.float32(s_amax),
+                              lam))
+    eps = 1e-6 * (1.0 + s_amax)
+    assert s_pct - eps <= s <= s_amax + eps
+    if lam == 0.0:
+        np.testing.assert_allclose(s, s_pct, rtol=1e-6)
+    if lam == 1.0:
+        np.testing.assert_allclose(s, s_amax, rtol=1e-6)
+    s_hi = float(soft_edge_blend(jnp.float32(s_pct),
+                                 jnp.float32(s_amax),
+                                 min(1.0, lam + 0.125)))
+    assert s_hi >= s - eps
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(90.0, 100.0), st.integers(0, 2 ** 31 - 1))
+def test_soft_edge_blend_of_percentile_scales(p, seed):
+    """With real tensors: the percentile scale never exceeds the
+    abs-max scale (even at extreme p), so the blend is sandwiched --
+    exactly the invariant the Quamba-SE preset relies on."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=2048).astype(np.float32))
+    s_pct = float(percentile_scale(x, p=p))
+    s_amax = float(symmetric_scale(x))
+    assert s_pct <= s_amax + 1e-8
+    for lam in (0.25, 0.5, 0.75):
+        s = float(soft_edge_blend(jnp.float32(s_pct),
+                                  jnp.float32(s_amax), lam))
+        assert s_pct - 1e-8 <= s <= s_amax + 1e-8
